@@ -1,0 +1,30 @@
+"""Shared benchmark utilities: timing + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows. `derived` carries
+the figure-specific quantity (speedup vs baseline, count, bytes, ...).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_call(fn, *args, warmup: int = 1, reps: int = 3, **kwargs) -> float:
+    """Median wall-time per call in microseconds (blocks on async results)."""
+    for _ in range(warmup):
+        r = fn(*args, **kwargs)
+        jax.block_until_ready(r)
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        r = fn(*args, **kwargs)
+        jax.block_until_ready(r)
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,48 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. ``REPRO_BENCH_QUICK=1`` runs
+reduced sizes. Roofline numbers (§Roofline) come from the dry-run
+(``python -m repro.launch.dryrun``), not from here — this file is the
+paper-experiment reproduction on CPU.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+from .common import emit
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+    from . import (
+        fig8_reachability,
+        fig9_selectivity,
+        fig10_triangles,
+        fig11_sssp,
+        table1_construction,
+    )
+
+    mods = [
+        ("fig8", fig8_reachability),
+        ("fig9", fig9_selectivity),
+        ("fig10", fig10_triangles),
+        ("fig11", fig11_sssp),
+        ("table1", table1_construction),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in mods:
+        try:
+            emit(mod.run(quick=quick))
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

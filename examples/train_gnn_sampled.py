@@ -1,0 +1,70 @@
+"""Sampled-minibatch GNN training: the minibatch_lg pipeline end to end.
+
+A 20k-node power-law graph, the fanout neighbor sampler (GraphSAGE-style,
+the engine's CSR as the sampling index), and GatedGCN training on the
+sampled blocks — the engine's graph view and the GNN share one substrate.
+
+    PYTHONPATH=src python examples/train_gnn_sampled.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphview import build_graph_view
+from repro.core.table import Table
+from repro.data.sampler import NeighborSampler
+from repro.data.synthetic import graph_tables, random_graph
+from repro.models.gnn import gatedgcn
+from repro.train.optimizer import AdamWConfig, init_state
+from repro.train.trainer import build_train_step
+
+
+def main():
+    V, E = 20_000, 120_000
+    g = random_graph(V, E, kind="powerlaw", seed=3)
+    vd, ed = graph_tables(g)
+    vt, et = Table.create("V", vd), Table.create("E", ed)
+    view = build_graph_view("G", vt, et, v_id="vid", e_src="src", e_dst="dst")
+    print(f"graph view: {V} vertices, {E} edges, avg fan-out "
+          f"{float(view.avg_fan_out):.1f}")
+
+    # the paper's traversal index doubles as the sampling index
+    sampler = NeighborSampler(np.asarray(view.out_offsets),
+                              np.asarray(view.out_dst), seed=0)
+
+    d_feat, n_classes, fanouts, batch = 32, 8, [10, 5], 64
+    feats = np.random.default_rng(0).normal(size=(V, d_feat)).astype(np.float32)
+    labels = (feats @ np.random.default_rng(1).normal(size=(d_feat,)) > 0)
+
+    cfg = gatedgcn.GatedGCNConfig(n_layers=4, d_hidden=64, d_in=d_feat,
+                                  n_classes=n_classes)
+    params = gatedgcn.init_params(jax.random.PRNGKey(0), cfg)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=200,
+                       weight_decay=0.0)
+    opt_state = init_state(params, ocfg)
+    step = jax.jit(build_train_step(
+        lambda p, b: gatedgcn.loss_fn(p, b, cfg), ocfg))
+
+    rng = np.random.default_rng(7)
+    t0 = time.perf_counter()
+    for it in range(100):
+        seeds = rng.integers(0, V, batch)
+        blk = sampler.sample(seeds, fanouts)
+        b = {
+            "x": jnp.asarray(feats[blk.nodes]),
+            "edge_attr": jnp.ones((len(blk.src), 1), jnp.float32),
+            "src": jnp.asarray(blk.src), "dst": jnp.asarray(blk.dst),
+            "labels": jnp.asarray(labels[blk.nodes].astype(np.int32)),
+            "label_mask": jnp.zeros(len(blk.nodes)).at[blk.seeds].set(1.0),
+        }
+        params, opt_state, m = step(params, opt_state, b)
+        if it % 20 == 0:
+            print(f"  iter {it:3d}  loss {float(m['loss']):.4f}")
+    print(f"100 sampled steps in {time.perf_counter()-t0:.1f}s "
+          f"(block: {len(blk.nodes)} nodes / {len(blk.src)} edges)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Embed the generated dry-run/roofline tables into EXPERIMENTS.md."""
+import io, os, sys, contextlib
+sys.path.insert(0, "src")
+from repro.roofline import report
+
+buf = io.StringIO()
+with contextlib.redirect_stdout(buf):
+    sys.argv = ["report"]
+    report.main()
+tables = buf.getvalue()
+
+with open("EXPERIMENTS.md") as f:
+    md = f.read()
+
+marker = "\n---\n\n## Generated tables\n"
+if marker in md:
+    md = md.split(marker)[0]
+md += marker + "\n" + tables + "\n"
+with open("EXPERIMENTS.md", "w") as f:
+    f.write(md)
+with open("results/report.md", "w") as f:
+    f.write(tables)
+print("EXPERIMENTS.md updated;", len(tables.splitlines()), "table lines")

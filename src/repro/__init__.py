@@ -1,0 +1,6 @@
+"""GRFusion-JAX: native graph processing inside a relational engine, on JAX.
+
+Reproduction + TPU-native extension of "Empowering In-Memory Relational
+Database Engines with Native Graph Processing" (Hassan et al., 2017).
+"""
+__version__ = "1.0.0"

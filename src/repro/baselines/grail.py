@@ -1,0 +1,81 @@
+"""Grail-style baseline: vertex-centric SSSP in procedural relational form
+(paper Appendix D; Grail = Fan, Raj, Patel, CIDR'15).
+
+Grail translates graph queries into iterative SQL over a `dist(v, d)` table:
+each superstep joins `dist` with the edge relation, aggregates candidate
+distances per destination (GROUP BY dst MIN), and merges. We keep that exact
+relational shape — join + group-min + merge per superstep over relational
+tables — against which the engine's native Bellman-Ford frontier (one masked
+scatter-min sweep, no join/group machinery) is compared in Fig-11 form.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import operators as O
+from repro.core.table import Table
+
+
+@functools.partial(jax.jit, static_argnames=("src_col", "dst_col", "weight_col", "n_vertices", "n_iters", "capacity"))
+def grail_sssp(
+    edge_table: Table,
+    src_col: str,
+    dst_col: str,
+    weight_col: str,
+    source: jnp.ndarray,  # int32 scalar vertex id (== position)
+    sel_mask: jnp.ndarray | None = None,
+    *,
+    n_vertices: int,
+    n_iters: int = 16,
+    capacity: int = 1 << 16,
+):
+    """Returns dist f32 [n_vertices] (inf = unreachable)."""
+    eb = O.table_scan(edge_table)
+    valid = eb.valid if sel_mask is None else (eb.valid & sel_mask)
+    edges = O.RelBatch(
+        cols={
+            "src": eb.cols[src_col].astype(jnp.int32),
+            "dst": eb.cols[dst_col].astype(jnp.int32),
+            "w": eb.cols[weight_col].astype(jnp.float32),
+        },
+        valid=valid,
+    )
+
+    INF = jnp.float32(jnp.inf)
+    dist_tab = O.RelBatch(
+        cols={
+            "v": jnp.arange(n_vertices, dtype=jnp.int32),
+            "d": jnp.full((n_vertices,), INF).at[source].set(0.0),
+        },
+        valid=jnp.ones((n_vertices,), jnp.bool_),
+    )
+
+    def body(_, dist_tab):
+        # candidates(dst, d+w) = dist JOIN edges ON v = src
+        joined, _ = O.join(dist_tab, edges, "v", "src", capacity=capacity)
+        cand = O.RelBatch(
+            cols={
+                "v": joined.cols["dst"],
+                "nd": joined.cols["d"] + joined.cols["w"],
+            },
+            valid=joined.valid & jnp.isfinite(joined.cols["d"]),
+        )
+        mins = O.group_by(cand, "v", {"nd": ("min", "nd")})
+        # merge: dist = min(dist, mins) — relational UPDATE ... FROM
+        upd, _ = O.join(dist_tab, mins, "v", "v", capacity=n_vertices)
+        nd = jnp.where(
+            upd.valid & jnp.isfinite(upd.cols["nd"]),
+            jnp.minimum(upd.cols["d"], upd.cols["nd"]),
+            upd.cols["d"],
+        )
+        # scatter back to the base dist table keyed by v
+        d2 = dist_tab.cols["d"].at[upd.cols["v"]].min(
+            jnp.where(upd.valid, nd, INF), mode="drop"
+        )
+        return dist_tab.replace(cols={"v": dist_tab.cols["v"], "d": d2})
+
+    dist_tab = jax.lax.fori_loop(0, n_iters, body, dist_tab)
+    return dist_tab.cols["d"]

@@ -1,0 +1,33 @@
+"""Architecture registry: ``--arch <id>`` resolution for launchers/tests.
+
+10 assigned architectures + the paper's own engine cell (grfusion).
+"""
+from __future__ import annotations
+
+import importlib
+
+_MODULES = {
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "grok-1-314b": "repro.configs.grok1_314b",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "gemma2-2b": "repro.configs.gemma2_2b",
+    "minicpm-2b": "repro.configs.minicpm_2b",
+    "dimenet": "repro.configs.dimenet",
+    "mace": "repro.configs.mace",
+    "schnet": "repro.configs.schnet",
+    "gatedgcn": "repro.configs.gatedgcn",
+    "fm": "repro.configs.fm",
+    "grfusion": "repro.configs.grfusion",
+}
+
+ASSIGNED = [k for k in _MODULES if k != "grfusion"]
+
+
+def get(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(_MODULES[arch_id]).MODULE
+
+
+def all_arch_ids(include_engine: bool = True):
+    return list(_MODULES) if include_engine else list(ASSIGNED)

@@ -1,0 +1,31 @@
+"""deepseek-v3-671b [arXiv:2412.19437]: 61L, d_model 7168, 128 heads (MLA),
+MoE 1 shared + 256 routed top-8 (expert d_ff 2048, first 3 layers dense),
+sigmoid router with aux-free bias, MTP, vocab 129280."""
+from repro.configs.lm_common import LMModule
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="deepseek-v3-671b",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128, d_head=128,
+    d_ff=18432,  # dense-prefix layers (paper's dense intermediate)
+    vocab=129280,
+    attn_kind="mla", q_lora=1536, kv_lora=512, qk_nope=128, qk_rope=64, v_head=128,
+    n_experts=256, top_k=8, n_shared=1, d_ff_expert=2048, first_dense=3,
+    router="deepseek_sigmoid", capacity_factor=1.25,
+    mtp=True, mtp_weight=0.3,
+    dtype="bfloat16", attn_impl="chunked", attn_chunk=1024, remat="full",
+)
+
+SMOKE = LMConfig(
+    name="deepseek-v3-smoke",
+    n_layers=4, d_model=64, n_heads=8, n_kv_heads=8, d_head=8,
+    d_ff=128, vocab=211,
+    attn_kind="mla", q_lora=32, kv_lora=16, qk_nope=8, qk_rope=8, v_head=8,
+    n_experts=8, top_k=2, n_shared=1, d_ff_expert=32, first_dense=1,
+    router="deepseek_sigmoid", mtp=True,
+)
+
+MODULE = LMModule(
+    "deepseek-v3-671b", FULL, SMOKE, long_ok=False,
+    opt_state_dtype="bfloat16", microbatches=1,
+)

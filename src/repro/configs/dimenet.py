@@ -1,0 +1,9 @@
+"""dimenet [arXiv:2003.03123]: n_blocks=6, d_hidden=128, n_bilinear=8,
+n_spherical=7, n_radial=6 (directional MP; triplet-gather regime)."""
+from repro.configs.gnn_common import GNNModule
+from repro.models.gnn import dimenet as M
+
+FULL = M.DimeNetConfig(n_blocks=6, d_hidden=128, n_bilinear=8, n_spherical=7, n_radial=6)
+SMOKE = M.DimeNetConfig(name="dimenet-smoke", n_blocks=2, d_hidden=32,
+                        n_bilinear=4, n_spherical=4, n_radial=4)
+MODULE = GNNModule("dimenet", M, FULL, SMOKE, kind="molecular")

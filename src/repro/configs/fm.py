@@ -1,0 +1,134 @@
+"""fm [Rendle ICDM'10]: 39 sparse fields, embed_dim 10, 2-way interactions
+via the sum-square trick. Shapes: train 65,536 / online 512 / bulk 262,144 /
+retrieval 1 query x 1,000,000 candidates (batched dot)."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as SH
+from repro.models import recsys as M
+from repro.train import optimizer as OPT
+from repro.train.trainer import build_train_step
+
+FULL = M.FMConfig(n_fields=39, embed_dim=10, vocab_per_field=100_000, item_fields=13)
+SMOKE = M.FMConfig(name="fm-smoke", n_fields=8, embed_dim=4, vocab_per_field=64, item_fields=3)
+
+SHAPES = {
+    "train_batch": {"kind": "train", "batch": 65_536},
+    "serve_p99": {"kind": "serve", "batch": 512},
+    "serve_bulk": {"kind": "serve", "batch": 262_144},
+    # physical candidate count pads 1,000,000 to the 512-device LCM
+    "retrieval_cand": {"kind": "retrieval", "batch": 1, "n_candidates": 1_000_448,
+                       "logical_candidates": 1_000_000},
+}
+
+
+class FMModule:
+    FAMILY = "recsys"
+    ARCH_ID = "fm"
+
+    def full_config(self, shape=None):
+        return FULL
+
+    def smoke_config(self):
+        return SMOKE
+
+    def dryrun_config(self, cfg, shape):
+        return cfg  # no scans to unroll
+
+    def shapes(self):
+        return dict(SHAPES)
+
+    def skip_reason(self, shape):
+        return None
+
+    def opt_config(self, cfg):
+        return OPT.AdamWConfig(lr=1e-3, schedule="cosine", warmup_steps=100,
+                               total_steps=50_000, weight_decay=1e-5)
+
+    def abstract_params(self, cfg):
+        return jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+
+    def abstract_state(self, cfg, shape: str | None = None):
+        p = self.abstract_params(cfg)
+        if shape is not None and SHAPES[shape]["kind"] != "train":
+            return {"params": p}
+        o = jax.eval_shape(lambda pp: OPT.init_state(pp, self.opt_config(cfg)), p)
+        return {"params": p, "opt_state": o}
+
+    def input_specs(self, shape: str, cfg=None) -> Dict:
+        cfg = cfg or FULL
+        m = SHAPES[shape]
+        B = m["batch"]
+        if m["kind"] == "train":
+            return {
+                "sparse_ids": jax.ShapeDtypeStruct((B, cfg.n_fields), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B,), jnp.float32),
+            }
+        if m["kind"] == "serve":
+            return {"sparse_ids": jax.ShapeDtypeStruct((B, cfg.n_fields), jnp.int32)}
+        return {
+            "user_ids": jax.ShapeDtypeStruct((1, cfg.n_fields), jnp.int32),
+            "cand_ids": jax.ShapeDtypeStruct(
+                (m["n_candidates"], cfg.item_fields), jnp.int32
+            ),
+        }
+
+    def build_step(self, shape: str, cfg=None):
+        cfg = cfg or FULL
+        kind = SHAPES[shape]["kind"]
+        if kind == "train":
+            inner = build_train_step(lambda p, b: M.loss_fn(p, b, cfg), self.opt_config(cfg))
+
+            def train_step(state, batch):
+                p, o, met = inner(state["params"], state["opt_state"], batch)
+                return {"params": p, "opt_state": o}, met
+
+            return train_step
+        if kind == "serve":
+            return lambda state, batch: M.scores(state["params"], batch["sparse_ids"], cfg)
+        return lambda state, batch: M.retrieval_scores(
+            state["params"], batch["user_ids"], batch["cand_ids"], cfg
+        )
+
+    def param_specs(self, cfg, mesh_axes):
+        return SH.spec_tree(self.abstract_params(cfg), SH.fm_param_rules(mesh_axes))
+
+    def state_specs(self, cfg, mesh_axes, shape: str | None = None):
+        ps = self.param_specs(cfg, mesh_axes)
+        if shape is not None and SHAPES[shape]["kind"] != "train":
+            return {"params": ps}
+        return {"params": ps, "opt_state": {"step": P(), "m": ps, "v": ps}}
+
+    def batch_specs(self, shape: str, cfg, mesh_axes):
+        b = ("pod", "data") if "pod" in mesh_axes else ("data",)
+        kind = SHAPES[shape]["kind"]
+        if kind == "retrieval":
+            return {"user_ids": P(), "cand_ids": P(b + ("model",), None)}
+        specs = {"sparse_ids": P(b, None)}
+        if kind == "train":
+            specs["labels"] = P(b)
+        return specs
+
+    def smoke_batch(self, rng):
+        ids = jax.random.randint(rng, (32, SMOKE.n_fields), 0, SMOKE.vocab_per_field)
+        return {"sparse_ids": ids, "labels": jnp.ones((32,), jnp.float32)}
+
+    def run_smoke(self, rng):
+        params = M.init_params(rng, SMOKE)
+        b = self.smoke_batch(rng)
+        loss = M.loss_fn(params, b, SMOKE)
+        assert not bool(jnp.isnan(loss))
+        s = M.scores(params, b["sparse_ids"], SMOKE)
+        assert s.shape == (32,) and not bool(jnp.isnan(s).any())
+        cand = jax.random.randint(rng, (100, SMOKE.item_fields), 0, SMOKE.vocab_per_field)
+        r = M.retrieval_scores(params, b["sparse_ids"][:1], cand, SMOKE)
+        assert r.shape == (100,) and not bool(jnp.isnan(r).any())
+        return float(loss)
+
+
+MODULE = FMModule()

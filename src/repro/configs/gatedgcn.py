@@ -1,0 +1,9 @@
+"""gatedgcn [arXiv:2003.00982]: 16 layers, d_hidden=70, gated-edge
+aggregation (SpMM/SDDMM regime); d_in tracks the shape's d_feat."""
+from repro.configs.gnn_common import GNNModule
+from repro.models.gnn import gatedgcn as M
+
+FULL = M.GatedGCNConfig(n_layers=16, d_hidden=70, d_in=1433, n_classes=47)
+SMOKE = M.GatedGCNConfig(name="gatedgcn-smoke", n_layers=3, d_hidden=16,
+                         d_in=8, n_classes=4)
+MODULE = GNNModule("gatedgcn", M, FULL, SMOKE, kind="feature")

@@ -1,0 +1,28 @@
+"""gemma2-2b [arXiv:2408.00118]: 26L, d_model 2304, 8 heads GQA(kv=4),
+d_ff 9216 (GeGLU), vocab 256000; local(4096)/global alternating attention,
+attn softcap 50, final softcap 30, sandwich norms, tied + scaled embeddings.
+
+The local/global hybrid makes this the one LM arch that runs long_500k
+(local half is window-capped; decode is cache-linear)."""
+from repro.configs.lm_common import LMModule
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="gemma2-2b",
+    n_layers=26, d_model=2304, n_heads=8, n_kv_heads=4, d_head=256,
+    d_ff=9216, vocab=256000, act="gelu",
+    window=4096, local_global=True,
+    attn_softcap=50.0, final_softcap=30.0, post_norms=True,
+    tie_embeddings=True, emb_scale=True,
+    dtype="bfloat16", attn_impl="chunked", attn_chunk=1024, remat="full",
+)
+
+SMOKE = LMConfig(
+    name="gemma2-smoke",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=2, d_head=16,
+    d_ff=128, vocab=173, act="gelu",
+    window=8, local_global=True, attn_softcap=50.0, final_softcap=30.0,
+    post_norms=True, tie_embeddings=True, emb_scale=True,
+)
+
+MODULE = LMModule("gemma2-2b", FULL, SMOKE, long_ok=True)

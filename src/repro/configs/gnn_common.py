@@ -1,0 +1,195 @@
+"""Shared machinery for the GNN-family architecture configs.
+
+Assigned shapes (all training steps):
+  full_graph_sm  N=2,708   E=10,556      d_feat=1,433  (cora-like full batch)
+  minibatch_lg   sampled block: 1,024 seeds, fanout 15-10 over a
+                 232,965-node/114.6M-edge graph -> fixed block shapes from
+                 data.sampler.expected_block_shape
+  ogb_products   N=2,449,029  E=61,859,140  d_feat=100  (full-batch-large)
+  molecule       128 graphs x 30 nodes / 64 edges (disjoint union)
+
+Molecular archs (schnet/dimenet/mace) consume positions+species; the
+feature arch (gatedgcn) consumes d_feat node features. DimeNet additionally
+takes padded triplet index lists (T = 6E cap).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.data.sampler import expected_block_shape
+from repro.train import optimizer as OPT
+from repro.train.trainer import build_train_step
+
+MB_NODES, MB_EDGES = expected_block_shape(1024, [15, 10])
+
+
+def _pad512(x: int) -> int:
+    """Physical leading dims pad to the 512-device LCM; models mask the pad
+    entries (src/dst = -1, label_mask = 0), so the logical cell keeps the
+    assigned size."""
+    return -(-x // 512) * 512
+
+
+SHAPES = {
+    "full_graph_sm": {"kind": "train", "n": _pad512(2708), "e": _pad512(10556),
+                      "d": 1433, "g": 1, "logical": (2708, 10556)},
+    "minibatch_lg": {"kind": "train", "n": _pad512(MB_NODES), "e": _pad512(MB_EDGES),
+                     "d": 256, "g": 1, "logical": (MB_NODES, MB_EDGES)},
+    "ogb_products": {"kind": "train", "n": _pad512(2_449_029), "e": _pad512(61_859_140),
+                     "d": 100, "g": 1, "logical": (2_449_029, 61_859_140)},
+    "molecule": {"kind": "train", "n": _pad512(30 * 128), "e": _pad512(64 * 128),
+                 "d": 16, "g": 128, "logical": (30 * 128, 64 * 128)},
+}
+
+
+class GNNModule:
+    FAMILY = "gnn"
+
+    def __init__(self, arch_id, model, full_cfg, smoke_cfg, *, kind: str,
+                 triplet_factor: int = 6):
+        self.ARCH_ID = arch_id
+        self.model = model  # module with init_params/forward/loss_fn
+        self._full = full_cfg
+        self._smoke = smoke_cfg
+        self.kind = kind  # 'molecular' | 'feature'
+        self.triplet_factor = triplet_factor
+
+    def full_config(self, shape: str | None = None):
+        cfg = self._full
+        if self.kind == "feature" and shape is not None:
+            cfg = dataclasses.replace(cfg, d_in=SHAPES[shape]["d"])
+        return cfg
+
+    def smoke_config(self):
+        return self._smoke
+
+    def dryrun_config(self, cfg, shape):
+        import dataclasses
+
+        return dataclasses.replace(cfg, scan_unroll=True)
+
+    def shapes(self):
+        return dict(SHAPES)
+
+    def skip_reason(self, shape):
+        return None
+
+    def opt_config(self, cfg):
+        return OPT.AdamWConfig(lr=1e-3, schedule="cosine", warmup_steps=100,
+                               total_steps=10_000, weight_decay=0.0)
+
+    def abstract_params(self, cfg):
+        return jax.eval_shape(lambda: self.model.init_params(jax.random.PRNGKey(0), cfg))
+
+    def abstract_state(self, cfg, shape: str | None = None):
+        p = self.abstract_params(cfg)
+        o = jax.eval_shape(lambda pp: OPT.init_state(pp, self.opt_config(cfg)), p)
+        return {"params": p, "opt_state": o}
+
+    def input_specs(self, shape: str, cfg=None) -> Dict:
+        m = SHAPES[shape]
+        N, E, G = m["n"], m["e"], m["g"]
+        f32, i32 = jnp.float32, jnp.int32
+        if self.kind == "molecular":
+            specs = {
+                "positions": jax.ShapeDtypeStruct((N, 3), f32),
+                "species": jax.ShapeDtypeStruct((N,), i32),
+                "src": jax.ShapeDtypeStruct((E,), i32),
+                "dst": jax.ShapeDtypeStruct((E,), i32),
+                "graph_id": jax.ShapeDtypeStruct((N,), i32),
+                "energy": jax.ShapeDtypeStruct((G,), f32),
+            }
+            if self.ARCH_ID.startswith("dimenet"):
+                T = self.triplet_factor * E
+                specs["t_kj"] = jax.ShapeDtypeStruct((T,), i32)
+                specs["t_ji"] = jax.ShapeDtypeStruct((T,), i32)
+            return specs
+        return {
+            "x": jax.ShapeDtypeStruct((N, m["d"]), f32),
+            "edge_attr": jax.ShapeDtypeStruct((E, 1), f32),
+            "src": jax.ShapeDtypeStruct((E,), i32),
+            "dst": jax.ShapeDtypeStruct((E,), i32),
+            "labels": jax.ShapeDtypeStruct((N,), i32),
+            "label_mask": jax.ShapeDtypeStruct((N,), f32),
+        }
+
+    def build_step(self, shape: str, cfg=None):
+        cfg = cfg or self.full_config(shape)
+        n_graphs = SHAPES[shape]["g"]
+        model = self.model
+
+        def loss(p, b):
+            b = dict(b)
+            b["n_graphs"] = n_graphs  # static
+            return model.loss_fn(p, b, cfg)
+
+        inner = build_train_step(loss, self.opt_config(cfg))
+
+        def train_step(state, batch):
+            p, o, m = inner(state["params"], state["opt_state"], batch)
+            return {"params": p, "opt_state": o}, m
+
+        return train_step
+
+    # ---------------------------------------------------------- shardings
+    def param_specs(self, cfg, mesh_axes):
+        return jax.tree_util.tree_map(lambda _: P(), self.abstract_params(cfg))
+
+    def state_specs(self, cfg, mesh_axes, shape: str | None = None):
+        ps = self.param_specs(cfg, mesh_axes)
+        return {"params": ps, "opt_state": {"step": P(), "m": ps, "v": ps}}
+
+    def batch_specs(self, shape: str, cfg, mesh_axes):
+        flat = ("pod", "data", "model") if "pod" in mesh_axes else ("data", "model")
+        specs = {}
+        for k, v in self.input_specs(shape, cfg).items():
+            if k in ("energy",):
+                specs[k] = P()
+            elif v.ndim == 1:
+                specs[k] = P(flat)
+            else:
+                specs[k] = P(flat, None)
+        return specs
+
+    # -------------------------------------------------------------- smoke
+    def smoke_batch(self, rng):
+        from repro.data.synthetic import point_cloud_graph
+        from repro.models.gnn.common import build_triplets_host
+
+        if self.kind == "molecular":
+            pos, spec, src, dst = point_cloud_graph(24, seed=3)
+            b = {
+                "positions": jnp.asarray(pos), "species": jnp.asarray(spec),
+                "src": jnp.asarray(src), "dst": jnp.asarray(dst),
+                "graph_id": jnp.zeros(24, jnp.int32), "n_graphs": 1,
+                "energy": jnp.asarray([0.5]),
+            }
+            if self.ARCH_ID.startswith("dimenet"):
+                kj, ji = build_triplets_host(src, dst, max_triplets=4096)
+                b["t_kj"], b["t_ji"] = jnp.asarray(kj), jnp.asarray(ji)
+            return b
+        n, e = 40, 160
+        rng_np = np.random.default_rng(5)
+        return {
+            "x": jnp.asarray(rng_np.normal(size=(n, self._smoke.d_in)).astype(np.float32)),
+            "edge_attr": jnp.ones((e, 1), jnp.float32),
+            "src": jnp.asarray(rng_np.integers(0, n, e).astype(np.int32)),
+            "dst": jnp.asarray(rng_np.integers(0, n, e).astype(np.int32)),
+            "labels": jnp.asarray(rng_np.integers(0, self._smoke.n_classes, n).astype(np.int32)),
+        }
+
+    def run_smoke(self, rng):
+        cfg = self._smoke
+        params = self.model.init_params(rng, cfg)
+        batch = self.smoke_batch(rng)
+        loss = self.model.loss_fn(params, batch, cfg)
+        assert not bool(jnp.isnan(loss)), float(loss)
+        out = self.model.forward(params, batch, cfg)
+        assert not bool(jnp.isnan(out).any())
+        return float(loss)

@@ -1,0 +1,25 @@
+"""grok-1-314b [hf:xai-org/grok-1]: 64L, d_model 6144, 48 heads GQA(kv=8),
+MoE 8 experts top-2 (expert d_ff 32768), vocab 131072."""
+from repro.configs.lm_common import LMModule
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="grok-1-314b",
+    n_layers=64, d_model=6144, n_heads=48, n_kv_heads=8, d_head=128,
+    d_ff=32768, vocab=131072,
+    n_experts=8, top_k=2, d_ff_expert=32768, first_dense=0,
+    router="softmax", capacity_factor=1.25,
+    dtype="bfloat16", attn_impl="chunked", attn_chunk=1024, remat="full",
+)
+
+SMOKE = LMConfig(
+    name="grok-1-smoke",
+    n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+    d_ff=128, vocab=307,
+    n_experts=4, top_k=2, d_ff_expert=64, first_dense=0, router="softmax",
+)
+
+MODULE = LMModule(
+    "grok-1-314b", FULL, SMOKE, long_ok=False,
+    opt_state_dtype="bfloat16",
+)

@@ -1,0 +1,196 @@
+"""Shared machinery for the LM-family architecture configs.
+
+Every LM arch exposes the four assigned shapes:
+  train_4k     train_step   tokens [256, 4096]
+  prefill_32k  prefill_step tokens [32, 32768]
+  decode_32k   decode_step  one token, KV cache T=32768, batch 128
+  long_500k    decode_step  T=524288, batch 1  (hybrid/sub-quadratic archs
+               only — pure full-attention archs skip it, see DESIGN.md §4)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import sharding as SH
+from repro.models import transformer as TF
+from repro.train import optimizer as OPT
+from repro.train.trainer import build_train_step
+
+SHAPES = {
+    "train_4k": {"kind": "train", "batch": 256, "seq": 4096},
+    "prefill_32k": {"kind": "prefill", "batch": 32, "seq": 32768},
+    "decode_32k": {"kind": "decode", "batch": 128, "seq": 32768},
+    "long_500k": {"kind": "decode", "batch": 1, "seq": 524288},
+}
+
+
+class LMModule:
+    FAMILY = "lm"
+
+    def __init__(self, arch_id: str, full_cfg: TF.LMConfig, smoke_cfg: TF.LMConfig,
+                 *, long_ok: bool = False, opt_state_dtype: str = "float32",
+                 microbatches: int = 1):
+        self.ARCH_ID = arch_id
+        self._full = full_cfg
+        self._smoke = smoke_cfg
+        self.long_ok = long_ok
+        self.opt_state_dtype = opt_state_dtype
+        self.microbatches = microbatches
+
+    # ------------------------------------------------------------- configs
+    def full_config(self):
+        return self._full
+
+    def smoke_config(self):
+        return self._smoke
+
+    def dryrun_config(self, cfg, shape):
+        """Roofline accounting variant: unroll layer/chunk scans so XLA's
+        cost analysis (which counts loop bodies once) sees every layer."""
+        import dataclasses
+
+        return dataclasses.replace(cfg, scan_unroll=True)
+
+    def shapes(self) -> Dict[str, dict]:
+        out = dict(SHAPES)
+        if not self.long_ok:
+            out.pop("long_500k")
+        return out
+
+    def skip_reason(self, shape: str):
+        if shape == "long_500k" and not self.long_ok:
+            return "pure full-attention arch: long_500k skipped per brief (DESIGN.md §4)"
+        return None
+
+    def opt_config(self, cfg):
+        sched = "wsd" if "minicpm" in self.ARCH_ID else "cosine"
+        return OPT.AdamWConfig(
+            lr=3e-4, state_dtype=self.opt_state_dtype, schedule=sched,
+            warmup_steps=2000, total_steps=100_000,
+        )
+
+    # ----------------------------------------------------------- abstracts
+    def abstract_params(self, cfg):
+        return jax.eval_shape(lambda: TF.init_params(jax.random.PRNGKey(0), cfg))
+
+    def abstract_state(self, cfg, shape: str | None = None):
+        p = self.abstract_params(cfg)
+        if shape is not None and SHAPES[shape]["kind"] != "train":
+            return {"params": p}  # serving cells carry no optimizer state
+        o = jax.eval_shape(lambda pp: OPT.init_state(pp, self.opt_config(cfg)), p)
+        return {"params": p, "opt_state": o}
+
+    def input_specs(self, shape: str, cfg=None) -> Dict:
+        cfg = cfg or self._full
+        meta = SHAPES[shape]
+        B, S = meta["batch"], meta["seq"]
+        if meta["kind"] == "train":
+            return {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+        if meta["kind"] == "prefill":
+            return {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+        cache = jax.eval_shape(lambda: TF.init_cache(cfg, B, S))
+        return {
+            "cache": cache,
+            "tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32),
+            "pos": jax.ShapeDtypeStruct((B,), jnp.int32),
+        }
+
+    # --------------------------------------------------------------- steps
+    def build_step(self, shape: str, cfg=None):
+        cfg = cfg or self._full
+        kind = SHAPES[shape]["kind"]
+        if kind == "train":
+            import os as _os
+
+            mb = int(_os.environ.get("REPRO_LM_MICROBATCHES", self.microbatches))
+            inner = build_train_step(
+                lambda p, b: TF.loss_fn(p, b, cfg), self.opt_config(cfg),
+                microbatches=mb,
+            )
+
+            def train_step(state, batch):
+                p, o, m = inner(state["params"], state["opt_state"], batch)
+                return {"params": p, "opt_state": o}, m
+
+            return train_step
+        if kind == "prefill":
+            def prefill_step(state, batch):
+                logits, aux, _ = TF.forward(state["params"], batch["tokens"], cfg)
+                return logits
+
+            return prefill_step
+
+        def decode(state, batch):
+            return TF.decode_step(
+                state["params"], batch["cache"], batch["tokens"], batch["pos"], cfg
+            )
+
+        return decode
+
+    # ----------------------------------------------------------- shardings
+    def _rules(self, cfg, mesh_axes):
+        if cfg.n_experts and cfg.n_experts % 16 != 0:
+            return SH.lm_param_rules_tp_experts(mesh_axes)
+        return SH.lm_param_rules(mesh_axes)
+
+    def param_specs(self, cfg, mesh_axes):
+        return SH.spec_tree(self.abstract_params(cfg), self._rules(cfg, mesh_axes))
+
+    def state_specs(self, cfg, mesh_axes, shape: str | None = None):
+        ps = self.param_specs(cfg, mesh_axes)
+        if shape is not None and SHAPES[shape]["kind"] != "train":
+            return {"params": ps}
+        return {
+            "params": ps,
+            "opt_state": {"step": P(), "m": ps, "v": ps},
+        }
+
+    def batch_specs(self, shape: str, cfg, mesh_axes):
+        kind = SHAPES[shape]["kind"]
+        b = ("pod", "data") if "pod" in mesh_axes else ("data",)
+        if kind == "train":
+            return SH.lm_batch_specs(mesh_axes)
+        if kind == "prefill":
+            return {"tokens": P(b, None)}
+        B = SHAPES[shape]["batch"]
+        # batch=1 long-context: shard the sequence instead of the batch
+        batch_ax = b if B > 1 else None  # one spec entry (tuple = joint shard)
+        seq_axis = "model" if B > 1 else ("data", "model")
+        if cfg.attn_kind == "mla":
+            cache = {"c": P(None, batch_ax, seq_axis, None),
+                     "kr": P(None, batch_ax, seq_axis, None)}
+        else:
+            cache = {"k": P(None, batch_ax, seq_axis, None, None),
+                     "v": P(None, batch_ax, seq_axis, None, None)}
+        return {"cache": cache, "tokens": P(batch_ax, None), "pos": P(batch_ax)}
+
+    # -------------------------------------------------------------- smoke
+    def smoke_batch(self, rng):
+        cfg = self._smoke
+        toks = jax.random.randint(rng, (2, 16), 0, cfg.vocab)
+        return {"tokens": toks, "labels": toks}
+
+    def run_smoke(self, rng):
+        cfg = self._smoke
+        params = TF.init_params(rng, cfg)
+        batch = self.smoke_batch(rng)
+        logits, aux, _ = TF.forward(params, batch["tokens"], cfg)
+        assert logits.shape == (2, 16, cfg.vocab), logits.shape
+        assert not bool(jnp.isnan(logits).any())
+        loss = TF.loss_fn(params, batch, cfg)
+        assert not bool(jnp.isnan(loss)), float(loss)
+        # one decode step
+        cache = TF.init_cache(cfg, 2, 32)
+        lg, cache = TF.decode_step(
+            params, cache, batch["tokens"][:, :1], jnp.zeros((2,), jnp.int32), cfg
+        )
+        assert not bool(jnp.isnan(lg).any())
+        return float(loss)

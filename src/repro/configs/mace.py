@@ -1,0 +1,8 @@
+"""mace [arXiv:2206.07697]: n_layers=2, d_hidden=128, l_max=2,
+correlation_order=3, n_rbf=8 (E(3)-equivariant irrep regime)."""
+from repro.configs.gnn_common import GNNModule
+from repro.models.gnn import mace as M
+
+FULL = M.MACEConfig(n_layers=2, d_hidden=128, l_max=2, correlation_order=3, n_rbf=8)
+SMOKE = M.MACEConfig(name="mace-smoke", n_layers=2, d_hidden=16, n_rbf=4)
+MODULE = GNNModule("mace", M, FULL, SMOKE, kind="molecular")

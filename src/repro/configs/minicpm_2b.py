@@ -1,0 +1,25 @@
+"""minicpm-2b [arXiv:2404.06395]: 40L, d_model 2304, 36 heads (MHA, kv=36),
+d_ff 5760, vocab 122753, llama-like arch; WSD schedule in the optimizer
+(lm_common routes 'minicpm' to the WSD schedule)."""
+from repro.configs.lm_common import LMModule
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="minicpm-2b",
+    n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36, d_head=64,
+    d_ff=5760,
+    # assigned vocab 122,753 padded to 122,880 (=16*7680) so the
+    # vocab-sharded embedding divides the 16-way model axis — standard TPU
+    # vocab padding; the extra 127 ids are never emitted by the pipeline.
+    vocab=122_880,
+    tie_embeddings=True,
+    dtype="bfloat16", attn_impl="chunked", attn_chunk=1024, remat="full",
+)
+
+SMOKE = LMConfig(
+    name="minicpm-smoke",
+    n_layers=3, d_model=48, n_heads=6, n_kv_heads=6, d_head=8,
+    d_ff=96, vocab=151, tie_embeddings=True,
+)
+
+MODULE = LMModule("minicpm-2b", FULL, SMOKE, long_ok=False)

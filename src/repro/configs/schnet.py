@@ -1,0 +1,8 @@
+"""schnet [arXiv:1706.08566]: n_interactions=3, d_hidden=64, 300 RBFs,
+cutoff 10 (continuous-filter convolution / SpMM regime)."""
+from repro.configs.gnn_common import GNNModule
+from repro.models.gnn import schnet as M
+
+FULL = M.SchNetConfig(n_interactions=3, d_hidden=64, n_rbf=300, cutoff=10.0)
+SMOKE = M.SchNetConfig(name="schnet-smoke", n_interactions=2, d_hidden=32, n_rbf=16)
+MODULE = GNNModule("schnet", M, FULL, SMOKE, kind="molecular")

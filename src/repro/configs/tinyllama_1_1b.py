@@ -1,0 +1,19 @@
+"""tinyllama-1.1b [arXiv:2401.02385]: 22L, d_model 2048, 32 heads GQA(kv=4),
+d_ff 5632, vocab 32000 (llama2-style SwiGLU)."""
+from repro.configs.lm_common import LMModule
+from repro.models.transformer import LMConfig
+
+FULL = LMConfig(
+    name="tinyllama-1.1b",
+    n_layers=22, d_model=2048, n_heads=32, n_kv_heads=4, d_head=64,
+    d_ff=5632, vocab=32000,
+    dtype="bfloat16", attn_impl="chunked", attn_chunk=1024, remat="full",
+)
+
+SMOKE = LMConfig(
+    name="tinyllama-smoke",
+    n_layers=3, d_model=64, n_heads=8, n_kv_heads=2, d_head=8,
+    d_ff=128, vocab=128,
+)
+
+MODULE = LMModule("tinyllama-1.1b", FULL, SMOKE, long_ok=False)

@@ -1,0 +1,211 @@
+"""Predicate / scalar expression AST compiled to vectorized column programs.
+
+This is the WHERE-clause fragment of the paper's extended SQL. Expressions
+are built with operator overloading::
+
+    (col("job") == "Lawyer") & (col("age") > 30)
+
+and compiled against a *resolver* (name -> column array) to a mask / value
+array. String constants are dictionary-encoded by the engine before they
+reach jit (columns store int32 codes), so compiled programs are pure
+numerics.
+
+Path-indexed references (PS.Edges[0..*].x) live one level up in query.py;
+they decompose into these plain column expressions evaluated over the edge /
+vertex source tables to produce pushed-down traversal masks (paper §6.2).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax.numpy as jnp
+
+Resolver = Callable[[str], jnp.ndarray]
+
+
+class Expr:
+    # -- comparisons ------------------------------------------------------
+    def __eq__(self, other):  # type: ignore[override]
+        return Cmp("==", self, wrap(other))
+
+    def __ne__(self, other):  # type: ignore[override]
+        return Cmp("!=", self, wrap(other))
+
+    def __lt__(self, other):
+        return Cmp("<", self, wrap(other))
+
+    def __le__(self, other):
+        return Cmp("<=", self, wrap(other))
+
+    def __gt__(self, other):
+        return Cmp(">", self, wrap(other))
+
+    def __ge__(self, other):
+        return Cmp(">=", self, wrap(other))
+
+    # -- boolean ----------------------------------------------------------
+    def __and__(self, other):
+        return BoolOp("and", (self, wrap(other)))
+
+    def __or__(self, other):
+        return BoolOp("or", (self, wrap(other)))
+
+    def __invert__(self):
+        return BoolOp("not", (self,))
+
+    # -- arithmetic -------------------------------------------------------
+    def __add__(self, other):
+        return Arith("+", self, wrap(other))
+
+    def __sub__(self, other):
+        return Arith("-", self, wrap(other))
+
+    def __mul__(self, other):
+        return Arith("*", self, wrap(other))
+
+    def isin(self, values: Sequence):
+        return In(self, tuple(values))
+
+    def __hash__(self):
+        return id(self)
+
+
+def wrap(x) -> Expr:
+    return x if isinstance(x, Expr) else Const(x)
+
+
+class Col(Expr):
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"Col({self.name})"
+
+
+class Const(Expr):
+    def __init__(self, value: Any):
+        self.value = value
+
+    def __repr__(self):
+        return f"Const({self.value!r})"
+
+
+class Cmp(Expr):
+    def __init__(self, op: str, left: Expr, right: Expr):
+        self.op, self.left, self.right = op, left, right
+
+    def __repr__(self):
+        return f"({self.left!r} {self.op} {self.right!r})"
+
+
+class BoolOp(Expr):
+    def __init__(self, op: str, args: tuple):
+        self.op, self.args = op, args
+
+    def __repr__(self):
+        return f"{self.op}{self.args!r}"
+
+
+class Arith(Expr):
+    def __init__(self, op: str, left: Expr, right: Expr):
+        self.op, self.left, self.right = op, left, right
+
+
+class In(Expr):
+    def __init__(self, item: Expr, values: tuple):
+        self.item, self.values = item, values
+
+
+def col(name: str) -> Col:
+    return Col(name)
+
+
+def lit(value) -> Const:
+    return Const(value)
+
+
+_CMPS = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+}
+
+
+def evaluate(expr: Expr, resolve: Resolver, encode=None):
+    """Compile/evaluate an expression to an array under ``resolve``.
+
+    ``encode(column_name, python_value)`` maps constants (e.g. strings) to
+    their dictionary codes; identity by default.
+    """
+    enc = encode or (lambda name, v: v)
+
+    def ev(e: Expr, ctx_col: str | None = None):
+        if isinstance(e, Col):
+            return resolve(e.name)
+        if isinstance(e, Const):
+            return jnp.asarray(enc(ctx_col, e.value))
+        if isinstance(e, Cmp):
+            cname = e.left.name if isinstance(e.left, Col) else (
+                e.right.name if isinstance(e.right, Col) else None
+            )
+            return _CMPS[e.op](ev(e.left, cname), ev(e.right, cname))
+        if isinstance(e, BoolOp):
+            if e.op == "and":
+                out = ev(e.args[0])
+                for a in e.args[1:]:
+                    out = out & ev(a)
+                return out
+            if e.op == "or":
+                out = ev(e.args[0])
+                for a in e.args[1:]:
+                    out = out | ev(a)
+                return out
+            return ~ev(e.args[0])
+        if isinstance(e, Arith):
+            a, b = ev(e.left), ev(e.right)
+            return {"+": a + b, "-": a - b, "*": a * b}[e.op]
+        if isinstance(e, In):
+            cname = e.item.name if isinstance(e.item, Col) else None
+            item = ev(e.item, cname)
+            out = jnp.zeros(item.shape, jnp.bool_)
+            for v in e.values:
+                out = out | (item == jnp.asarray(enc(cname, v)))
+            return out
+        raise TypeError(f"cannot evaluate {type(e)}")
+
+    return ev(expr)
+
+
+def columns_of(expr: Expr) -> set:
+    out: set = set()
+
+    def walk(e):
+        if isinstance(e, Col):
+            out.add(e.name)
+        elif isinstance(e, Cmp):
+            walk(e.left), walk(e.right)
+        elif isinstance(e, Arith):
+            walk(e.left), walk(e.right)
+        elif isinstance(e, BoolOp):
+            for a in e.args:
+                walk(a)
+        elif isinstance(e, In):
+            walk(e.item)
+
+    walk(expr)
+    return out
+
+
+def split_conjuncts(expr: Expr | None) -> list:
+    """Flatten top-level ANDs into a conjunct list."""
+    if expr is None:
+        return []
+    if isinstance(expr, BoolOp) and expr.op == "and":
+        out = []
+        for a in expr.args:
+            out.extend(split_conjuncts(a))
+        return out
+    return [expr]

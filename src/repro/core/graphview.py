@@ -1,0 +1,209 @@
+"""Materialized graph views: the paper's core data structure, TPU-native.
+
+A graph view (paper §3) materializes *topology only*: adjacency structure
+plus tuple pointers into the vertex/edge relational sources. Here the
+topology is three aligned flat-array encodings of the same edge set —
+
+  * COO   (coo_src, coo_dst, coo_eid)        edge-parallel ops (frontier BFS,
+                                             Bellman-Ford relaxation),
+  * CSR   (out_offsets, out_dst, out_eid)    per-vertex expansion (paths),
+  * CSC   (in_offsets, in_src, in_eid)       reverse traversal / parents,
+
+where ``*_eid`` entries are **edge-table row indices** (= the paper's tuple
+pointers; attribute access is a gather) and vertex *positions equal vertex
+table rows* (so the vertex tuple pointer is the identity — the paper's O(1)
+hash in both directions becomes O(1) indexing). External vertex IDs map to
+positions via the sorted IdIndex.
+
+Decoupling (paper §3.2) is preserved exactly: attribute updates never touch
+these arrays; edge predicates/deletions are masks **by edge-table row**
+gathered through ``*_eid`` at traversal time.
+
+Online updates (paper §3.3): inserts go to a bounded delta COO buffer that
+frontier ops consult alongside the main arrays; ``build_graph_view`` is the
+compaction (a single vectorized pass, like the paper's single-pass
+construction). Deletes are row tombstones in the edge table, visible through
+the eid gather with zero structural work.
+
+Undirected graphs are symmetrized (each edge appears in both directions with
+the same eid), matching the paper's UNDIRECTED views.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.index import IdIndex
+from repro.core.struct import pytree, field, static_field
+from repro.core.table import Table
+
+
+@pytree
+class GraphView:
+    name: str = static_field()
+    directed: bool = static_field()
+    n_vertices: int = static_field()  # = vertex table capacity
+    # vertex side ---------------------------------------------------------
+    v_valid: jnp.ndarray = field()  # bool [V]
+    v_ids: jnp.ndarray = field()  # int32 [V] external ids (invalid rows: -1)
+    id_index: IdIndex = field()
+    fan_out: jnp.ndarray = field()  # int32 [V]
+    fan_in: jnp.ndarray = field()
+    # COO -----------------------------------------------------------------
+    coo_src: jnp.ndarray = field()  # int32 [E2] vertex positions; invalid -> V
+    coo_dst: jnp.ndarray = field()
+    coo_eid: jnp.ndarray = field()  # int32 [E2] edge-table rows; invalid -> -1
+    # CSR (out-edges) -------------------------------------------------------
+    out_offsets: jnp.ndarray = field()  # int32 [V+1]
+    out_dst: jnp.ndarray = field()
+    out_eid: jnp.ndarray = field()
+    # CSC (in-edges) --------------------------------------------------------
+    in_offsets: jnp.ndarray = field()
+    in_src: jnp.ndarray = field()
+    in_eid: jnp.ndarray = field()
+    # delta buffer (online inserts, consulted by frontier ops) --------------
+    delta_src: jnp.ndarray = field()  # int32 [delta_cap]
+    delta_dst: jnp.ndarray = field()
+    delta_eid: jnp.ndarray = field()
+    delta_valid: jnp.ndarray = field()  # bool [delta_cap]
+    # catalog statistics (paper §6.3 keeps avg fan-out for physical selection)
+    avg_fan_out: jnp.ndarray = field()  # f32 scalar
+
+    # ---------------------------------------------------------------- meta
+    @property
+    def n_slots(self) -> int:
+        return int(self.coo_src.shape[0])
+
+    @property
+    def delta_capacity(self) -> int:
+        return int(self.delta_src.shape[0])
+
+    @property
+    def num_edges(self):
+        """Live directed edge slots (undirected views count both directions)."""
+        return jnp.sum((self.coo_eid >= 0).astype(jnp.int32)) + jnp.sum(
+            self.delta_valid.astype(jnp.int32)
+        )
+
+    # ------------------------------------------------------------- updates
+    def insert_delta(self, src_pos, dst_pos, eids, valid):
+        """Append edges (vertex positions + edge rows) into the delta buffer."""
+        free = ~self.delta_valid
+        k = src_pos.shape[0]
+        rank = jnp.cumsum(free.astype(jnp.int32)) - 1
+        take = free & (rank < k)
+        ti = jnp.clip(rank, 0, max(k - 1, 0))
+        pick = lambda buf, new: jnp.where(take, jnp.take(new, ti), buf)
+        newv = jnp.where(take, jnp.take(valid, ti), self.delta_valid & take)
+        overflow = jnp.sum(free.astype(jnp.int32)) < jnp.sum(valid.astype(jnp.int32))
+        return (
+            self.replace(
+                delta_src=pick(self.delta_src, src_pos),
+                delta_dst=pick(self.delta_dst, dst_pos),
+                delta_eid=pick(self.delta_eid, eids),
+                delta_valid=self.delta_valid | (take & newv),
+            ),
+            overflow,
+        )
+
+    def all_coo(self):
+        """Main + delta COO streams concatenated (for edge-parallel ops)."""
+        src = jnp.concatenate([self.coo_src, jnp.where(self.delta_valid, self.delta_src, self.n_vertices)])
+        dst = jnp.concatenate([self.coo_dst, jnp.where(self.delta_valid, self.delta_dst, self.n_vertices)])
+        eid = jnp.concatenate([self.coo_eid, jnp.where(self.delta_valid, self.delta_eid, -1)])
+        return src, dst, eid
+
+    def gather_edge_mask(self, mask_by_row: jnp.ndarray, eid: jnp.ndarray) -> jnp.ndarray:
+        """Mask-by-edge-table-row -> mask aligned with an eid array."""
+        ok = eid >= 0
+        return ok & jnp.take(mask_by_row, jnp.clip(eid, 0, mask_by_row.shape[0] - 1))
+
+    def gather_vertex_mask(self, mask_by_pos: jnp.ndarray, pos: jnp.ndarray) -> jnp.ndarray:
+        ok = pos < self.n_vertices
+        return ok & jnp.take(mask_by_pos, jnp.clip(pos, 0, self.n_vertices - 1))
+
+
+def build_graph_view(
+    name: str,
+    vertex_table: Table,
+    edge_table: Table,
+    *,
+    v_id: str,
+    e_src: str,
+    e_dst: str,
+    directed: bool = True,
+    delta_capacity: int = 256,
+) -> GraphView:
+    """Single-pass vectorized construction (paper §3.1 objective 4).
+
+    Edges whose endpoints are not in the vertex set are ignored (the paper's
+    constraint semantics). All shapes are static functions of the two table
+    capacities, so this is jit-compatible and is also the delta-compaction
+    path.
+    """
+    V = vertex_table.capacity
+    Ecap = edge_table.capacity
+
+    v_ids = jnp.where(vertex_table.valid, vertex_table.col(v_id).astype(jnp.int32), -1)
+    idx = IdIndex.build(v_ids, vertex_table.valid)
+
+    src_rows, src_found = idx.lookup(edge_table.col(e_src))
+    dst_rows, dst_found = idx.lookup(edge_table.col(e_dst))
+    e_ok = edge_table.valid & src_found & dst_found
+
+    if directed:
+        n_slots = Ecap
+        src = jnp.where(e_ok, src_rows, V)
+        dst = jnp.where(e_ok, dst_rows, V)
+        eid = jnp.where(e_ok, jnp.arange(Ecap, dtype=jnp.int32), -1)
+    else:
+        n_slots = 2 * Ecap
+        rows = jnp.arange(Ecap, dtype=jnp.int32)
+        src = jnp.concatenate([jnp.where(e_ok, src_rows, V), jnp.where(e_ok, dst_rows, V)])
+        dst = jnp.concatenate([jnp.where(e_ok, dst_rows, V), jnp.where(e_ok, src_rows, V)])
+        eid = jnp.concatenate([jnp.where(e_ok, rows, -1)] * 2)
+
+    # CSR: sort by src (invalid slots have src == V and sort to the end).
+    order_out = jnp.argsort(src)  # stable sort by src
+    out_src_sorted = jnp.take(src, order_out)
+    out_dst = jnp.take(dst, order_out)
+    out_eid = jnp.take(eid, order_out)
+    out_offsets = jnp.searchsorted(out_src_sorted, jnp.arange(V + 1, dtype=jnp.int32)).astype(jnp.int32)
+
+    # CSC: sort by dst.
+    order_in = jnp.argsort(dst)
+    in_dst_sorted = jnp.take(dst, order_in)
+    in_src = jnp.take(src, order_in)
+    in_eid = jnp.take(eid, order_in)
+    in_offsets = jnp.searchsorted(in_dst_sorted, jnp.arange(V + 1, dtype=jnp.int32)).astype(jnp.int32)
+
+    fan_out = (out_offsets[1:] - out_offsets[:-1]).astype(jnp.int32)
+    fan_in = (in_offsets[1:] - in_offsets[:-1]).astype(jnp.int32)
+
+    n_live = jnp.maximum(jnp.sum(vertex_table.valid.astype(jnp.int32)), 1)
+    avg_fan_out = jnp.sum(fan_out.astype(jnp.float32)) / n_live.astype(jnp.float32)
+
+    dc = delta_capacity
+    return GraphView(
+        name=name,
+        directed=directed,
+        n_vertices=V,
+        v_valid=vertex_table.valid,
+        v_ids=v_ids,
+        id_index=idx,
+        fan_out=fan_out,
+        fan_in=fan_in,
+        coo_src=src.astype(jnp.int32),
+        coo_dst=dst.astype(jnp.int32),
+        coo_eid=eid.astype(jnp.int32),
+        out_offsets=out_offsets,
+        out_dst=out_dst.astype(jnp.int32),
+        out_eid=out_eid.astype(jnp.int32),
+        in_offsets=in_offsets,
+        in_src=in_src.astype(jnp.int32),
+        in_eid=in_eid.astype(jnp.int32),
+        delta_src=jnp.full((dc,), V, jnp.int32),
+        delta_dst=jnp.full((dc,), V, jnp.int32),
+        delta_eid=jnp.full((dc,), -1, jnp.int32),
+        delta_valid=jnp.zeros((dc,), jnp.bool_),
+        avg_fan_out=avg_fan_out,
+    )

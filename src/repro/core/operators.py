@@ -1,0 +1,277 @@
+"""Cross-data-model query-execution-pipeline operators (paper §5.2).
+
+A pure relational engine passes tuples between operators; GRFusion-JAX
+passes ``RelBatch`` — a fixed-capacity columnar batch (columns + validity
+mask). Relational operators and graph operators share this interface, so a
+relational join can consume the output of a PathScan and a PathScan can be
+probed by start vertices produced by a relational sub-plan — the paper's
+impedance-mismatch resolution (§5.3), with XLA fusing the whole pipeline
+into one program instead of the paper's pull-based iterator chain.
+
+Graph operator outputs are extended tuples:
+  * VertexScan rows carry the vertex attributes + ``_pos``/``fanin``/``fanout``,
+  * EdgeScan rows carry edge attributes + ``_src_pos``/``_dst_pos``,
+  * PathScan rows (from traversal.PathSet) carry ``length``, ``startvertex``,
+    ``endvertex``, per-path aggregates and the edge/vertex id lists.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping, Sequence
+
+import jax.numpy as jnp
+
+from repro.core import expr as X
+from repro.core.struct import pytree, field
+from repro.core.table import Table
+from repro.core.graphview import GraphView
+from repro.core.traversal import PathSet, expand_by_counts
+
+
+@pytree
+class RelBatch:
+    cols: Dict[str, jnp.ndarray] = field()
+    valid: jnp.ndarray = field()  # bool [N]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    @property
+    def count(self):
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def col(self, name):
+        return self.cols[name]
+
+    def resolver(self):
+        return lambda name: self.cols[name]
+
+
+# --------------------------------------------------------------------- scans
+def table_scan(table: Table, prefix: str = "") -> RelBatch:
+    cols = {prefix + k: v for k, v in table.columns.items()}
+    cols[prefix + "_row"] = jnp.arange(table.capacity, dtype=jnp.int32)
+    return RelBatch(cols=cols, valid=table.valid)
+
+
+def vertex_scan(view: GraphView, vertex_table: Table, prefix: str = "") -> RelBatch:
+    """Graph operator: vertices as extended tuples with FanIn/FanOut (§5.1.1).
+
+    The graph view gives O(1) fan-in/fan-out; attributes come from the
+    relational source via the tuple pointer (position == row)."""
+    b = table_scan(vertex_table, prefix)
+    cols = dict(b.cols)
+    cols[prefix + "fanout"] = view.fan_out
+    cols[prefix + "fanin"] = view.fan_in
+    cols[prefix + "_pos"] = jnp.arange(view.n_vertices, dtype=jnp.int32)
+    return RelBatch(cols=cols, valid=b.valid & view.v_valid)
+
+
+def edge_scan(view: GraphView, edge_table: Table, prefix: str = "") -> RelBatch:
+    b = table_scan(edge_table, prefix)
+    # positions of endpoints via the id index (vectorized O(log V))
+    cols = dict(b.cols)
+    return RelBatch(cols=cols, valid=b.valid)
+
+
+# ------------------------------------------------------------------- filters
+def filter_batch(batch: RelBatch, predicate: X.Expr, encode=None) -> RelBatch:
+    mask = X.evaluate(predicate, batch.resolver(), encode)
+    return batch.replace(valid=batch.valid & mask)
+
+
+def project(batch: RelBatch, mapping: Mapping[str, X.Expr | str]) -> RelBatch:
+    cols = {}
+    for out_name, e in mapping.items():
+        if isinstance(e, str):
+            cols[out_name] = batch.cols[e]
+        else:
+            cols[out_name] = X.evaluate(e, batch.resolver())
+    return RelBatch(cols=cols, valid=batch.valid)
+
+
+# --------------------------------------------------------------------- joins
+def join(
+    left: RelBatch,
+    right: RelBatch,
+    left_key: str,
+    right_key: str,
+    capacity: int | None = None,
+) -> RelBatch:
+    """Equi-join via sort + vectorized binary search + fanout expansion.
+
+    The TPU-native replacement for a hash join: sort the build side once,
+    probe the whole outer batch with one ``searchsorted``, expand duplicate
+    matches through ``expand_by_counts``. Output capacity defaults to
+    ``left.capacity`` (planner can widen it for many-to-many joins).
+    """
+    cap = capacity or left.capacity
+    SENT = jnp.iinfo(jnp.int32).max
+
+    rk = jnp.where(right.valid, right.col(right_key).astype(jnp.int32), SENT)
+    order = jnp.argsort(rk).astype(jnp.int32)
+    rk_sorted = jnp.take(rk, order)
+
+    lk = left.col(left_key).astype(jnp.int32)
+    lo = jnp.searchsorted(rk_sorted, lk, side="left").astype(jnp.int32)
+    hi = jnp.searchsorted(rk_sorted, lk, side="right").astype(jnp.int32)
+    counts = jnp.where(left.valid, hi - lo, 0)
+
+    parent, within, vslot, total = expand_by_counts(counts, cap)
+    rpos = jnp.take(order, jnp.clip(jnp.take(lo, parent) + within, 0, order.shape[0] - 1))
+    ok = vslot
+
+    cols = {}
+    for k, v in left.cols.items():
+        cols[k] = jnp.take(v, parent, axis=0)
+    for k, v in right.cols.items():
+        cols[k] = jnp.take(v, rpos, axis=0)
+    overflow = total > cap
+    return RelBatch(cols=cols, valid=ok), overflow
+
+
+def cross_join(left: RelBatch, right: RelBatch, capacity: int | None = None):
+    """Bounded cartesian product (for small filtered anchor relations, e.g.
+    the paper's Listing-3 `Proteins Pr1, Proteins Pr2` reachability form)."""
+    cap = capacity or max(left.capacity, right.capacity)
+    n_right = jnp.sum(right.valid.astype(jnp.int32))
+    counts = jnp.where(left.valid, n_right, 0)
+    parent, within, vslot, total = expand_by_counts(counts, cap)
+    # the `within`-th valid right row
+    rrank = jnp.cumsum(right.valid.astype(jnp.int32)) - 1
+    rpos_of_rank = jnp.full((right.capacity,), 0, jnp.int32).at[
+        jnp.where(right.valid, rrank, right.capacity)
+    ].set(jnp.arange(right.capacity, dtype=jnp.int32), mode="drop")
+    rpos = jnp.take(rpos_of_rank, jnp.clip(within, 0, right.capacity - 1))
+    cols = {k: jnp.take(v, parent, axis=0) for k, v in left.cols.items()}
+    for k, v in right.cols.items():
+        cols[k] = jnp.take(v, rpos, axis=0)
+    return RelBatch(cols=cols, valid=vslot), total > cap
+
+
+# ---------------------------------------------------------------- aggregates
+_AGGS = ("sum", "min", "max", "count", "mean")
+
+
+def aggregate_all(batch: RelBatch, aggs: Mapping[str, tuple]) -> Dict[str, jnp.ndarray]:
+    """Ungrouped aggregates: {out: (op, col)}; count may use col=None."""
+    out = {}
+    v = batch.valid
+    for name, (op, colname) in aggs.items():
+        if op == "count":
+            out[name] = jnp.sum(v.astype(jnp.int32))
+            continue
+        x = batch.col(colname)
+        if op == "sum":
+            out[name] = jnp.sum(jnp.where(v, x, 0))
+        elif op == "mean":
+            s = jnp.sum(jnp.where(v, x.astype(jnp.float32), 0.0))
+            out[name] = s / jnp.maximum(jnp.sum(v.astype(jnp.float32)), 1.0)
+        elif op == "min":
+            big = jnp.asarray(jnp.finfo(jnp.float32).max, x.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else jnp.asarray(jnp.iinfo(jnp.int32).max, x.dtype)
+            out[name] = jnp.min(jnp.where(v, x, big))
+        elif op == "max":
+            small = jnp.asarray(jnp.finfo(jnp.float32).min, x.dtype) if jnp.issubdtype(x.dtype, jnp.floating) else jnp.asarray(jnp.iinfo(jnp.int32).min, x.dtype)
+            out[name] = jnp.max(jnp.where(v, x, small))
+        else:
+            raise ValueError(op)
+    return out
+
+
+def group_by(batch: RelBatch, key: str, aggs: Mapping[str, tuple]) -> RelBatch:
+    """Sort-based grouping + segment reductions; one output row per group."""
+    SENT = jnp.iinfo(jnp.int32).max
+    N = batch.capacity
+    k = jnp.where(batch.valid, batch.col(key).astype(jnp.int32), SENT)
+    order = jnp.argsort(k)
+    ks = jnp.take(k, order)
+    first = jnp.concatenate([jnp.array([True]), ks[1:] != ks[:-1]])
+    first = first & (ks != SENT)
+    gid = jnp.cumsum(first.astype(jnp.int32)) - 1  # segment ids in sorted order
+
+    import jax
+
+    live_gid = jnp.where(ks != SENT, gid, N)  # sentinel rows must not scatter
+    out_cols = {key: jnp.zeros((N,), jnp.int32).at[live_gid].set(ks, mode="drop")}
+    for name, (op, colname) in aggs.items():
+        if op == "count":
+            vals = (ks != SENT).astype(jnp.int32)
+            red = jax.ops.segment_sum(vals, gid, num_segments=N)
+        else:
+            x = jnp.take(batch.col(colname), order)
+            live = ks != SENT
+            if jnp.issubdtype(x.dtype, jnp.floating):
+                big, small = jnp.asarray(jnp.inf, x.dtype), jnp.asarray(-jnp.inf, x.dtype)
+            else:
+                ii = jnp.iinfo(jnp.int32)
+                big, small = jnp.asarray(ii.max, x.dtype), jnp.asarray(ii.min, x.dtype)
+            if op == "sum":
+                red = jax.ops.segment_sum(jnp.where(live, x, 0), gid, num_segments=N)
+            elif op == "min":
+                red = jax.ops.segment_min(jnp.where(live, x, big), gid, num_segments=N)
+            elif op == "max":
+                red = jax.ops.segment_max(jnp.where(live, x, small), gid, num_segments=N)
+            elif op == "mean":
+                s = jax.ops.segment_sum(jnp.where(ks != SENT, x.astype(jnp.float32), 0.0), gid, num_segments=N)
+                c = jax.ops.segment_sum((ks != SENT).astype(jnp.float32), gid, num_segments=N)
+                red = s / jnp.maximum(c, 1.0)
+            else:
+                raise ValueError(op)
+        out_cols[name] = red
+    n_groups = jnp.sum(first.astype(jnp.int32))
+    valid = jnp.arange(N) < n_groups
+    return RelBatch(cols=out_cols, valid=valid)
+
+
+def distinct(batch: RelBatch, key: str) -> RelBatch:
+    """DISTINCT on one int key (used by the SQLGraph baseline frontier)."""
+    g = group_by(batch, key, {"_n": ("count", None)})
+    return RelBatch(cols={key: g.cols[key]}, valid=g.valid)
+
+
+def limit(batch: RelBatch, n: int) -> RelBatch:
+    rank = jnp.cumsum(batch.valid.astype(jnp.int32)) - 1
+    return batch.replace(valid=batch.valid & (rank < n))
+
+
+def order_by(batch: RelBatch, key: str, descending: bool = False) -> RelBatch:
+    x = batch.col(key)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        bad = jnp.asarray(jnp.inf, x.dtype) if not descending else jnp.asarray(-jnp.inf, x.dtype)
+    else:
+        info = jnp.iinfo(jnp.int32)
+        bad = jnp.asarray(info.max if not descending else info.min, x.dtype)
+    keyed = jnp.where(batch.valid, x, bad)
+    order = jnp.argsort(-keyed if descending else keyed)
+    cols = {k: jnp.take(v, order, axis=0) for k, v in batch.cols.items()}
+    return RelBatch(cols=cols, valid=jnp.take(batch.valid, order))
+
+
+# ----------------------------------------------------- PathSet -> RelBatch
+def paths_to_batch(
+    ps: PathSet,
+    view: GraphView,
+    prefix: str = "",
+    agg_names: Sequence[str] = (),
+    any_names: Sequence[str] = (),
+) -> RelBatch:
+    """The Path extended-tuple type (§5.2) in columnar form."""
+    cols = {
+        prefix + "length": ps.length,
+        prefix + "_start_pos": ps.start_vertex(),
+        prefix + "_end_pos": ps.end_vertex(),
+        prefix + "startvertexid": jnp.take(
+            view.v_ids, jnp.clip(ps.start_vertex(), 0, view.n_vertices - 1)
+        ),
+        prefix + "endvertexid": jnp.take(
+            view.v_ids, jnp.clip(ps.end_vertex(), 0, view.n_vertices - 1)
+        ),
+        prefix + "_edges": ps.edges,
+        prefix + "_verts": ps.verts,
+        prefix + "_origin": ps.origin,
+    }
+    for i, n in enumerate(agg_names):
+        cols[prefix + n] = ps.agg[:, i]
+    for i, n in enumerate(any_names):
+        cols[prefix + n] = ps.anyf[:, i]
+    return RelBatch(cols=cols, valid=ps.valid())

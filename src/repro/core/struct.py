@@ -1,0 +1,58 @@
+"""Tiny pytree-dataclass helper used across the framework.
+
+``@pytree`` turns a (frozen) dataclass into a JAX pytree. Fields marked
+``static=True`` go into the treedef (must be hashable); everything else is a
+leaf/subtree. This is the only "framework" dependency the rest of the code
+needs — no flax/optax are available offline, so all state containers are
+built on this.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+
+def field(*, static: bool = False, **kwargs):
+    md = dict(kwargs.pop("metadata", {}) or {})
+    md["static"] = static
+    return dataclasses.field(metadata=md, **kwargs)
+
+
+def static_field(**kwargs):
+    return field(static=True, **kwargs)
+
+
+def pytree(cls):
+    """Class decorator: frozen dataclass registered as a JAX pytree."""
+    cls = dataclasses.dataclass(frozen=True, eq=False, repr=True)(cls)
+    flds = dataclasses.fields(cls)
+    data_names = tuple(f.name for f in flds if not f.metadata.get("static", False))
+    static_names = tuple(f.name for f in flds if f.metadata.get("static", False))
+
+    def flatten(obj):
+        data = tuple(getattr(obj, n) for n in data_names)
+        static = tuple(getattr(obj, n) for n in static_names)
+        return data, static
+
+    def flatten_with_keys(obj):
+        data = tuple(
+            (jax.tree_util.GetAttrKey(n), getattr(obj, n)) for n in data_names
+        )
+        static = tuple(getattr(obj, n) for n in static_names)
+        return data, static
+
+    def unflatten(static, data):
+        kw = dict(zip(data_names, data))
+        kw.update(zip(static_names, static))
+        return cls(**kw)
+
+    jax.tree_util.register_pytree_with_keys(
+        cls, flatten_with_keys, unflatten, flatten_func=flatten
+    )
+
+    def _replace(self, **kw):
+        return dataclasses.replace(self, **kw)
+
+    cls.replace = _replace
+    return cls

@@ -1,0 +1,140 @@
+"""Columnar in-memory relational table.
+
+The paper (GRFusion/VoltDB) stores vertex/edge attributes in relational
+tuples referenced by main-memory tuple pointers. The TPU-native adaptation is
+a columnar struct-of-arrays with a fixed capacity and a validity bitmap:
+
+  * a "tuple pointer" becomes an integer row index; dereference = jnp.take,
+  * scans/filters become fused vector masks,
+  * inserts/deletes are functional (return a new Table) so the whole engine
+    state stays a pytree and query plans stay jit-compatible.
+
+Capacity is static (shape); the set of live rows is the dynamic ``valid``
+mask, so all programs compile once per capacity.
+"""
+from __future__ import annotations
+
+from typing import Dict, Mapping
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.struct import pytree, field, static_field
+
+
+def _pad_to(arr: jnp.ndarray, capacity: int):
+    n = arr.shape[0]
+    if n > capacity:
+        raise ValueError(f"{n} rows exceed capacity {capacity}")
+    pad = capacity - n
+    if pad == 0:
+        return jnp.asarray(arr)
+    pad_width = [(0, pad)] + [(0, 0)] * (arr.ndim - 1)
+    return jnp.pad(jnp.asarray(arr), pad_width)
+
+
+@pytree
+class Table:
+    name: str = static_field()
+    colnames: tuple = static_field()
+    columns: Dict[str, jnp.ndarray] = field()
+    valid: jnp.ndarray = field()  # bool [capacity]
+
+    # ------------------------------------------------------------------ meta
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[0])
+
+    @property
+    def num_rows(self):
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def col(self, name: str) -> jnp.ndarray:
+        return self.columns[name]
+
+    # ------------------------------------------------------------- construct
+    @staticmethod
+    def create(name: str, data: Mapping[str, np.ndarray], capacity: int | None = None) -> "Table":
+        data = {k: np.asarray(v) for k, v in data.items()}
+        ns = {k: v.shape[0] for k, v in data.items()}
+        if len(set(ns.values())) > 1:
+            raise ValueError(f"ragged columns: {ns}")
+        n = next(iter(ns.values())) if ns else 0
+        capacity = int(capacity if capacity is not None else max(n, 1))
+        cols = {k: _pad_to(jnp.asarray(v), capacity) for k, v in data.items()}
+        valid = _pad_to(jnp.ones((n,), jnp.bool_), capacity)
+        return Table(name=name, colnames=tuple(sorted(cols)), columns=cols, valid=valid)
+
+    @staticmethod
+    def empty(name: str, schema: Mapping[str, jnp.dtype], capacity: int) -> "Table":
+        cols = {k: jnp.zeros((capacity,), dt) for k, dt in schema.items()}
+        return Table(
+            name=name,
+            colnames=tuple(sorted(cols)),
+            columns=cols,
+            valid=jnp.zeros((capacity,), jnp.bool_),
+        )
+
+    # ----------------------------------------------------------------- access
+    def gather(self, rows: jnp.ndarray) -> Dict[str, jnp.ndarray]:
+        """Dereference tuple pointers (row indices). Out-of-range rows clip."""
+        idx = jnp.clip(rows, 0, self.capacity - 1)
+        return {k: jnp.take(v, idx, axis=0) for k, v in self.columns.items()}
+
+    def gather_valid(self, rows: jnp.ndarray) -> jnp.ndarray:
+        inb = (rows >= 0) & (rows < self.capacity)
+        idx = jnp.clip(rows, 0, self.capacity - 1)
+        return inb & jnp.take(self.valid, idx)
+
+    # ---------------------------------------------------------------- mutate
+    def insert(self, rows: Mapping[str, jnp.ndarray]):
+        """Insert rows into the first free slots.
+
+        Returns (new_table, slot_indices [k], overflow_flag). Row j lands at
+        slot_indices[j]; if there are fewer than k free slots the extra rows
+        are dropped and overflow is True.
+        """
+        k = next(iter(rows.values())).shape[0]
+        free = ~self.valid
+        free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1  # rank among free slots
+        take = free & (free_rank < k)
+        take_idx = jnp.clip(free_rank, 0, max(k - 1, 0))
+        new_cols = {}
+        for name, col in self.columns.items():
+            incoming = jnp.asarray(rows[name], col.dtype)
+            picked = jnp.take(incoming, take_idx, axis=0)
+            new_cols[name] = jnp.where(
+                take.reshape((-1,) + (1,) * (col.ndim - 1)), picked, col
+            )
+        new_valid = self.valid | take
+        slot_of_row = jnp.full((k,), -1, jnp.int32)
+        slots = jnp.nonzero(take, size=k, fill_value=-1)[0].astype(jnp.int32)
+        slot_of_row = slots
+        overflow = jnp.sum(free.astype(jnp.int32)) < k
+        return self.replace(columns=new_cols, valid=new_valid), slot_of_row, overflow
+
+    def delete(self, row_mask: jnp.ndarray) -> "Table":
+        return self.replace(valid=self.valid & ~row_mask)
+
+    def delete_rows(self, rows: jnp.ndarray) -> "Table":
+        mask = jnp.zeros((self.capacity,), jnp.bool_).at[rows].set(True, mode="drop")
+        return self.delete(mask)
+
+    def update(self, row_mask: jnp.ndarray, name: str, values) -> "Table":
+        col = self.columns[name]
+        values = jnp.asarray(values, col.dtype)
+        values = jnp.broadcast_to(values, col.shape)
+        new = jnp.where(row_mask, values, col)
+        cols = dict(self.columns)
+        cols[name] = new
+        return self.replace(columns=cols)
+
+    def with_column(self, name: str, values) -> "Table":
+        cols = dict(self.columns)
+        cols[name] = jnp.asarray(values)
+        return self.replace(columns=cols, colnames=tuple(sorted(cols)))
+
+    # ----------------------------------------------------------------- numpy
+    def to_numpy(self) -> Dict[str, np.ndarray]:
+        mask = np.asarray(self.valid)
+        return {k: np.asarray(v)[mask] for k, v in self.columns.items()}

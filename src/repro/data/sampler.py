@@ -1,0 +1,77 @@
+"""Fanout neighbor sampler for sampled GNN training (minibatch_lg shape:
+batch_nodes=1024, fanout 15-10 over a Reddit-scale graph).
+
+GraphSAGE-style sampling with replacement over a CSR topology: layer l
+draws `fanout[l]` neighbors per frontier node (repeats allowed, isolated
+nodes self-loop), producing fixed-shape block edge lists — the shapes the
+dry-run declares. Host-side numpy (the input pipeline runs on CPU hosts in
+production; device code consumes fixed-shape blocks).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Sequence
+
+import numpy as np
+
+
+@dataclass
+class SampledBlock:
+    """One sampled minibatch: disjoint-union style flat arrays."""
+
+    nodes: np.ndarray  # int32 [N_sub] original node ids (seeds first)
+    src: np.ndarray  # int32 [E_sub] indices into `nodes`
+    dst: np.ndarray  # int32 [E_sub]
+    seeds: np.ndarray  # int32 [B] positions of seeds within `nodes`
+
+
+class NeighborSampler:
+    def __init__(self, row_offsets: np.ndarray, col_indices: np.ndarray, seed: int = 0):
+        self.offsets = np.asarray(row_offsets)
+        self.cols = np.asarray(col_indices)
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, seeds: np.ndarray, fanouts: Sequence[int]) -> SampledBlock:
+        seeds = np.asarray(seeds, np.int64)
+        all_nodes: List[np.ndarray] = [seeds]
+        src_l: List[np.ndarray] = []
+        dst_l: List[np.ndarray] = []
+        frontier = seeds
+        base = 0
+        for f in fanouts:
+            deg = self.offsets[frontier + 1] - self.offsets[frontier]
+            # with-replacement draws; isolated nodes self-loop
+            draw = self.rng.integers(0, np.maximum(deg, 1)[:, None], (len(frontier), f))
+            idx = self.offsets[frontier][:, None] + draw
+            nbrs = np.where(
+                deg[:, None] > 0, self.cols[np.minimum(idx, len(self.cols) - 1)],
+                frontier[:, None],
+            )
+            # edges point child -> parent (message flows to seeds)
+            parent_pos = base + np.repeat(np.arange(len(frontier)), f)
+            child_pos = len(np.concatenate(all_nodes)) + np.arange(nbrs.size)
+            src_l.append(child_pos.astype(np.int64))
+            dst_l.append(parent_pos.astype(np.int64))
+            flat = nbrs.reshape(-1)
+            base = len(np.concatenate(all_nodes))
+            all_nodes.append(flat)
+            frontier = flat
+        nodes = np.concatenate(all_nodes).astype(np.int32)
+        return SampledBlock(
+            nodes=nodes,
+            src=np.concatenate(src_l).astype(np.int32),
+            dst=np.concatenate(dst_l).astype(np.int32),
+            seeds=np.arange(len(seeds), dtype=np.int32),
+        )
+
+
+def expected_block_shape(batch: int, fanouts: Sequence[int]):
+    """Static shapes for input_specs: nodes / edges of a sampled block."""
+    n = batch
+    total_nodes = batch
+    total_edges = 0
+    for f in fanouts:
+        total_edges += n * f
+        n = n * f
+        total_nodes += n
+    return total_nodes, total_edges

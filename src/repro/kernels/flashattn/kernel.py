@@ -1,0 +1,123 @@
+"""FlashAttention forward Pallas TPU kernel with BlockSpec VMEM tiling.
+
+Online-softmax attention over KV blocks (Dao et al.; TPU adaptation: block
+shapes aligned to the 128-lane MXU, running (m, l, acc) carried in the
+output tile across the sequential kv-block grid dimension — no atomics
+needed because TPU grids iterate sequentially).
+
+Supports the variants the assigned LM architectures need:
+  * causal masking (+ query-position offset for prefill-with-cache),
+  * sliding-window (gemma2 local layers),
+  * logit softcapping (gemma2: cap * tanh(s / cap)).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_NEG = -1e30
+
+
+def _flash_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+    *, scale, causal, window, softcap, block_q, block_k, n_kblocks, q_offset,
+):
+    kb = pl.program_id(2)
+
+    @pl.when(kb == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # [BQ, D]
+    k = k_ref[0].astype(jnp.float32)  # [BK, D]
+    v = v_ref[0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    ) * scale  # [BQ, BK]
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    i = pl.program_id(1)
+    qg = q_offset + i * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    kg = kb * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = mask & (kg <= qg)
+    if window is not None:
+        mask = mask & (qg - kg < window)
+    s = jnp.where(mask, s, _NEG)
+
+    m_prev = m_ref[0]  # [BQ, 1]
+    l_prev = l_ref[0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new) * mask.astype(jnp.float32)
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc = o_ref[0] * alpha + jnp.dot(p, v, preferred_element_type=jnp.float32)
+
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+    o_ref[0] = acc
+
+    @pl.when(kb == n_kblocks - 1)
+    def _norm():
+        l = l_ref[0]
+        o_ref[0] = jnp.where(l > 0, o_ref[0] / jnp.maximum(l, 1e-30), 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "causal", "window", "softcap", "block_q", "block_k", "q_offset", "interpret",
+    ),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [BH, Sq, D]
+    k: jnp.ndarray,  # [BH, Sk, D]
+    v: jnp.ndarray,  # [BH, Sk, D]
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    softcap: float | None = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    q_offset: int = 0,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, Sk, block_q, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    scale = 1.0 / (D ** 0.5)
+
+    out, _, _ = pl.pallas_call(
+        functools.partial(
+            _flash_kernel,
+            scale=scale, causal=causal, window=window, softcap=softcap,
+            block_q=block_q, block_k=block_k, n_kblocks=nk, q_offset=q_offset,
+        ),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_k, D), lambda h, i, j: (h, j, 0)),
+            pl.BlockSpec((1, block_k, D), lambda h, i, j: (h, j, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((1, block_q, D), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda h, i, j: (h, i, 0)),
+            pl.BlockSpec((1, block_q, 1), lambda h, i, j: (h, i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((BH, Sq, D), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((BH, Sq, 1), jnp.float32),
+        ),
+        interpret=interpret,
+    )(q, k, v)
+    return out

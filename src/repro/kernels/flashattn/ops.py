@@ -1,0 +1,42 @@
+"""jit'd convenience wrappers around the flash-attention kernel.
+
+`mha` reshapes [B, S, H, D] <-> kernel layout and handles GQA by repeating
+KV heads (layout-only op). The models call this for prefill/train paths when
+``use_flash`` is on; the pure-jnp path (`ref.attention_ref`) is the oracle
+and the default on CPU.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.flashattn.kernel import flash_attention
+from repro.kernels.flashattn.ref import attention_ref  # noqa: F401
+
+
+def mha(
+    q,  # [B, Sq, Hq, D]
+    k,  # [B, Sk, Hkv, D]
+    v,
+    *,
+    causal=True,
+    window=None,
+    softcap=None,
+    q_offset: int = 0,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    rep = Hq // Hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qt = q.transpose(0, 2, 1, 3).reshape(B * Hq, Sq, D)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * Hq, -1, D)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * Hq, -1, D)
+    o = flash_attention(
+        qt, kt, vt, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return o.reshape(B, Hq, Sq, D).transpose(0, 2, 1, 3)

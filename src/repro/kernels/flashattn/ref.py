@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for flash attention (full softmax, f32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(
+    q, k, v, *, causal=True, window=None, softcap=None, q_offset: int = 0
+):
+    """q [BH, Sq, D], k/v [BH, Sk, D] -> [BH, Sq, D] (f32)."""
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    D = q.shape[-1]
+    s = jnp.einsum("hqd,hkd->hqk", q, k) / (D ** 0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    Sq, Sk = q.shape[1], k.shape[1]
+    qg = q_offset + jnp.arange(Sq)[:, None]
+    kg = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (kg <= qg)
+    if window is not None:
+        mask = mask & (qg - kg < window)
+    s = jnp.where(mask[None], s, -jnp.inf)
+    p = jnp.where(
+        mask[None], jnp.exp(s - jnp.max(s, axis=-1, keepdims=True)), 0.0
+    )
+    denom = jnp.sum(p, axis=-1, keepdims=True)
+    p = jnp.where(denom > 0, p / jnp.maximum(denom, 1e-30), 0.0)
+    return jnp.einsum("hqk,hkd->hqd", p, v)

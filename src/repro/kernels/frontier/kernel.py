@@ -1,0 +1,90 @@
+"""Fused BFS frontier-hop Pallas TPU kernel (the paper's BFScan, §5.1.2).
+
+One traversal hop for a batch of S concurrent queries, vertex-major layout:
+
+    acc[dst_tile]   = sum_j onehot(local_dst_j) @ msgs_j      (MXU scatter)
+    next[dst_tile]  = (acc > 0) & ~visited                    (frontier OR)
+    dist[dst_tile]  = hop  where newly reached
+    visited        |= next
+
+The expansion (scatter-by-matmul) and the entire BFS epilogue (dedup against
+the visited set, distance stamping) are fused into one pass over the
+destination-vertex tiles — the VMEM-resident equivalent of the paper's
+"explore a traversed vertex only once" bookkeeping. msgs are the pushed-down
+predicate-masked frontier values gathered by edge source (ops.py), so
+filtering happens during the traversal exactly as §6.2 prescribes.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hop_kernel(msgs_ref, ldst_ref, vis_ref, dist_ref, hop_ref,
+                next_ref, ndist_ref, nvis_ref, *, block_rows: int, n_eblocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        next_ref[...] = jnp.zeros_like(next_ref)
+
+    msgs = msgs_ref[0, 0]  # [BE, S] f32 0/1 (already predicate-masked)
+    ldst = ldst_ref[0, 0]  # [BE]
+    be = ldst.shape[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (block_rows, be), 0)
+    onehot = (ldst[None, :] == rows).astype(msgs.dtype)
+    next_ref[...] += jnp.dot(onehot, msgs, preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_eblocks - 1)
+    def _finalize():
+        acc = next_ref[...]
+        vis = vis_ref[...]
+        dist = dist_ref[...]
+        hop = hop_ref[0, 0]
+        newly = (acc > 0.0) & (vis == 0.0)
+        next_ref[...] = newly.astype(jnp.float32)
+        ndist_ref[...] = jnp.where(newly & (dist < 0), hop, dist)
+        nvis_ref[...] = jnp.maximum(vis, newly.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def frontier_hop(
+    msgs_t: jnp.ndarray,  # f32 [T, J, BE, S] masked frontier values by edge
+    ldst_t: jnp.ndarray,  # int32 [T, J, BE]
+    visited: jnp.ndarray,  # f32 [T*BT, S]
+    dist: jnp.ndarray,  # int32 [T*BT, S]
+    hop: jnp.ndarray,  # int32 [1, 1] current hop index
+    *,
+    block_rows: int,
+    interpret: bool = True,
+):
+    T, J, BE, S = msgs_t.shape
+    VP = T * block_rows
+    out_shapes = (
+        jax.ShapeDtypeStruct((VP, S), jnp.float32),  # next frontier
+        jax.ShapeDtypeStruct((VP, S), jnp.int32),  # dist
+        jax.ShapeDtypeStruct((VP, S), jnp.float32),  # visited
+    )
+    tile = lambda i, j: (i, 0)
+    nxt, ndist, nvis = pl.pallas_call(
+        functools.partial(_hop_kernel, block_rows=block_rows, n_eblocks=J),
+        grid=(T, J),
+        in_specs=[
+            pl.BlockSpec((1, 1, BE, S), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, 1, BE), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_rows, S), tile),
+            pl.BlockSpec((block_rows, S), tile),
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),
+        ],
+        out_specs=(
+            pl.BlockSpec((block_rows, S), tile),
+            pl.BlockSpec((block_rows, S), tile),
+            pl.BlockSpec((block_rows, S), tile),
+        ),
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(msgs_t, ldst_t, visited, dist, hop)
+    return nxt, ndist, nvis

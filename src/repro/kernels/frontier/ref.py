@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the fused frontier hop."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def frontier_hop_ref(
+    frontier: jnp.ndarray,  # f32 [V, S] 0/1
+    visited: jnp.ndarray,  # f32 [V, S]
+    dist: jnp.ndarray,  # int32 [V, S]
+    src: jnp.ndarray,  # int32 [E]
+    dst: jnp.ndarray,  # int32 [E]
+    emask: jnp.ndarray,  # bool [E]
+    hop: int,
+):
+    V = frontier.shape[0]
+    msgs = jnp.take(frontier, jnp.clip(src, 0, V - 1), axis=0)
+    msgs = msgs * (emask & (src >= 0) & (src < V))[:, None]
+    acc = jnp.zeros_like(frontier).at[jnp.clip(dst, 0, V - 1)].add(
+        jnp.where(((dst >= 0) & (dst < V))[:, None], msgs, 0.0)
+    )
+    newly = (acc > 0) & (visited == 0)
+    nxt = newly.astype(jnp.float32)
+    ndist = jnp.where(newly & (dist < 0), hop, dist)
+    nvis = jnp.maximum(visited, nxt)
+    return nxt, ndist, nvis
+
+
+def bfs_ref(frontier, src, dst, emask, max_hops: int):
+    """Full BFS distances via repeated reference hops."""
+    visited = frontier
+    dist = jnp.where(frontier > 0, 0, -1).astype(jnp.int32)
+    for h in range(1, max_hops + 1):
+        frontier, dist, visited = frontier_hop_ref(
+            frontier, visited, dist, src, dst, emask, h
+        )
+    return dist

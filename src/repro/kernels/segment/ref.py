@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the tiled segment-sum kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum_ref(vals: jnp.ndarray, seg_ids: jnp.ndarray, num_segments: int):
+    """vals [E, D], seg_ids int32 [E] (-1 entries are dropped)."""
+    ids = jnp.where(seg_ids >= 0, seg_ids, num_segments)
+    out = jax.ops.segment_sum(vals, ids, num_segments=num_segments + 1)
+    return out[:num_segments].astype(jnp.float32)

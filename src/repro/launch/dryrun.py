@@ -1,0 +1,194 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
+# ^ MUST run before any jax import (device count locks on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective artifacts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k [--multi-pod] [--small]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Success criterion (deliverable e): .lower().compile() succeeds for every
+cell on the 16x16 single-pod AND 2x16x16 multi-pod mesh. Results land in
+results/dryrun/<arch>__<shape>__<mesh>.json for the roofline analysis and
+EXPERIMENTS.md tables.
+"""
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.launch.mesh import make_production_mesh, make_small_mesh
+from repro.roofline import analysis as RA
+
+
+def _named(mesh, spec_tree, abstract_tree):
+    def mk(spec, aval):
+        return NamedSharding(mesh, spec if spec is not None else P())
+
+    return jax.tree_util.tree_map(
+        mk, spec_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, P) or x is None,
+    )
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, small: bool = False,
+             out_dir: str = "results/dryrun", donate: bool = True,
+             tag: str = "", cfg_override=None, extra_note: str = ""):
+    module = configs.get(arch)
+    skip = module.skip_reason(shape)
+    mesh_name = ("small-" if small else "") + ("2x16x16" if multi_pod else "16x16")
+    cell = f"{arch}__{shape}__{mesh_name}" + (f"__{tag}" if tag else "")
+    if skip:
+        print(f"[SKIP] {cell}: {skip}")
+        return {"cell": cell, "status": "skipped", "reason": skip}
+
+    mesh = (
+        make_small_mesh(multi_pod=multi_pod) if small
+        else make_production_mesh(multi_pod=multi_pod)
+    )
+    n_chips = 1
+    for s in mesh.devices.shape:
+        n_chips *= s
+
+    cfg = cfg_override if cfg_override is not None else (
+        module.full_config(shape) if _takes_shape(module) else module.full_config()
+    )
+    # Two accounting variants (see EXPERIMENTS.md §Roofline methodology):
+    #   unrolled (default): correct flops/wire trip-count accounting
+    #   looped  (REPRO_DRYRUN_NO_UNROLL=1): realistic memory footprint
+    if (
+        cfg_override is None
+        and hasattr(module, "dryrun_config")
+        and not os.environ.get("REPRO_DRYRUN_NO_UNROLL")
+    ):
+        cfg = module.dryrun_config(cfg, shape)
+    state = module.abstract_state(cfg, shape)
+    inputs = module.input_specs(shape, cfg)
+    step = module.build_step(shape, cfg)
+
+    state_specs = module.state_specs(cfg, mesh.axis_names, shape)
+    batch_specs = module.batch_specs(shape, cfg, mesh.axis_names)
+
+    in_shardings = (
+        _named(mesh, state_specs, state),
+        _named(mesh, batch_specs, inputs),
+    )
+
+    t0 = time.perf_counter()
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_shardings)
+        lowered = jitted.lower(state, inputs)
+        compiled = lowered.compile()
+    t_compile = time.perf_counter() - t0
+
+    mem = compiled.memory_analysis()
+    cost_list = compiled.cost_analysis()
+    cost = cost_list if isinstance(cost_list, dict) else (cost_list[0] if cost_list else {})
+    hlo = compiled.as_text()
+
+    mem_info = {}
+    for attr in (
+        "argument_size_in_bytes", "output_size_in_bytes",
+        "temp_size_in_bytes", "generated_code_size_in_bytes",
+        "alias_size_in_bytes",
+    ):
+        v = getattr(mem, attr, None)
+        if v is not None:
+            mem_info[attr] = int(v)
+    per_device = (
+        mem_info.get("argument_size_in_bytes", 0)
+        - mem_info.get("alias_size_in_bytes", 0)
+        + mem_info.get("output_size_in_bytes", 0)
+        + mem_info.get("temp_size_in_bytes", 0)
+    )
+
+    mf = RA.model_flops_estimate(arch, module, shape)
+    roof = RA.analyze(
+        arch, shape, mesh_name, n_chips,
+        {k: cost.get(k, 0.0) for k in ("flops", "bytes accessed")},
+        hlo, model_flops=mf, memory_per_device=per_device,
+    )
+
+    rec = {
+        "cell": cell,
+        "status": "ok",
+        "n_chips": n_chips,
+        "compile_s": t_compile,
+        "memory": mem_info,
+        "memory_per_device_gb": per_device / 2**30,
+        "fits_16gb": per_device <= 16 * 2**30,
+        "cost": {k: float(v) for k, v in cost.items() if isinstance(v, (int, float))},
+        "roofline": roof.to_dict(),
+        "note": extra_note,
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, cell + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print(
+        f"[OK] {cell}: compile={t_compile:.1f}s mem/dev={per_device/2**30:.2f}GiB "
+        f"flops/dev={roof.flops_per_device:.3g} wire/dev={roof.wire_bytes_per_device:.3g} "
+        f"dominant={roof.dominant}"
+    )
+    return rec
+
+
+def _takes_shape(module):
+    import inspect
+
+    try:
+        return len(inspect.signature(module.full_config).parameters) > 0
+    except (TypeError, ValueError):
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--arch_all_shapes", default=None,
+                    help="run every shape of one arch")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--small", action="store_true", help="2x2 test mesh")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in configs.all_arch_ids():
+            m = configs.get(a)
+            for s in m.shapes():
+                cells.append((a, s))
+    elif args.arch_all_shapes:
+        m = configs.get(args.arch_all_shapes)
+        cells = [(args.arch_all_shapes, s) for s in m.shapes()]
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    failures = 0
+    for a, s in cells:
+        for mp in meshes:
+            try:
+                run_cell(a, s, multi_pod=mp, small=args.small, out_dir=args.out)
+            except Exception as e:
+                failures += 1
+                print(f"[FAIL] {a}__{s}__{'2x16x16' if mp else '16x16'}: {type(e).__name__}: {e}")
+                traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

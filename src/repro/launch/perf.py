@@ -1,0 +1,144 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("REPRO_DRYRUN_XLA_FLAGS")
+    or "--xla_force_host_platform_device_count=512"
+)
+
+"""§Perf hillclimb driver: lower named variants of the three chosen cells
+and record their roofline terms side by side.
+
+    PYTHONPATH=src python -m repro.launch.perf --cell deepseek [--variant v1]
+
+Variants are explicit hypothesis->change pairs (EXPERIMENTS.md §Perf logs
+the napkin math); each lowers with the same machinery as the dry-run and
+lands in results/perf/<cell>__<variant>__<mesh>.json.
+"""
+import argparse
+import dataclasses
+
+from repro.launch.dryrun import run_cell
+
+
+def deepseek_variants():
+    """Memory-footprint hillclimb for deepseek-v3-671b x train_4k.
+
+    Baseline footprint 765.9 GiB/dev (looped accounting) — cannot run on
+    16 GiB HBM. Targets the two biggest saved-activation classes."""
+    from repro import configs
+
+    base = configs.get("deepseek-v3-671b").full_config()
+    return "deepseek-v3-671b", "train_4k", {
+        "v0_baseline": (base, "paper-faithful baseline (chunked attn, full remat)"),
+        "v1_attn_remat": (
+            dataclasses.replace(base, attn_remat=True),
+            "H: per-kv-chunk score/prob tensors saved for backward dominate "
+            "(~chunk x Sq x heads x layers); remat the chunk step => "
+            "recompute in bwd. Predict ~2-4x footprint drop.",
+        ),
+        "v2_microbatch": (
+            dataclasses.replace(base, attn_remat=True),
+            "H: remaining activations scale with per-device batch; 4 "
+            "microbatches => ~4x activation drop at +grad-accum cost.",
+        ),
+        "v3_chunk512": (
+            dataclasses.replace(base, attn_remat=True, attn_chunk=512),
+            "H: live chunk tensors halve with chunk 1024->512 (more scan "
+            "steps, same flops). Predict small further drop.",
+        ),
+    }
+
+
+def mace_variants():
+    """Collective hillclimb for mace x ogb_products (most collective-bound:
+    wire 4.9e10 B/dev vs 6.9e10 flops/dev at baseline)."""
+    from repro import configs
+
+    base = dataclasses.replace(
+        configs.get("mace").full_config(), scan_unroll=True
+    )  # unrolled accounting for the wire/flops terms
+    return "mace", "ogb_products", {
+        "v0_baseline": (base, "paper-faithful baseline (transform-then-gather)"),
+        "v1_gather_first": (
+            dataclasses.replace(base, gather_first=True),
+            "H: per-layer cross-shard traffic is the edge-side gather of "
+            "FOUR transformed feature tensors (w_s/w_v/w_t paths); gathering "
+            "the raw irreps once and transforming locally cuts gathered "
+            "volume ~(1+3+5)C*paths -> (1+3+5)C. Predict ~25-45% wire drop.",
+        ),
+        "v2_fp32to_bf16_msgs": (
+            dataclasses.replace(base, gather_first=True, dtype="bfloat16"),
+            "H: message/gather payloads in bf16 halve the remaining wire.",
+        ),
+        "v3_shard_nodes": (
+            dataclasses.replace(base, gather_first=True, shard_nodes=True),
+            "H (after v1/v2 refuted the gather hypothesis): collective_detail "
+            "shows all-reduce of segment-sum partials dominates (65 of 94 "
+            "GB). Constraining node states sharded turns the combine into "
+            "reduce-scatter (factor 2->1 and sharded output). Predict "
+            "~-35% total wire.",
+        ),
+        "v4_shard_nodes_bf16": (
+            dataclasses.replace(base, gather_first=True, shard_nodes=True,
+                                dtype="bfloat16"),
+            "H: with the combine now payload-bound, bf16 messages should "
+            "finally bite (v2 retested on top of v3).",
+        ),
+    }
+
+
+def grfusion_variants():
+    """The paper's own cell (memory-dominant): frontier state layout."""
+    from repro import configs
+
+    base = {**configs.get("grfusion").full_config(), "unroll_hops": True}
+    return "grfusion", "queries_twitter", {
+        "v0_baseline": (base, "replicated frontier/dist state (Appendix-B naive)"),
+        "v1_shard_queries": (
+            {**base, "shard_state": True},
+            "H: the [S,V] frontier/visited/dist arrays are replicated; "
+            "sharding the query axis S over (pod,data) divides the dominant "
+            "bytes/dev by 16-32x with no extra collectives (queries are "
+            "independent lanes). Appendix-B done right.",
+        ),
+        "v2_dist16": (
+            {**base, "shard_state": True, "dist_dtype": "int16"},
+            "H: dist[int32] is the largest remaining buffer; hop counts fit "
+            "int16 => halve it.",
+        ),
+    }
+
+
+CELLS = {
+    "deepseek": deepseek_variants,
+    "mace": mace_variants,
+    "grfusion": grfusion_variants,
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", required=True, choices=sorted(CELLS))
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/perf")
+    args = ap.parse_args()
+
+    arch, shape, variants = CELLS[args.cell]()
+    for name, (cfg, note) in variants.items():
+        if args.variant and name != args.variant:
+            continue
+        if args.cell == "deepseek" and name == "v2_microbatch":
+            os.environ["REPRO_LM_MICROBATCHES"] = "4"
+        else:
+            os.environ.pop("REPRO_LM_MICROBATCHES", None)
+        try:
+            run_cell(
+                arch, shape, multi_pod=args.multi_pod, out_dir=args.out,
+                tag=name, cfg_override=cfg, extra_note=note,
+            )
+        except Exception as e:  # noqa: BLE001
+            print(f"[FAIL] {name}: {type(e).__name__}: {e}")
+
+
+if __name__ == "__main__":
+    main()

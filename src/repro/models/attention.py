@@ -1,0 +1,228 @@
+"""Attention variants for the assigned LM architectures.
+
+  * GQA (tinyllama, gemma2, minicpm, grok-1) with RoPE,
+  * MLA (deepseek-v3): low-rank latent Q/KV compression; decode uses the
+    matrix-absorbed formulation over the compressed cache (the only cache
+    that fits 32k x batch-128 decode at 61 layers),
+  * sliding-window / logit-softcap options (gemma2),
+  * memory-efficient chunked attention (online softmax over KV chunks via
+    lax.scan) — the XLA-level flash attention used for long-context cells so
+    that no S x S score tensor ever materializes; the Pallas kernel
+    (kernels/flashattn) is the TPU hot path validated in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rope
+
+_NEG = -1e30
+
+
+def _mask(qg, kg, causal, window):
+    m = jnp.ones(jnp.broadcast_shapes(qg.shape, kg.shape), bool)
+    if causal:
+        m = m & (kg <= qg)
+    if window is not None:
+        m = m & (qg - kg < window)
+    return m
+
+
+def dense_attention(q, k, v, *, causal=True, window=None, softcap=None, q_offset=0):
+    """q [B,Sq,H,Dk], k [B,Sk,Hkv,Dk], v [B,Sk,Hkv,Dv] (Hkv divides H;
+    Dv may differ from Dk, e.g. MLA). Full-score reference."""
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    Hkv = k.shape[2]
+    q_ = q.reshape(B, Sq, Hkv, H // Hkv, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q_.astype(jnp.float32), k.astype(jnp.float32))
+    s = s / (D ** 0.5)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qg = q_offset + jnp.arange(Sq)[:, None]
+    kg = jnp.arange(k.shape[1])[None, :]
+    s = jnp.where(_mask(qg, kg, causal, window)[None, None, None], s, _NEG)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def chunked_attention(
+    q, k, v, *, causal=True, window=None, softcap=None, q_offset=0, chunk=1024,
+    remat_step=False, unroll=False,
+):
+    """Online-softmax over KV chunks; peak score tensor is [B,H,Sq,chunk].
+
+    ``remat_step`` recomputes each chunk's scores in the backward pass
+    instead of saving them (flash-attention-style memory behaviour at the
+    XLA level) — a §Perf knob measured against the default baseline."""
+    B, Sq, H, D = q.shape
+    Dv = v.shape[-1]
+    Sk, Hkv = k.shape[1], k.shape[2]
+    if Sk % chunk != 0:
+        return dense_attention(
+            q, k, v, causal=causal, window=window, softcap=softcap, q_offset=q_offset
+        )
+    n = Sk // chunk
+    g = H // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, D)
+    kc = k.astype(jnp.float32).reshape(B, n, chunk, Hkv, D).transpose(1, 0, 2, 3, 4)
+    vc = v.astype(jnp.float32).reshape(B, n, chunk, Hkv, Dv).transpose(1, 0, 2, 3, 4)
+    qg = q_offset + jnp.arange(Sq)
+
+    def step(carry, xs):
+        m, l, acc, j = carry
+        kj, vj = xs
+        s = jnp.einsum("bqhgd,bkhd->bqhgk", qf, kj) / (D ** 0.5)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        kg = j * chunk + jnp.arange(chunk)
+        msk = _mask(qg[:, None], kg[None, :], causal, window)  # [Sq, chunk]
+        s = jnp.where(msk[None, :, None, None, :], s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None]) * msk[None, :, None, None, :]
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum("bqhgk,bkhd->bqhgd", p, vj)
+        return (m_new, l_new, acc_new, j + 1), None
+
+    if remat_step:
+        step = jax.checkpoint(step)
+    m0 = jnp.full((B, Sq, Hkv, g), _NEG, jnp.float32)
+    l0 = jnp.zeros((B, Sq, Hkv, g), jnp.float32)
+    a0 = jnp.zeros((B, Sq, Hkv, g, Dv), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(
+        step, (m0, l0, a0, jnp.int32(0)), (kc, vc), unroll=n if unroll else 1
+    )
+    o = acc / jnp.maximum(l, 1e-30)[..., None]
+    return o.reshape(B, Sq, H, Dv).astype(q.dtype)
+
+
+def attention(q, k, v, *, impl="dense", **kw):
+    if impl == "chunked":
+        return chunked_attention(q, k, v, **kw)
+    kw.pop("chunk", None)
+    kw.pop("remat_step", None)
+    kw.pop("unroll", None)
+    if impl == "flash":
+        from repro.kernels.flashattn.ops import mha
+
+        return mha(q, k, v, **kw).astype(q.dtype)
+    return dense_attention(q, k, v, **kw)
+
+
+# ---------------------------------------------------------------------- GQA
+class GQAParams(NamedTuple):
+    wq: jnp.ndarray  # [d_model, H*D]
+    wk: jnp.ndarray  # [d_model, Hkv*D]
+    wv: jnp.ndarray
+    wo: jnp.ndarray  # [H*D, d_model]
+
+
+def gqa_init(rng, d_model, n_heads, n_kv, d_head, dtype):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    return GQAParams(
+        wq=dense_init(k1, d_model, n_heads * d_head, dtype=dtype),
+        wk=dense_init(k2, d_model, n_kv * d_head, dtype=dtype),
+        wv=dense_init(k3, d_model, n_kv * d_head, dtype=dtype),
+        wo=dense_init(k4, n_heads * d_head, d_model, dtype=dtype),
+    )
+
+
+def gqa_qkv(p: GQAParams, x, positions, *, n_heads, n_kv, d_head, rope_base=10000.0):
+    B, S, _ = x.shape
+    q = (x @ p.wq).reshape(B, S, n_heads, d_head)
+    k = (x @ p.wk).reshape(B, S, n_kv, d_head)
+    v = (x @ p.wv).reshape(B, S, n_kv, d_head)
+    q = rope(q, positions, base=rope_base)
+    k = rope(k, positions, base=rope_base)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------- MLA
+class MLAParams(NamedTuple):
+    wq_a: jnp.ndarray  # [d_model, q_lora]
+    wq_b: jnp.ndarray  # [q_lora, H*(nope+rope)]
+    wkv_a: jnp.ndarray  # [d_model, kv_lora + rope]
+    wk_b: jnp.ndarray  # [kv_lora, H*nope]
+    wv_b: jnp.ndarray  # [kv_lora, H*v_dim]
+    wo: jnp.ndarray  # [H*v_dim, d_model]
+
+
+def mla_init(rng, d_model, n_heads, q_lora, kv_lora, nope, rope_d, v_dim, dtype):
+    ks = jax.random.split(rng, 6)
+    return MLAParams(
+        wq_a=dense_init(ks[0], d_model, q_lora, dtype=dtype),
+        wq_b=dense_init(ks[1], q_lora, n_heads * (nope + rope_d), dtype=dtype),
+        wkv_a=dense_init(ks[2], d_model, kv_lora + rope_d, dtype=dtype),
+        wk_b=dense_init(ks[3], kv_lora, n_heads * nope, dtype=dtype),
+        wv_b=dense_init(ks[4], kv_lora, n_heads * v_dim, dtype=dtype),
+        wo=dense_init(ks[5], n_heads * v_dim, d_model, dtype=dtype),
+    )
+
+
+def mla_train(p: MLAParams, x, positions, *, n_heads, nope, rope_d, v_dim,
+              impl="dense", chunk=1024, remat_step=False, unroll=False):
+    """Full (uncompressed) MLA attention for train/prefill."""
+    B, S, _ = x.shape
+    q = (x @ p.wq_a) @ p.wq_b
+    q = q.reshape(B, S, n_heads, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions)
+
+    ckv = x @ p.wkv_a  # [B, S, kv_lora + rope_d]
+    c, k_rope = ckv[..., :-rope_d], ckv[..., -rope_d:]
+    k_rope = rope(k_rope[:, :, None, :], positions)  # shared single rope head
+    k_nope = (c @ p.wk_b).reshape(B, S, n_heads, nope)
+    v = (c @ p.wv_b).reshape(B, S, n_heads, v_dim)
+
+    k_rope_b = jnp.broadcast_to(k_rope, (B, S, n_heads, rope_d))
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    o = attention(
+        q_full, k_full, v, impl=impl, causal=True, chunk=chunk,
+        remat_step=remat_step, unroll=unroll,
+    )
+    return o.reshape(B, S, n_heads * v_dim) @ p.wo
+
+
+def mla_decode(p: MLAParams, x, cache_c, cache_kr, pos, *, n_heads, nope, rope_d, v_dim):
+    """Matrix-absorbed decode over the compressed cache.
+
+    cache_c [B, T, kv_lora], cache_kr [B, T, rope_d]; x [B, 1, d_model];
+    pos int32 [B]. The new token's latent is scattered into the cache, then
+    attention runs entirely in the kv_lora latent space (W_uk absorbed into
+    q, W_uv applied to the latent attention output).
+    Returns (out [B, 1, d_model], cache_c, cache_kr) with updated caches.
+    """
+    B = x.shape[0]
+    kv_lora = cache_c.shape[-1]
+    q = ((x @ p.wq_a) @ p.wq_b).reshape(B, 1, n_heads, nope + rope_d)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, pos[:, None])
+
+    ckv = x @ p.wkv_a
+    new_c, new_kr = ckv[..., :-rope_d], ckv[..., -rope_d:]
+    new_kr = rope(new_kr[:, :, None, :], pos[:, None])[:, :, 0, :]
+    bidx = jnp.arange(B)
+    cache_c = cache_c.at[bidx, pos].set(new_c[:, 0].astype(cache_c.dtype))
+    cache_kr = cache_kr.at[bidx, pos].set(new_kr[:, 0].astype(cache_kr.dtype))
+
+    # absorb W_uk into q: q_tilde [B, H, kv_lora]
+    wk = p.wk_b.reshape(kv_lora, n_heads, nope)
+    q_t = jnp.einsum("bqhn,khn->bhk", q_nope.astype(jnp.float32), wk.astype(jnp.float32))
+    scores = jnp.einsum("bhk,btk->bht", q_t, cache_c.astype(jnp.float32))
+    scores += jnp.einsum("bqhr,btr->bht", q_rope.astype(jnp.float32), cache_kr.astype(jnp.float32))
+    scale = 1.0 / ((nope + rope_d) ** 0.5)
+    T = cache_c.shape[1]
+    valid = jnp.arange(T)[None, None, :] <= pos[:, None, None]
+    scores = jnp.where(valid, scores * scale, _NEG)
+    pr = jax.nn.softmax(scores, axis=-1)
+    o_lat = jnp.einsum("bht,btk->bhk", pr, cache_c.astype(jnp.float32))
+    wv = p.wv_b.reshape(kv_lora, n_heads, v_dim)
+    o = jnp.einsum("bhk,khv->bhv", o_lat, wv.astype(jnp.float32))
+    out = o.reshape(B, 1, n_heads * v_dim).astype(x.dtype) @ p.wo
+    return out, cache_c, cache_kr

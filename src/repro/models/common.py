@@ -1,0 +1,86 @@
+"""Shared model building blocks (no flax offline — params are plain pytrees,
+modules are (init, apply) pure-function pairs)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(rng, d_in: int, d_out: int, *, dtype=jnp.float32, scale: float | None = None):
+    s = scale if scale is not None else (1.0 / max(d_in, 1)) ** 0.5
+    return (jax.random.normal(rng, (d_in, d_out)) * s).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, *, dtype=jnp.float32):
+    return (jax.random.normal(rng, (vocab, d)) * 0.02).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return jnp.zeros((d,), dtype)  # gemma-style (1 + scale); zero-init
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def silu(x):
+    return x * jax.nn.sigmoid(x)
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+ACT = {"silu": silu, "gelu": gelu, "relu": jax.nn.relu}
+
+
+def rope(x, positions, *, base: float = 10000.0):
+    """Rotary embedding. x [..., S, H, D]; positions [..., S]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    sin = jnp.sin(ang)[..., None, :]  # broadcast over heads
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def mlp_init(rng, dims, *, dtype=jnp.float32):
+    ks = jax.random.split(rng, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(ks[i], dims[i], dims[i + 1], dtype=dtype)
+        for i in range(len(dims) - 1)
+    } | {
+        f"b{i}": jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)
+    }
+
+
+def mlp_apply(params, x, *, act="silu", final_act=False):
+    n = len([k for k in params if k.startswith("w")])
+    f = ACT[act]
+    for i in range(n):
+        x = x @ params[f"w{i}"] + params[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = f(x)
+    return x
+
+
+def softmax_cross_entropy(logits, labels, *, z_loss: float = 0.0):
+    """Token-level CE; logits [..., V] f32, labels int [...]. Returns mean."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    loss = lse - ll
+    if z_loss:
+        loss = loss + z_loss * jnp.square(lse)
+    return jnp.mean(loss)
+
+
+def count_params(tree) -> int:
+    return sum(int(x.size) for x in jax.tree_util.tree_leaves(tree))

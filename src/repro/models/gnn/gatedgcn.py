@@ -1,0 +1,94 @@
+"""GatedGCN (Bresson & Laurent; benchmarked in arXiv:2003.00982).
+
+Config (assigned): 16 layers, d_hidden=70, gated edge aggregation:
+    e'_ij = A h_i + B h_j + C e_ij
+    h'_i  = U h_i + sum_j sigma(e'_ij) * (V h_j) / (sum_j sigma(e'_ij) + eps)
+with residuals + norm on both node and edge states. Node classification.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm, rmsnorm_init
+from repro.models.gnn.common import seg_sum
+
+
+@dataclasses.dataclass(frozen=True)
+class GatedGCNConfig:
+    name: str = "gatedgcn"
+    n_layers: int = 16
+    d_hidden: int = 70
+    d_in: int = 1433
+    d_edge_in: int = 1
+    n_classes: int = 16
+    dtype: str = "float32"
+    scan_unroll: bool = False  # dry-run roofline accounting
+
+
+def init_params(rng, cfg: GatedGCNConfig):
+    ks = jax.random.split(rng, 3 + cfg.n_layers)
+    d = cfg.d_hidden
+    layers = []
+    for i in range(cfg.n_layers):
+        kk = jax.random.split(ks[3 + i], 5)
+        layers.append(
+            {
+                "A": dense_init(kk[0], d, d),
+                "B": dense_init(kk[1], d, d),
+                "C": dense_init(kk[2], d, d),
+                "U": dense_init(kk[3], d, d),
+                "V": dense_init(kk[4], d, d),
+                "ln_h": rmsnorm_init(d),
+                "ln_e": rmsnorm_init(d),
+            }
+        )
+    stacked = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "in_h": dense_init(ks[0], cfg.d_in, d),
+        "in_e": dense_init(ks[1], cfg.d_edge_in, d),
+        "head": dense_init(ks[2], d, cfg.n_classes),
+        "layers": stacked,
+    }
+
+
+def forward(params, batch, cfg: GatedGCNConfig):
+    """batch: x [N, d_in], edge_attr [E, d_edge_in], src/dst [E].
+    Returns logits [N, n_classes]."""
+    x, ea = batch["x"], batch["edge_attr"]
+    src, dst = batch["src"], batch["dst"]
+    N = x.shape[0]
+    eok = ((src >= 0) & (dst >= 0))[:, None].astype(x.dtype)
+    s = jnp.clip(src, 0, N - 1)
+    t = jnp.clip(dst, 0, N - 1)
+
+    h = x @ params["in_h"]
+    e = ea @ params["in_e"]
+
+    def block(carry, p_l):
+        h, e = carry
+        hi = jnp.take(h, t, axis=0)  # destination i
+        hj = jnp.take(h, s, axis=0)  # source j
+        e_new = hi @ p_l["A"] + hj @ p_l["B"] + e @ p_l["C"]
+        gate = jax.nn.sigmoid(e_new) * eok
+        num = seg_sum(gate * (hj @ p_l["V"]), t, N)
+        den = seg_sum(gate, t, N)
+        h_new = h @ p_l["U"] + num / (den + 1e-6)
+        h = h + rmsnorm(jax.nn.relu(h_new), p_l["ln_h"])
+        e = e + rmsnorm(jax.nn.relu(e_new), p_l["ln_e"])
+        return (h, e), None
+
+    (h, e), _ = jax.lax.scan(block, (h, e), params["layers"],
+        unroll=jax.tree_util.tree_leaves(params["layers"])[0].shape[0] if cfg.scan_unroll else 1)
+    return h @ params["head"]
+
+
+def loss_fn(params, batch, cfg: GatedGCNConfig):
+    logits = forward(params, batch, cfg).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = batch.get("label_mask", jnp.ones_like(labels, jnp.float32))
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)

@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN with capacity-based sort-free dispatch.
+
+Covers deepseek-v3 (256 routed top-8 + 1 shared, sigmoid router with
+aux-free bias) and grok-1 (8 experts top-2, softmax router).
+
+Dispatch is the accelerator-standard scatter form: each (token, k) slot gets
+a position within its expert's capacity buffer (rank computed by sorting the
+flattened expert assignments — no [T, E] one-hot cumsum, no [T, E, C]
+dispatch tensor), tokens are scattered to [E, C, d], experts run as one
+batched einsum (expert-parallel over the mesh 'model'/'expert' axis), and
+results gather back weighted by the router. Tokens beyond capacity drop
+(capacity_factor controls the loss rate) — the GShard/Switch contract.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, silu
+
+
+class MoEParams(NamedTuple):
+    w_router: jnp.ndarray  # [d_model, E]
+    b_router: jnp.ndarray  # [E] aux-free bias (deepseek) or zeros
+    w_gate: jnp.ndarray  # [E, d_model, d_ff] (SwiGLU gate)
+    w_up: jnp.ndarray  # [E, d_model, d_ff]
+    w_down: jnp.ndarray  # [E, d_ff, d_model]
+
+
+def moe_init(rng, d_model, d_ff, n_experts, dtype):
+    ks = jax.random.split(rng, 4)
+    return MoEParams(
+        w_router=dense_init(ks[0], d_model, n_experts, dtype=jnp.float32),
+        b_router=jnp.zeros((n_experts,), jnp.float32),
+        w_gate=(jax.random.normal(ks[1], (n_experts, d_model, d_ff)) * (1 / d_model**0.5)).astype(dtype),
+        w_up=(jax.random.normal(ks[2], (n_experts, d_model, d_ff)) * (1 / d_model**0.5)).astype(dtype),
+        w_down=(jax.random.normal(ks[3], (n_experts, d_ff, d_model)) * (1 / d_ff**0.5)).astype(dtype),
+    )
+
+
+def route(p: MoEParams, x2d, *, top_k: int, router: str):
+    """x2d [T, d]. Returns (idx [T,K] int32, weights [T,K] f32, aux_loss)."""
+    logits = x2d.astype(jnp.float32) @ p.w_router  # [T, E]
+    E = logits.shape[-1]
+    if router == "deepseek_sigmoid":
+        scores = jax.nn.sigmoid(logits)
+        sel = scores + p.b_router[None, :]  # aux-free bias steers selection only
+        _, idx = jax.lax.top_k(sel, top_k)
+        w = jnp.take_along_axis(scores, idx, axis=-1)
+        w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    else:  # softmax top-k (grok-1 / mixtral style)
+        _, idx = jax.lax.top_k(logits, top_k)
+        sel_logits = jnp.take_along_axis(logits, idx, axis=-1)
+        w = jax.nn.softmax(sel_logits, axis=-1)
+    # load-balance aux loss (Switch): E * sum_e f_e * p_e
+    probs = jax.nn.softmax(logits, axis=-1)
+    onehot_frac = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    f = onehot_frac / jnp.maximum(idx.size, 1)
+    pbar = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(f * pbar)
+    return idx.astype(jnp.int32), w, aux
+
+
+def moe_apply(
+    p: MoEParams,
+    x,  # [B, S, d]
+    *,
+    top_k: int,
+    capacity_factor: float = 1.25,
+    router: str = "softmax",
+):
+    B, S, d = x.shape
+    T = B * S
+    x2 = x.reshape(T, d)
+    E = p.w_router.shape[-1]
+    idx, w, aux = route(p, x2, top_k=top_k, router=router)
+
+    C = max(int(T * top_k * capacity_factor / E), 1)
+    # position of each (token, k) slot within its expert
+    flat_e = idx.reshape(-1)  # [T*K]
+    order = jnp.argsort(flat_e)  # stable
+    sorted_e = jnp.take(flat_e, order)
+    starts = jnp.searchsorted(sorted_e, jnp.arange(E, dtype=jnp.int32))
+    pos_sorted = jnp.arange(T * top_k, dtype=jnp.int32) - jnp.take(starts, sorted_e)
+    pos = jnp.zeros((T * top_k,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)  # OOB -> dropped
+
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), top_k)
+    buf = (
+        jnp.zeros((E * C, d), x.dtype)
+        .at[slot]
+        .add(jnp.take(x2, tok, axis=0), mode="drop")
+    ).reshape(E, C, d)
+
+    h_g = jnp.einsum("ecd,edf->ecf", buf, p.w_gate)
+    h_u = jnp.einsum("ecd,edf->ecf", buf, p.w_up)
+    h = silu(h_g) * h_u
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p.w_down).reshape(E * C, d)
+
+    gathered = jnp.take(out_buf, jnp.clip(slot, 0, E * C - 1), axis=0)
+    gathered = gathered * (keep & (slot < E * C))[:, None].astype(x.dtype)
+    weighted = gathered * w.reshape(-1)[:, None].astype(x.dtype)
+    y = jax.ops.segment_sum(weighted, tok, num_segments=T)
+    return y.reshape(B, S, d).astype(x.dtype), aux

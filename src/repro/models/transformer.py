@@ -1,0 +1,415 @@
+"""Config-driven transformer LM covering the five assigned LM architectures:
+
+  deepseek-v3-671b  MLA attention, 3 dense + 58 MoE layers (1 shared + 256
+                    routed top-8, sigmoid router w/ aux-free bias), MTP head
+  grok-1-314b       GQA(kv=8), MoE 8 experts top-2 (softmax router)
+  tinyllama-1.1b    dense GQA(kv=4) llama2-style SwiGLU
+  gemma2-2b         GQA(kv=4), local/global alternating attention (window
+                    4096), attn+final logit softcaps, pre+post sandwich norms,
+                    GeGLU
+  minicpm-2b        dense llama-like (WSD schedule lives in the optimizer)
+
+One parameter pytree, layers stacked for lax.scan, remat policy per size
+class, dense/chunked/flash attention impls, and a decode path with GQA KV or
+absorbed-MLA compressed caches.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models.common import (
+    ACT, dense_init, embed_init, rmsnorm, rmsnorm_init, softmax_cross_entropy,
+)
+from repro.models.moe import MoEParams, moe_apply, moe_init
+
+BIG_WINDOW = 1 << 30
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    d_ff: int
+    vocab: int
+    # attention
+    attn_kind: str = "gqa"  # 'gqa' | 'mla'
+    q_lora: int = 1536
+    kv_lora: int = 512
+    qk_nope: int = 128
+    qk_rope: int = 64
+    v_head: int = 128
+    rope_base: float = 10000.0
+    window: Optional[int] = None  # sliding window for local layers
+    local_global: bool = False  # gemma2 alternation (even layers local)
+    attn_softcap: Optional[float] = None
+    final_softcap: Optional[float] = None
+    post_norms: bool = False  # gemma2 sandwich norms
+    # ffn
+    act: str = "silu"
+    n_experts: int = 0  # 0 = dense
+    top_k: int = 2
+    n_shared: int = 0
+    d_ff_expert: int = 0
+    first_dense: int = 0
+    capacity_factor: float = 1.25
+    router: str = "softmax"  # | 'deepseek_sigmoid'
+    aux_coef: float = 0.01
+    # heads
+    tie_embeddings: bool = False
+    emb_scale: bool = False  # gemma-style sqrt(d) embedding scale
+    mtp: bool = False
+    mtp_weight: float = 0.3
+    # execution
+    dtype: str = "float32"
+    attn_impl: str = "dense"  # 'dense' | 'chunked' | 'flash'
+    attn_chunk: int = 1024
+    attn_remat: bool = False  # remat each kv-chunk (flash-style memory)
+    remat: str = "none"  # 'none' | 'full'
+    # dry-run accounting: XLA cost_analysis counts while-loop bodies once,
+    # so lowering for roofline unrolls the layer scans (trip count 1)
+    scan_unroll: bool = False
+
+    @property
+    def jdtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def n_moe_layers(self):
+        return 0 if self.n_experts == 0 else self.n_layers - self.first_dense
+
+    @property
+    def n_dense_layers(self):
+        return self.n_layers if self.n_experts == 0 else self.first_dense
+
+
+# --------------------------------------------------------------------- init
+def _dense_ffn_init(rng, cfg: LMConfig, d_ff: int):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    dt = cfg.jdtype
+    return {
+        "w_gate": dense_init(k1, cfg.d_model, d_ff, dtype=dt),
+        "w_up": dense_init(k2, cfg.d_model, d_ff, dtype=dt),
+        "w_down": dense_init(k3, d_ff, cfg.d_model, dtype=dt),
+    }
+
+
+def _layer_init(rng, cfg: LMConfig, *, moe: bool):
+    ka, kf, ks = jax.random.split(rng, 3)
+    dt = cfg.jdtype
+    if cfg.attn_kind == "mla":
+        attn = A.mla_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.q_lora, cfg.kv_lora,
+            cfg.qk_nope, cfg.qk_rope, cfg.v_head, dt,
+        )._asdict()
+    else:
+        attn = A.gqa_init(
+            ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, dt
+        )._asdict()
+    p = {
+        "attn": attn,
+        "ln1": rmsnorm_init(cfg.d_model),
+        "ln2": rmsnorm_init(cfg.d_model),
+    }
+    if cfg.post_norms:
+        p["ln1_post"] = rmsnorm_init(cfg.d_model)
+        p["ln2_post"] = rmsnorm_init(cfg.d_model)
+    if moe:
+        p["moe"] = moe_init(kf, cfg.d_model, cfg.d_ff_expert, cfg.n_experts, dt)._asdict()
+        if cfg.n_shared:
+            p["shared"] = _dense_ffn_init(ks, cfg, cfg.n_shared * cfg.d_ff_expert)
+    else:
+        p["ffn"] = _dense_ffn_init(kf, cfg, cfg.d_ff)
+    return p
+
+
+def _stack_init(rng, cfg: LMConfig, n: int, *, moe: bool):
+    if n == 0:
+        return None
+    keys = jax.random.split(rng, n)
+    layers = [_layer_init(k, cfg, moe=moe) for k in keys]
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(rng, cfg: LMConfig) -> Dict[str, Any]:
+    k_e, k_d, k_m, k_h, k_t = jax.random.split(rng, 5)
+    p: Dict[str, Any] = {
+        "embed": embed_init(k_e, cfg.vocab, cfg.d_model, dtype=cfg.jdtype),
+        "final_norm": rmsnorm_init(cfg.d_model),
+        "dense_layers": _stack_init(k_d, cfg, cfg.n_dense_layers, moe=False),
+        "moe_layers": _stack_init(k_m, cfg, cfg.n_moe_layers, moe=True),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_h, cfg.d_model, cfg.vocab, dtype=cfg.jdtype)
+    if cfg.mtp:
+        p["mtp"] = {
+            "proj": dense_init(k_t, 2 * cfg.d_model, cfg.d_model, dtype=cfg.jdtype),
+            "block": _layer_init(k_t, cfg, moe=False),
+            "norm": rmsnorm_init(cfg.d_model),
+        }
+    return p
+
+
+# ------------------------------------------------------------------ forward
+def _ffn_apply(p, x, cfg: LMConfig):
+    f = ACT[cfg.act]
+    h = f(x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]
+
+
+def _attn_apply(p, x, positions, cfg: LMConfig, window_val):
+    if cfg.attn_kind == "mla":
+        return A.mla_train(
+            A.MLAParams(**p), x, positions,
+            n_heads=cfg.n_heads, nope=cfg.qk_nope, rope_d=cfg.qk_rope,
+            v_dim=cfg.v_head, impl=cfg.attn_impl, chunk=cfg.attn_chunk,
+            remat_step=cfg.attn_remat, unroll=cfg.scan_unroll,
+        )
+    q, k, v = A.gqa_qkv(
+        A.GQAParams(**p), x, positions,
+        n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+        rope_base=cfg.rope_base,
+    )
+    o = A.attention(
+        q, k, v, impl=cfg.attn_impl, causal=True, window=window_val,
+        softcap=cfg.attn_softcap, chunk=cfg.attn_chunk,
+        remat_step=cfg.attn_remat, unroll=cfg.scan_unroll,
+    )
+    B, S = x.shape[:2]
+    return o.reshape(B, S, cfg.n_heads * cfg.d_head) @ p["wo"]
+
+
+def _block(p, x, positions, window_val, *, cfg: LMConfig, moe: bool):
+    h = rmsnorm(x, p["ln1"])
+    a = _attn_apply(p["attn"], h, positions, cfg, window_val)
+    if cfg.post_norms:
+        a = rmsnorm(a, p["ln1_post"])
+    x = x + a
+    h = rmsnorm(x, p["ln2"])
+    aux = jnp.float32(0.0)
+    if moe:
+        f, aux = moe_apply(
+            MoEParams(**p["moe"]), h,
+            top_k=cfg.top_k, capacity_factor=cfg.capacity_factor,
+            router=cfg.router,
+        )
+        if cfg.n_shared:
+            f = f + _ffn_apply(p["shared"], h, cfg)
+    else:
+        f = _ffn_apply(p["ffn"], h, cfg)
+    if cfg.post_norms:
+        f = rmsnorm(f, p["ln2_post"])
+    return x + f, aux
+
+
+def _window_for_layer(cfg: LMConfig, li):
+    if cfg.local_global:
+        # even layers local (sliding window), odd layers global
+        return jnp.where(li % 2 == 0, cfg.window, BIG_WINDOW)
+    return cfg.window  # static (None or int)
+
+
+def _scan_stack(stack, x, positions, cfg: LMConfig, *, moe: bool, li0: int):
+    if stack is None:
+        return x, jnp.float32(0.0)
+    n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+
+    def body(carry, inp):
+        xc, aux = carry
+        p_l, li = inp
+        w = _window_for_layer(cfg, li)
+        fn = partial(_block, cfg=cfg, moe=moe)
+        if cfg.remat == "full":
+            fn = jax.checkpoint(fn, static_argnums=())
+        xc, a = fn(p_l, xc, positions, w)
+        return (xc, aux + a), None
+
+    lis = li0 + jnp.arange(n)
+    (x, aux), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0)), (stack, lis),
+        unroll=n if cfg.scan_unroll else 1,
+    )
+    return x, aux
+
+
+def forward(params, tokens, cfg: LMConfig):
+    """tokens int32 [B, S] -> (logits f32 [B, S, V], aux_loss)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+    x, aux1 = _scan_stack(params["dense_layers"], x, positions, cfg, moe=False, li0=0)
+    x, aux2 = _scan_stack(
+        params["moe_layers"], x, positions, cfg, moe=True, li0=cfg.n_dense_layers
+    )
+    h = rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ head).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, aux1 + aux2, h
+
+
+def loss_fn(params, batch, cfg: LMConfig):
+    logits, aux, h = forward(params, batch["tokens"], cfg)
+    loss = softmax_cross_entropy(logits, batch["labels"])
+    if cfg.n_experts:
+        loss = loss + cfg.aux_coef * aux
+    if cfg.mtp:
+        # depth-1 multi-token prediction (deepseek-v3): combine h_i with the
+        # embedding of token_{i+1}, one extra block, predict label_{i+1} (=t_{i+2})
+        tok_next = batch["tokens"][:, 1:]
+        h_in = jnp.concatenate(
+            [
+                rmsnorm(h[:, :-1], params["mtp"]["norm"]),
+                jnp.take(params["embed"], tok_next, axis=0),
+            ],
+            axis=-1,
+        ) @ params["mtp"]["proj"]
+        pos = jnp.broadcast_to(
+            jnp.arange(h_in.shape[1])[None, :], h_in.shape[:2]
+        )
+        h_mtp, _ = _block(params["mtp"]["block"], h_in, pos, None, cfg=cfg, moe=False)
+        head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        mtp_logits = (rmsnorm(h_mtp, params["final_norm"]) @ head).astype(jnp.float32)
+        # position i of h_in predicts t_{i+2} = labels[i+1]
+        loss = loss + cfg.mtp_weight * softmax_cross_entropy(
+            mtp_logits, batch["labels"][:, 1:]
+        )
+    return loss
+
+
+# ------------------------------------------------------------------- decode
+def init_cache(cfg: LMConfig, batch: int, max_len: int, dtype=None):
+    dt = dtype or cfg.jdtype
+    L = cfg.n_layers
+    if cfg.attn_kind == "mla":
+        return {
+            "c": jnp.zeros((L, batch, max_len, cfg.kv_lora), dt),
+            "kr": jnp.zeros((L, batch, max_len, cfg.qk_rope), dt),
+        }
+    return {
+        "k": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.d_head), dt),
+        "v": jnp.zeros((L, batch, max_len, cfg.n_kv_heads, cfg.d_head), dt),
+    }
+
+
+def _stacked_layers(params, cfg: LMConfig):
+    """All layers as one stacked pytree (dense prefix + moe suffix aligned
+    by filling missing branches with zeros is messy — we scan the two stacks
+    separately in decode as well)."""
+    return params["dense_layers"], params["moe_layers"]
+
+
+def decode_step(params, cache, tokens, pos, cfg: LMConfig):
+    """One-token decode. tokens [B, 1], pos int32 [B] (current position).
+
+    Returns (logits [B, 1, V] f32, new_cache).
+    """
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+
+    def layer_decode(x, p_l, cache_l, li):
+        h = rmsnorm(x, p_l["ln1"])
+        if cfg.attn_kind == "mla":
+            a, nc, nkr = A.mla_decode(
+                A.MLAParams(**p_l["attn"]), h, cache_l["c"], cache_l["kr"], pos,
+                n_heads=cfg.n_heads, nope=cfg.qk_nope, rope_d=cfg.qk_rope,
+                v_dim=cfg.v_head,
+            )
+            new_cache_l = {"c": nc, "kr": nkr}
+        else:
+            q, k, v = A.gqa_qkv(
+                A.GQAParams(**p_l["attn"]), h, pos[:, None],
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, d_head=cfg.d_head,
+                rope_base=cfg.rope_base,
+            )
+            bidx = jnp.arange(B)
+            ck = cache_l["k"].at[bidx, pos].set(k[:, 0].astype(cache_l["k"].dtype))
+            cv = cache_l["v"].at[bidx, pos].set(v[:, 0].astype(cache_l["v"].dtype))
+            T = ck.shape[1]
+            w = _window_for_layer(cfg, li)
+            qg = pos[:, None, None]  # [B,1,1]
+            kg = jnp.arange(T)[None, None, :]
+            mask = kg <= qg
+            if w is not None:
+                mask = mask & (qg - kg < w)
+            # scores over cache
+            Hkv, g = cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads
+            q_ = q.reshape(B, 1, Hkv, g, cfg.d_head)
+            s = jnp.einsum("bqhgd,bthd->bhgqt", q_.astype(jnp.float32), ck.astype(jnp.float32))
+            s = s / (cfg.d_head ** 0.5)
+            if cfg.attn_softcap:
+                s = cfg.attn_softcap * jnp.tanh(s / cfg.attn_softcap)
+            s = jnp.where(mask[:, None, None], s, -1e30)
+            pr = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("bhgqt,bthd->bqhgd", pr, cv.astype(jnp.float32))
+            o = o.reshape(B, 1, cfg.n_heads * cfg.d_head).astype(x.dtype)
+            a = o @ p_l["attn"]["wo"]
+            new_cache_l = {"k": ck, "v": cv}
+        if cfg.post_norms:
+            a = rmsnorm(a, p_l["ln1_post"])
+        x = x + a
+        h = rmsnorm(x, p_l["ln2"])
+        if "moe" in p_l:
+            f, _ = moe_apply(
+                MoEParams(**p_l["moe"]), h,
+                top_k=cfg.top_k,
+                capacity_factor=max(4.0, cfg.capacity_factor),
+                router=cfg.router,
+            )
+            if cfg.n_shared:
+                f = f + _ffn_apply(p_l["shared"], h, cfg)
+        else:
+            f = _ffn_apply(p_l["ffn"], h, cfg)
+        if cfg.post_norms:
+            f = rmsnorm(f, p_l["ln2_post"])
+        return x + f, new_cache_l
+
+    nd = cfg.n_dense_layers
+    slice_cache = lambda c, lo, n: jax.tree_util.tree_map(lambda a: a[lo : lo + n], c)
+
+    new_cache_parts = []
+    for stack, lo, moe in (
+        (params["dense_layers"], 0, False),
+        (params["moe_layers"], nd, True),
+    ):
+        if stack is None:
+            continue
+        n = jax.tree_util.tree_leaves(stack)[0].shape[0]
+        csub = slice_cache(cache, lo, n)
+
+        def body(x, inp):
+            p_l, c_l, li = inp
+            return layer_decode(x, p_l, c_l, li)
+
+        x, ncache = jax.lax.scan(
+            body, x, (stack, csub, lo + jnp.arange(n)),
+            unroll=n if cfg.scan_unroll else 1,
+        )
+        new_cache_parts.append(ncache)
+
+    if len(new_cache_parts) == 1:
+        new_cache = new_cache_parts[0]
+    else:
+        new_cache = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), *new_cache_parts
+        )
+    h = rmsnorm(x, params["final_norm"])
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (h @ head).astype(jnp.float32)
+    if cfg.final_softcap:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits, new_cache

@@ -1,0 +1,202 @@
+"""Three-term roofline from compiled dry-run artifacts.
+
+    compute term    = HLO_FLOPs(per device) / peak_FLOP/s
+    memory term     = HLO_bytes(per device) / HBM_bw
+    collective term = wire_bytes(per device) / link_bw
+
+``cost_analysis`` supplies per-device FLOPs/bytes; collective wire bytes
+are parsed from the post-SPMD optimized HLO (`compiled.as_text()`): every
+all-reduce / all-gather / reduce-scatter / all-to-all / collective-permute
+op contributes factor x operand-bytes (factors in hw.py — ring algorithm
+accounting). MODEL_FLOPS (6ND-style analytic estimates) expose how much of
+the compiled compute is useful (remat/dispatch waste shows up here).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+from typing import Dict, Optional
+
+from repro.roofline import hw
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"\b(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c64|c128)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.+?)\s+[\w\-]+\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-kind wire bytes (per device) from optimized post-SPMD HLO.
+
+    Operands are name references in compiled HLO, so this is a two-pass
+    parse: (1) table of every op's output bytes from the definition LHS,
+    (2) for each collective op, sum its operands' bytes via the table."""
+    defs: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            defs[m.group(1)] = _shape_bytes(m.group(2))
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind, suffix = m.group(1), m.group(2)
+        if suffix == "-done":
+            continue  # bytes counted at the -start op
+        paren = re.search(re.escape(kind + (suffix or "")) + r"\((.*?)\)", line)
+        opb = 0
+        if paren:
+            for name in _OPERAND_RE.findall(paren.group(1)):
+                opb += defs.get(name, 0)
+        if opb == 0:  # fallback: use the output shape on the LHS
+            mdef = _DEF_RE.match(line)
+            if mdef:
+                opb = _shape_bytes(mdef.group(2))
+        # ring wire volume per chip depends on the group size g:
+        #   all-gather: sends own shard (g-1) times
+        #   all-reduce: 2(g-1)/g x buffer ~ 2x
+        #   reduce-scatter / all-to-all: (g-1)/g x buffer ~ 1x
+        g = 1
+        mg = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+        if mg:
+            g = int(mg.group(2))
+        else:
+            mg2 = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+            if mg2:
+                g = mg2.group(1).count(",") + 1
+        if kind == "all-gather":
+            factor = max(g - 1, 1)
+        else:
+            factor = hw.COLLECTIVE_FACTORS[kind]
+        out[kind] = out.get(kind, 0.0) + opb * factor
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None  # MODEL_FLOPS / (HLO_FLOPs * chips)
+    memory_per_device_bytes: Optional[float] = None
+    collective_detail: Optional[Dict[str, float]] = None
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def analyze(
+    arch: str,
+    shape: str,
+    mesh_name: str,
+    n_chips: int,
+    cost: Dict[str, float],
+    hlo_text: str,
+    *,
+    model_flops: Optional[float] = None,
+    memory_per_device: Optional[float] = None,
+) -> Roofline:
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    coll = collective_bytes(hlo_text)
+    wire = sum(coll.values())
+    compute_s = flops / hw.PEAK_FLOPS_BF16
+    memory_s = byts / hw.HBM_BW
+    collective_s = wire / hw.ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s, "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    useful = None
+    if model_flops:
+        useful = model_flops / max(flops * n_chips, 1.0)
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name,
+        flops_per_device=flops, bytes_per_device=byts,
+        wire_bytes_per_device=wire,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, model_flops=model_flops, useful_ratio=useful,
+        memory_per_device_bytes=memory_per_device,
+        collective_detail=coll,
+    )
+
+
+# ------------------------------------------------------- MODEL_FLOPS (6ND)
+def model_flops_estimate(arch_id: str, module, shape: str) -> Optional[float]:
+    """Analytic useful-FLOPs per step: 6*N_active*D for LM training,
+    2*N_active*D for inference; family-specific estimates otherwise."""
+    fam = getattr(module, "FAMILY", None)
+    if fam == "lm":
+        import jax
+
+        cfg = module.full_config()
+        meta = module.shapes()[shape]
+        # active params: dense params + routed-expert fraction
+        aparams = 0
+        p = module.abstract_params(cfg)
+        leaves = jax.tree_util.tree_flatten_with_path(p)[0]
+        for path, leaf in leaves:
+            name = "/".join(str(getattr(k, "key", k)) for k in path)
+            n = 1
+            for d in leaf.shape:
+                n *= d
+            if "moe/w_" in name and "router" not in name:
+                n = int(n * cfg.top_k / max(cfg.n_experts, 1))
+            if "embed" in name or "lm_head" in name:
+                continue  # 6ND convention excludes embeddings
+            aparams += n
+        tokens = meta["batch"] * (meta["seq"] if meta["kind"] != "decode" else 1)
+        factor = 6.0 if meta["kind"] == "train" else 2.0
+        return factor * aparams * tokens
+    if fam == "gnn":
+        import jax
+
+        cfg = module.full_config(shape)
+        meta = module.shapes()[shape]
+        p = module.abstract_params(cfg)
+        n_params = sum(
+            int(__import__("numpy").prod(l.shape))
+            for l in jax.tree_util.tree_leaves(p)
+        )
+        # message passing revisits params once per edge-ish element
+        work_items = meta["e"] + meta["n"]
+        return 6.0 * n_params * work_items / max(meta["n"], 1)
+    if fam == "recsys":
+        cfg = module.full_config()
+        meta = module.shapes()[shape]
+        B = meta.get("n_candidates", meta["batch"])
+        per_ex = cfg.n_fields * cfg.embed_dim * 4
+        factor = 6.0 if meta["kind"] == "train" else 2.0
+        return factor * per_ex * B
+    if fam == "engine":
+        m = module.shapes()[shape]
+        return 2.0 * m["e"] * m["s"] * m["hops"] / 8  # bit-ops equivalent
+    return None

@@ -1,0 +1,15 @@
+"""TPU v5e hardware constants for the roofline model (per brief)."""
+
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link (we charge one link per chip)
+
+# wire-volume factors per collective kind (ring algorithms, n large):
+# all-reduce moves ~2x the buffer per chip; gather/scatter/permute ~1x.
+COLLECTIVE_FACTORS = {
+    "all-reduce": 2.0,
+    "reduce-scatter": 1.0,
+    "all-gather": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}

@@ -1,0 +1,141 @@
+"""Batched serving engines.
+
+`LMServer`: slot-based continuous batching for decode — fixed B slots each
+with its own KV-cache lane and position; requests occupy free slots, decode
+advances all active slots in one jitted step, finished slots are recycled.
+(The production analogue runs the same jitted step on the sharded mesh;
+the slot logic is host-side control plane.)
+
+`QueryServer`: the paper-side serving path — batches reachability /
+shortest-path queries into fixed-width lanes and executes them as one
+frontier sweep (the multi-source BFS is the batched query executor).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as TF
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # int32 [T]
+    max_new: int = 16
+    out: Optional[List[int]] = None
+
+
+class LMServer:
+    def __init__(self, params, cfg: TF.LMConfig, *, n_slots: int = 4, max_len: int = 256):
+        self.params = params
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.cache = TF.init_cache(cfg, n_slots, max_len)
+        self.pos = np.zeros(n_slots, np.int32)
+        self.active: List[Optional[Request]] = [None] * n_slots
+        self.remaining = np.zeros(n_slots, np.int32)
+        self.last_tok = np.zeros(n_slots, np.int32)
+        self._step = jax.jit(
+            lambda p, c, t, pos: TF.decode_step(p, c, t, pos, cfg)
+        )
+
+    def _free_slot(self) -> Optional[int]:
+        for i, a in enumerate(self.active):
+            if a is None:
+                return i
+        return None
+
+    def submit(self, req: Request) -> bool:
+        slot = self._free_slot()
+        if slot is None:
+            return False
+        req.out = []
+        self.active[slot] = req
+        # prefill token-by-token through the decode path (slot-local)
+        self.pos[slot] = 0
+        for t in req.prompt:
+            logits, self.cache = self._step(
+                self.params, self.cache,
+                jnp.asarray(self.last_tok)[:, None].at[slot].set(int(t)),
+                jnp.asarray(self.pos),
+            )
+            self.pos[slot] += 1
+        self.last_tok[slot] = int(np.argmax(np.asarray(logits)[slot, 0]))
+        req.out.append(int(self.last_tok[slot]))
+        self.remaining[slot] = req.max_new - 1
+        return True
+
+    def step(self) -> List[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        if not any(a is not None for a in self.active):
+            return []
+        logits, self.cache = self._step(
+            self.params, self.cache,
+            jnp.asarray(self.last_tok)[:, None], jnp.asarray(self.pos),
+        )
+        nxt = np.argmax(np.asarray(logits)[:, 0], axis=-1)
+        done = []
+        for i, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[i] += 1
+            self.last_tok[i] = int(nxt[i])
+            req.out.append(int(nxt[i]))
+            self.remaining[i] -= 1
+            if self.remaining[i] <= 0 or self.pos[i] >= self.max_len - 1:
+                done.append(req)
+                self.active[i] = None
+        return done
+
+
+class QueryServer:
+    """Batches graph-relational reachability queries into one BFS sweep."""
+
+    def __init__(self, engine, graph: str, *, lane_width: int = 64, max_hops: int = 16):
+        from repro.core import traversal as T
+
+        self.engine = engine
+        self.graph = graph
+        self.width = lane_width
+        self.max_hops = max_hops
+        self._bfs = T.bfs
+        self.pending: List[Dict] = []
+
+    def submit(self, src_id: int, dst_id: int):
+        self.pending.append({"src": src_id, "dst": dst_id})
+
+    def flush(self) -> List[Dict]:
+        if not self.pending:
+            return []
+        vb = self.engine.views[self.graph]
+        out: List[Dict] = []
+        for i in range(0, len(self.pending), self.width):
+            chunk = self.pending[i : i + self.width]
+            pad = self.width - len(chunk)
+            src = jnp.asarray([q["src"] for q in chunk] + [0] * pad, jnp.int32)
+            dst = jnp.asarray([q["dst"] for q in chunk] + [0] * pad, jnp.int32)
+            sp, sf = vb.view.id_index.lookup(src)
+            tp, tf = vb.view.id_index.lookup(dst)
+            sp = jnp.where(sf, sp, -1)
+            dist = self._bfs(
+                vb.view, sp, target_pos=jnp.where(tf, tp, -1),
+                edge_mask_by_row=self.engine.tables[vb.edge_table].valid,
+                max_hops=self.max_hops,
+            )
+            d = np.asarray(
+                jnp.take_along_axis(
+                    dist, jnp.clip(tp, 0, vb.view.n_vertices - 1)[:, None], axis=1
+                )[:, 0]
+            )
+            for j, q in enumerate(chunk):
+                out.append(
+                    {**q, "reachable": bool(d[j] >= 0), "hops": int(d[j])}
+                )
+        self.pending = []
+        return out

@@ -1,0 +1,106 @@
+"""Checkpointing: flat-npz save/restore with async writer + retention.
+
+Layout: <dir>/step_<n>.npz (+ .tmp staging, atomic rename) and a LATEST
+marker. Restore reshapes into any pytree with the same structure —
+including a *different mesh's* shardings (elastic re-mesh path: load on the
+new mesh, device_put with the new NamedSharding; see train/fault.py).
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree: Any, step: int):
+    leaves, _ = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    np.savez(
+        tmp, step=step, n=len(leaves),
+        **{f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)},
+    )
+    os.replace(tmp + ".npz" if os.path.exists(tmp + ".npz") else tmp, path)
+
+
+def restore(path: str, like: Any):
+    """Restore into the structure of `like` (dtypes/shapes must match)."""
+    with np.load(path) as z:
+        n = int(z["n"])
+        leaves = [z[f"leaf_{i}"] for i in range(n)]
+        step = int(z["step"])
+    _, treedef = _flatten(like)
+    like_leaves = jax.tree_util.tree_leaves(like)
+    out = [
+        jnp.asarray(a, dtype=l.dtype) for a, l in zip(leaves, like_leaves)
+    ]
+    return treedef.unflatten(out), step
+
+
+class CheckpointManager:
+    """Step-granular checkpoints with an async writer thread and retention."""
+
+    def __init__(self, directory: str, *, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:08d}.npz")
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def save(self, tree: Any, step: int):
+        # snapshot to host first so training can proceed
+        host = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
+
+        def work():
+            save(self._path(step), host, step)
+            with open(os.path.join(self.dir, "LATEST"), "w") as f:
+                f.write(str(step))
+            self._gc()
+
+        self.wait()
+        if self.async_save:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def _gc(self):
+        ckpts = sorted(
+            f for f in os.listdir(self.dir) if f.startswith("step_") and f.endswith(".npz")
+        )
+        for f in ckpts[: -self.keep]:
+            try:
+                os.remove(os.path.join(self.dir, f))
+            except OSError:
+                pass
+
+    def latest_step(self) -> Optional[int]:
+        p = os.path.join(self.dir, "LATEST")
+        if not os.path.exists(p):
+            return None
+        with open(p) as f:
+            return int(f.read().strip())
+
+    def restore_latest(self, like: Any):
+        self.wait()
+        step = self.latest_step()
+        if step is None:
+            return None, None
+        return restore(self._path(step), like)

@@ -1,0 +1,103 @@
+"""Optimizers + LR schedules (no optax offline — hand-rolled, pytree-native).
+
+AdamW with configurable state dtype (f32 default; bf16 for the 100B+ class
+so the 671B fits the multi-pod memory budget — recorded in EXPERIMENTS.md),
+global-norm clipping, and the schedules the assigned archs use: cosine and
+WSD (warmup-stable-decay, MiniCPM arXiv:2404.06395).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: str = "float32"  # 'bfloat16' for the 100B+ class
+    schedule: str = "cosine"  # 'constant' | 'cosine' | 'wsd'
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    stable_frac: float = 0.8  # WSD: fraction of steps at peak LR
+
+
+def schedule_lr(cfg: AdamWConfig, step):
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip(
+        (s - cfg.warmup_steps) / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        return cfg.lr * warm * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    if cfg.schedule == "wsd":
+        # warmup -> stable plateau -> 1-sqrt decay tail (MiniCPM)
+        decay_t = jnp.clip((t - cfg.stable_frac) / max(1 - cfg.stable_frac, 1e-6), 0.0, 1.0)
+        return cfg.lr * warm * (1.0 - (1.0 - 0.1) * jnp.sqrt(decay_t))
+    raise ValueError(cfg.schedule)
+
+
+def init_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def global_norm(tree):
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree_util.tree_leaves(tree))
+    )
+
+
+def clip_by_global_norm(grads, max_norm):
+    g = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(g, 1e-12))
+    return jax.tree_util.tree_map(lambda x: (x * scale).astype(x.dtype), grads), g
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+    step = state["step"] + 1
+    lr = schedule_lr(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return newp, m32.astype(m.dtype), v32.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state["m"])
+    flat_v = jax.tree_util.tree_leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return (
+        new_p,
+        {"step": step, "m": new_m, "v": new_v},
+        {"lr": lr, "grad_norm": gnorm},
+    )

@@ -1,0 +1,101 @@
+"""Training loop substrate: train-step builder with microbatch gradient
+accumulation (compute/comm overlap falls out of XLA scheduling the psum of
+the last microbatch against the optimizer update), optional int8
+error-feedback gradient compression hook, and metrics.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import optimizer as opt
+
+
+@dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    step: int = 0
+
+    def as_tree(self):
+        return {"params": self.params, "opt_state": self.opt_state}
+
+
+def build_train_step(
+    loss_fn: Callable[[Any, Dict[str, jnp.ndarray]], jnp.ndarray],
+    opt_cfg: opt.AdamWConfig,
+    *,
+    microbatches: int = 1,
+    compress=None,  # Optional repro.dist.compression.Compressor
+):
+    """Returns step(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With microbatches > 1 the batch's leading axis is split and gradients
+    accumulate through a lax.scan (activation memory / global-batch
+    trade-off). Pure function of pytrees -> jit/pjit-ready.
+    """
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss_fn)(params, batch)
+
+    def step(params, opt_state, batch, compress_state=None):
+        if microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+
+            mb = jax.tree_util.tree_map(split, batch)
+
+            def body(carry, b_i):
+                acc_loss, acc_g = carry
+                l, g = grads_of(params, b_i)
+                acc_g = jax.tree_util.tree_map(
+                    lambda a, x: a + x.astype(a.dtype), acc_g, g
+                )
+                return (acc_loss + l, acc_g), None
+
+            zero_g = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (loss, grads), _ = jax.lax.scan(body, (jnp.float32(0.0), zero_g), mb)
+            loss = loss / microbatches
+            grads = jax.tree_util.tree_map(lambda g: g / microbatches, grads)
+
+        if compress is not None:
+            grads, compress_state = compress.compress_grads(grads, compress_state)
+
+        params, opt_state, om = opt.apply_updates(params, grads, opt_state, opt_cfg)
+        metrics = {"loss": loss, **om}
+        if compress is not None:
+            return params, opt_state, compress_state, metrics
+        return params, opt_state, metrics
+
+    return step
+
+
+class MetricLogger:
+    """Step-time tracking incl. the straggler monitor (EMA + outlier flags)."""
+
+    def __init__(self, ema: float = 0.9, straggler_factor: float = 2.0):
+        self.ema = ema
+        self.factor = straggler_factor
+        self.avg: Optional[float] = None
+        self.history: list = []
+        self.stragglers: list = []
+
+    def record(self, step: int, metrics: Dict, t0: float):
+        dt = time.perf_counter() - t0
+        if self.avg is None:
+            self.avg = dt
+        if dt > self.factor * self.avg and step > 2:
+            self.stragglers.append((step, dt, self.avg))
+        self.avg = self.ema * self.avg + (1 - self.ema) * dt
+        self.history.append((step, float(metrics.get("loss", 0.0)), dt))
+        return dt

@@ -1,0 +1,79 @@
+"""Dry-run plumbing tests: run a few cells on a reduced 2x2(/2x2x2) mesh in a
+subprocess with 8 faked host devices (the production 16x16/2x16x16 sweep is
+executed by `python -m repro.launch.dryrun --all --both-meshes`; its results
+are recorded in results/dryrun and EXPERIMENTS.md)."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(arch, shape, multi_pod=False, tmp="results/dryrun_test"):
+    cmd = [
+        sys.executable, "-m", "repro.launch.dryrun",
+        "--arch", arch, "--shape", shape, "--small", "--out", tmp,
+    ]
+    if multi_pod:
+        cmd.append("--multi-pod")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    env["REPRO_DRYRUN_XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    r = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True, text=True,
+                       timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    mesh = ("small-2x16x16" if multi_pod else "small-16x16")
+    path = os.path.join(REPO, tmp, f"{arch}__{shape}__{mesh}.json")
+    with open(path) as f:
+        return json.load(f)
+
+
+@pytest.mark.slow
+def test_dryrun_lm_train_small_mesh():
+    rec = _run("tinyllama-1.1b", "train_4k")
+    assert rec["status"] == "ok"
+    assert rec["roofline"]["flops_per_device"] > 0
+    assert rec["roofline"]["wire_bytes_per_device"] > 0
+    assert rec["roofline"]["dominant"] in ("compute", "memory", "collective")
+
+
+@pytest.mark.slow
+def test_dryrun_multipod_small_mesh():
+    rec = _run("fm", "train_batch", multi_pod=True)
+    assert rec["status"] == "ok" and rec["n_chips"] == 8
+
+
+@pytest.mark.slow
+def test_dryrun_gnn_and_engine():
+    rec = _run("schnet", "molecule")
+    assert rec["status"] == "ok"
+    rec = _run("grfusion", "queries_twitter")
+    assert rec["status"] == "ok"
+
+
+def test_roofline_collective_parser_units():
+    from repro.roofline.analysis import collective_bytes
+
+    hlo = """
+  %p = f32[256,128]{1,0} parameter(0)
+  %all-gather.1 = f32[1024,128]{1,0} all-gather(%p), replica_groups=[2,4]<=[8], dimensions={0}
+  %ar = f32[256,128]{1,0} all-reduce(%p), replica_groups=[1,8]<=[8], to_apply=%sum
+"""
+    out = collective_bytes(hlo)
+    shard = 256 * 128 * 4
+    assert out["all-gather"] == shard * 3  # (g-1) with g=4
+    assert out["all-reduce"] == shard * 2
+
+
+def test_model_flops_estimates_positive():
+    from repro import configs
+    from repro.roofline.analysis import model_flops_estimate
+
+    for arch in ["tinyllama-1.1b", "fm", "schnet", "grfusion"]:
+        m = configs.get(arch)
+        for shape in m.shapes():
+            mf = model_flops_estimate(arch, m, shape)
+            assert mf and mf > 0, (arch, shape)

@@ -1,0 +1,186 @@
+"""End-to-end graph-relational queries: the paper's listings (§3-§6)."""
+import numpy as np
+import pytest
+
+from repro.core.engine import GRFusion
+from repro.core.query import Query, P, col
+
+
+@pytest.fixture
+def social():
+    eng = GRFusion()
+    eng.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "fName": np.array(["Edy", "Jones", "Bill", "Ann", "Cara"]),
+        "lName": np.array(["Smith", "Parker", "Patrick", "May", "Jones"]),
+        "dob": np.array([19710925, 19801121, 19760201, 19900101, 19850505]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=8)
+    eng.create_table("Relationships", {
+        "relId": np.array([1, 2, 3, 4]),
+        "uId1": np.array([1, 2, 3, 4]),
+        "uId2": np.array([3, 3, 4, 5]),
+        "startDate": np.array([20090110, 20081231, 20100101, 19990101]),
+        "isRelative": np.array([1, 0, 0, 1]),
+    }, capacity=16)
+    eng.create_graph_view(
+        "SocialNetwork", vertexes="Users", edges="Relationships",
+        v_id="uId", e_src="uId1", e_dst="uId2",
+        v_attrs={"lstName": "lName", "birthdate": "dob", "Job": "Job"},
+        e_attrs={"sDate": "startDate", "relative": "isRelative"},
+        directed=False,
+    )
+    return eng
+
+
+def test_listing5_vertex_scan(social):
+    q = (Query().from_vertexes("SocialNetwork", "VS")
+         .where(col("VS.lName") == "Smith")
+         .select(birthdate=col("VS.dob"), fanout=col("VS.fanout")))
+    r = social.run(q)
+    assert r.count == 1
+    assert r.columns["birthdate"][0] == 19710925
+    assert r.columns["fanout"][0] == 1
+
+
+def test_listing2_friends_of_friends(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where((col("U.Job") == "Lawyer") & (PS.start.id == col("U.uId"))
+                & (PS.length == 2)
+                & (PS.edges[0:"*"].attr("sDate") > 20000101))
+         .select(lname=PS.end.attr("lstName")))
+    r = social.run(q)
+    assert sorted(str(x) for x in r.columns["lname"]) == ["May", "Parker"]
+    assert any("[2, 2]" in e for e in r.explain)  # §6.1 length inference
+
+
+def test_listing3_reachability_limit1(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "A").from_table("Users", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Edy") & (col("B.fName") == "Cara")
+                & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.uId")))
+         .select(exists=col("PS.exists"), length=col("PS.length"))
+         .limit(1))
+    r = social.run(q)
+    assert r.count == 1 and bool(r.columns["exists"][0])
+    assert int(r.columns["length"][0]) == 3  # 1-3-4-5
+    assert any("bfs" in e for e in r.explain)  # reachability fast path
+
+
+def test_listing4_labeled_triangles():
+    eng = GRFusion()
+    eng.create_table("MLV", {"vid": np.arange(4)})
+    eng.create_table("MLE", {
+        "src": np.array([0, 1, 2, 0, 2]), "dst": np.array([1, 2, 0, 2, 3]),
+        "Label": np.array(["A", "B", "C", "A", "B"]),
+    })
+    eng.create_graph_view("MLGraph", vertexes="MLV", edges="MLE",
+                          v_id="vid", e_src="src", e_dst="dst")
+    Pp = P("PP")
+    q = (Query().from_paths("MLGraph", "PP")
+         .where((Pp.length == 3)
+                & (Pp.edges[0].attr("Label") == "A")
+                & (Pp.edges[1].attr("Label") == "B")
+                & (Pp.edges[2].attr("Label") == "C")
+                & (Pp.end.id == Pp.start.id))
+         .select_count("n"))
+    r = eng.run(q)
+    assert int(r.columns["n"]) == 1
+
+
+@pytest.fixture
+def roads():
+    eng = GRFusion()
+    eng.create_table("Locs", {"lid": np.arange(5)})
+    eng.create_table("Roads", {
+        "rid": np.arange(6),
+        "s": np.array([0, 0, 1, 2, 3, 1]), "d": np.array([1, 2, 2, 3, 4, 4]),
+        "dist": np.array([1.0, 4.0, 1.0, 1.0, 5.0, 10.0]),
+        "spd": np.array([60, 20, 60, 60, 60, 60]),
+    })
+    eng.create_graph_view("RoadNet", vertexes="Locs", edges="Roads",
+                          v_id="lid", e_src="s", e_dst="d")
+    return eng
+
+
+def test_listing6_8_shortest_path_on_subgraph(roads):
+    RS = P("RS")
+    q = (Query().from_paths("RoadNet", "RS")
+         .hint_shortest_path("dist")
+         .where((RS.start.id == 0) & (RS.end.id == 4)
+                & (RS.edges[0:"*"].attr("spd") > 30))
+         .select(d=col("RS.distance"), length=col("RS.length")))
+    r = roads.run(q)
+    assert abs(float(r.columns["d"][0]) - 8.0) < 1e-5  # 0-1-2-3-4
+    assert int(r.columns["length"][0]) == 4
+
+
+def test_path_aggregate_pushdown(roads):
+    RS = P("RS2")
+    q = (Query().from_paths("RoadNet", "RS2")
+         .where((RS.start.id == 0) & (RS.sum_edges("dist") < 9.0)
+                & (RS.length == 4))
+         .select(total=RS.sum_edges("dist")))
+    r = roads.run(q)
+    assert r.count == 1 and abs(float(r.columns["total"][0]) - 8.0) < 1e-5
+
+
+def test_any_predicate(roads):
+    from repro.core.query import ANY
+
+    RS = P("RS")
+    q = (Query().from_paths("RoadNet", "RS")
+         .where((RS.start.id == 0) & (RS.length == 2)
+                & (RS.edges[ANY].attr("spd") < 30))
+         .select(end=RS.end.id))
+    r = roads.run(q)
+    # only path through the slow 0->2 (spd 20) edge qualifies: 0-2-3
+    assert r.count == 1 and int(r.columns["end"][0]) == 3
+
+
+# ---------------------------------------------------------- updates (§3.3)
+def test_online_edge_insert_via_delta(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "A").from_table("Users", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Jones") & (col("B.fName") == "Cara")
+                & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.uId")))
+         .select(length=col("PS.length")).limit(1))
+    assert int(social.run(q).columns["length"][0]) == 3  # 2-3-4-5
+    # insert a direct edge 2-5 (delta buffer path, no rebuild)
+    social.insert("Relationships", {
+        "relId": np.array([99]), "uId1": np.array([2]), "uId2": np.array([5]),
+        "startDate": np.array([20230101]), "isRelative": np.array([0]),
+    })
+    assert int(social.run(q).columns["length"][0]) == 1
+
+
+def test_tombstone_delete_and_attr_update(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "A").from_table("Users", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Edy") & (col("B.fName") == "Ann")
+                & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.uId")))
+         .select(exists=col("PS.exists")).limit(1))
+    assert bool(social.run(q).columns["exists"][0])
+    # delete the 3-4 edge: 1-3-4 breaks
+    social.delete_where("Relationships", col("relId") == 3)
+    assert social.run(q).count == 0
+    # attribute update stays decoupled from topology (§3.2)
+    social.update_where("Users", col("uId") == 4, "dob", 20000101)
+    r = social.run(
+        Query().from_vertexes("SocialNetwork", "VS")
+        .where(col("VS.uId") == 4).select(d=col("VS.dob"))
+    )
+    assert int(r.columns["d"][0]) == 20000101
+
+
+def test_vertex_fanin_fanout_attrs(social):
+    q = (Query().from_vertexes("SocialNetwork", "VS")
+         .where(col("VS.uId") == 3)
+         .select(fi=col("VS.fanin"), fo=col("VS.fanout")))
+    r = social.run(q)
+    # undirected view symmetrizes: vertex 3 touches edges 1,2,3 -> fan 3/3
+    assert int(r.columns["fi"][0]) == 3 and int(r.columns["fo"][0]) == 3

@@ -1,0 +1,25 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.index import IdIndex
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 10_000), min_size=1, max_size=100, unique=True))
+def test_lookup_roundtrip(ids):
+    ids = np.array(ids, np.int32)
+    valid = np.ones(len(ids), bool)
+    idx = IdIndex.build(jnp.asarray(ids), jnp.asarray(valid))
+    rows, found = idx.lookup(jnp.asarray(ids))
+    assert bool(found.all())
+    assert np.asarray(ids)[np.asarray(rows)].tolist() == ids.tolist()
+
+
+def test_missing_and_invalid():
+    ids = jnp.array([5, 9, 7, 0])
+    valid = jnp.array([True, False, True, True])
+    idx = IdIndex.build(ids, valid)
+    rows, found = idx.lookup(jnp.array([9, 7, 123]))
+    assert found.tolist() == [False, True, False]  # 9 is an invalid row
+    assert int(rows[1]) == 2

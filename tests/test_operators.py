@@ -1,0 +1,117 @@
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import operators as O
+from repro.core.traversal import expand_by_counts, compact_targets
+from repro.core import expr as X
+
+
+def _batch(cols, valid=None):
+    cols = {k: jnp.asarray(v) for k, v in cols.items()}
+    n = next(iter(cols.values())).shape[0]
+    v = jnp.ones((n,), bool) if valid is None else jnp.asarray(valid)
+    return O.RelBatch(cols=cols, valid=v)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.lists(st.integers(0, 9), min_size=1, max_size=40),
+    st.lists(st.integers(0, 9), min_size=1, max_size=40),
+)
+def test_join_matches_nested_loop(lk, rk):
+    left = _batch({"k": np.array(lk, np.int32), "lv": np.arange(len(lk))})
+    right = _batch({"k2": np.array(rk, np.int32), "rv": np.arange(len(rk))})
+    cap = len(lk) * len(rk) + 1
+    out, ovf = O.join(left, right, "k", "k2", capacity=cap)
+    got = sorted(
+        (int(a), int(b))
+        for a, b, v in zip(
+            np.asarray(out.cols["lv"]), np.asarray(out.cols["rv"]), np.asarray(out.valid)
+        )
+        if v
+    )
+    expect = sorted(
+        (i, j) for i, a in enumerate(lk) for j, b in enumerate(rk) if a == b
+    )
+    assert not bool(ovf)
+    assert got == expect
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.floats(-10, 10)), min_size=1, max_size=50))
+def test_group_by_matches_numpy(rows):
+    ks = np.array([r[0] for r in rows], np.int32)
+    vs = np.array([r[1] for r in rows], np.float32)
+    b = _batch({"k": ks, "v": vs})
+    g = O.group_by(b, "k", {"s": ("sum", "v"), "mn": ("min", "v"), "c": ("count", None)})
+    got = {}
+    for i in range(g.capacity):
+        if bool(g.valid[i]):
+            got[int(g.cols["k"][i])] = (
+                float(g.cols["s"][i]), float(g.cols["mn"][i]), int(g.cols["c"][i])
+            )
+    for k in np.unique(ks):
+        sel = vs[ks == k]
+        s, mn, c = got[int(k)]
+        assert abs(s - sel.sum()) < 1e-3
+        assert abs(mn - sel.min()) < 1e-6
+        assert c == len(sel)
+
+
+def test_filter_project_limit_order():
+    b = _batch({"x": np.array([5, 1, 4, 2]), "y": np.array([1.0, 2.0, 3.0, 4.0])})
+    f = O.filter_batch(b, X.col("x") > 1)
+    assert int(f.count) == 3
+    o = O.order_by(f, "x")
+    xs = [int(v) for v, ok in zip(np.asarray(o.cols["x"]), np.asarray(o.valid)) if ok]
+    assert xs == [2, 4, 5]
+    l = O.limit(o, 2)
+    assert int(l.count) == 2
+    p = O.project(l, {"z": X.col("x") * 2})
+    zs = [int(v) for v, ok in zip(np.asarray(p.cols["z"]), np.asarray(p.valid)) if ok]
+    assert zs == [4, 8]
+
+
+def test_cross_join_bounded():
+    a = _batch({"x": np.array([1, 2, 3])}, valid=np.array([True, False, True]))
+    b = _batch({"y": np.array([10, 20])})
+    out, ovf = O.cross_join(a, b, capacity=8)
+    pairs = sorted(
+        (int(x), int(y))
+        for x, y, v in zip(np.asarray(out.cols["x"]), np.asarray(out.cols["y"]), np.asarray(out.valid))
+        if v
+    )
+    assert pairs == [(1, 10), (1, 20), (3, 10), (3, 20)]
+    assert not bool(ovf)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(0, 6), min_size=1, max_size=30), st.integers(1, 128))
+def test_expand_by_counts_invariants(counts, cap):
+    c = jnp.asarray(counts, jnp.int32)
+    parent, within, valid, total = expand_by_counts(c, cap)
+    parent, within, valid = np.asarray(parent), np.asarray(within), np.asarray(valid)
+    assert int(total) == sum(counts)
+    n_valid = int(valid.sum())
+    assert n_valid == min(sum(counts), cap)
+    for i in range(n_valid):
+        p = parent[i]
+        assert 0 <= within[i] < counts[p]
+    # slots enumerate (parent, within) pairs in order without repeats
+    seen = {(int(parent[i]), int(within[i])) for i in range(n_valid)}
+    assert len(seen) == n_valid
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.booleans(), min_size=1, max_size=50), st.integers(1, 30))
+def test_compact_targets(mask, cap):
+    m = jnp.asarray(mask)
+    tgt, kept, ovf = compact_targets(m, cap)
+    tgt = np.asarray(tgt)
+    n_true = sum(mask)
+    assert bool(ovf) == (n_true > cap)
+    assert int(kept) == min(n_true, cap)
+    # kept targets are 0..kept-1, each exactly once
+    got = sorted(t for t, ok in zip(tgt, mask) if ok and t < cap)
+    assert got == list(range(int(kept)))

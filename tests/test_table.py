@@ -1,0 +1,58 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.table import Table
+
+
+def make():
+    return Table.create(
+        "t", {"id": np.array([3, 1, 2]), "x": np.array([30.0, 10.0, 20.0])},
+        capacity=6,
+    )
+
+
+def test_create_and_counts():
+    t = make()
+    assert t.capacity == 6
+    assert int(t.num_rows) == 3
+    assert t.to_numpy()["id"].tolist() == [3, 1, 2]
+
+
+def test_insert_into_free_slots():
+    t = make()
+    t2, slots, ovf = t.insert({"id": np.array([7, 8]), "x": np.array([70.0, 80.0])})
+    assert not bool(ovf)
+    assert int(t2.num_rows) == 5
+    assert sorted(t2.to_numpy()["id"].tolist()) == [1, 2, 3, 7, 8]
+    assert all(s >= 3 for s in np.asarray(slots))
+
+
+def test_insert_overflow_flag():
+    t = make()
+    t2, slots, ovf = t.insert({"id": np.arange(10), "x": np.zeros(10)})
+    assert bool(ovf)
+    assert int(t2.num_rows) == 6  # filled to capacity, extras dropped
+
+
+def test_delete_and_reuse():
+    t = make()
+    t2 = t.delete(t.col("id") == 1)
+    assert int(t2.num_rows) == 2
+    t3, slots, _ = t2.insert({"id": np.array([9]), "x": np.array([90.0])})
+    assert int(t3.num_rows) == 3
+    assert 9 in t3.to_numpy()["id"].tolist()
+
+
+def test_update():
+    t = make()
+    t2 = t.update(t.col("id") == 2, "x", 99.0)
+    d = {int(i): float(x) for i, x in zip(t2.to_numpy()["id"], t2.to_numpy()["x"])}
+    assert d[2] == 99.0 and d[1] == 10.0
+
+
+def test_gather_tuple_pointers():
+    t = make()
+    got = t.gather(jnp.array([1, 0]))
+    assert got["id"].tolist() == [1, 3]
+    assert bool(t.gather_valid(jnp.array([5]))[0]) is False

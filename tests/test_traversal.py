@@ -1,0 +1,167 @@
+"""Traversal physical operators vs. independent oracles (hypothesis)."""
+import heapq
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import traversal as T
+from repro.core.graphview import build_graph_view
+from repro.core.table import Table
+
+
+def make_view(n, src, dst, extra_cols=None, directed=True):
+    vt = Table.create("V", {"vid": np.arange(n, dtype=np.int32)})
+    ed = {"src": np.asarray(src, np.int32), "dst": np.asarray(dst, np.int32)}
+    ed.update(extra_cols or {})
+    et = Table.create("E", ed)
+    return build_graph_view("G", vt, et, v_id="vid", e_src="src", e_dst="dst",
+                            directed=directed), et
+
+
+graphs = st.integers(2, 24).flatmap(
+    lambda n: st.tuples(
+        st.just(n),
+        st.lists(st.tuples(st.integers(0, n - 1), st.integers(0, n - 1)),
+                 min_size=1, max_size=60),
+    )
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs)
+def test_bfs_matches_matrix_power_closure(g):
+    n, edges = g
+    src = [a for a, b in edges]
+    dst = [b for a, b in edges]
+    view, _ = make_view(n, src, dst)
+    dist = np.asarray(T.bfs(view, jnp.arange(n, dtype=jnp.int32), max_hops=n))
+    # oracle: boolean adjacency powers
+    A = np.zeros((n, n), bool)
+    A[src, dst] = True
+    reach = np.eye(n, dtype=bool)
+    expect = np.full((n, n), -1)
+    np.fill_diagonal(expect, 0)
+    frontier = np.eye(n, dtype=bool)
+    for h in range(1, n + 1):
+        frontier = (frontier @ A) & ~reach
+        expect[frontier & (expect == -1)] = h
+        reach |= frontier
+    assert (dist == expect).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs, st.integers(0, 2**31 - 1))
+def test_sssp_matches_dijkstra(g, seed):
+    n, edges = g
+    src = np.array([a for a, b in edges])
+    dst = np.array([b for a, b in edges])
+    w = np.random.default_rng(seed).uniform(0.1, 5.0, len(edges)).astype(np.float32)
+    view, _ = make_view(n, src, dst, {"w": w})
+    d = np.asarray(
+        T.sssp(view, jnp.array([0], jnp.int32), weight_by_row=jnp.asarray(w),
+               max_iters=n + 2)[0][0]
+    )
+    adj = {}
+    for a, b, ww in zip(src, dst, w):
+        adj.setdefault(int(a), []).append((int(b), float(ww)))
+    ref = np.full(n, np.inf)
+    ref[0] = 0.0
+    pq = [(0.0, 0)]
+    while pq:
+        du, u = heapq.heappop(pq)
+        if du > ref[u]:
+            continue
+        for v_, ww in adj.get(u, ()):  # noqa: B905
+            nd = du + ww
+            if nd < ref[v_] - 1e-9:
+                ref[v_] = nd
+                heapq.heappush(pq, (nd, v_))
+    assert (np.isfinite(d) == np.isfinite(ref)).all()
+    fin = np.isfinite(ref)
+    assert np.abs(d[fin] - ref[fin]).max() < 1e-3
+
+
+def _brute_paths(n, edges, start, min_len, max_len, close_loop=False):
+    adj = {}
+    for i, (a, b) in enumerate(edges):
+        adj.setdefault(a, []).append((b, i))
+    out = []
+
+    def rec(path_v, path_e):
+        L = len(path_e)
+        if min_len <= L <= max_len:
+            if not close_loop or (L == max_len and path_v[-1] == path_v[0]):
+                out.append(tuple(path_e))
+        if L == max_len:
+            return
+        for (nb, ei) in adj.get(path_v[-1], ()):  # noqa: B905
+            closing = close_loop and L == max_len - 1 and nb == path_v[0]
+            if nb in path_v and not closing:
+                continue
+            if not close_loop or L < max_len - 1 or closing:
+                rec(path_v + [nb], path_e + [ei])
+
+    rec([start], [])
+    return set(out)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs)
+def test_enumeration_matches_bruteforce(g):
+    n, edges = g
+    src = [a for a, b in edges]
+    dst = [b for a, b in edges]
+    view, _ = make_view(n, src, dst)
+    ps = T.enumerate_paths_jit(
+        view, jnp.array([0], jnp.int32), min_len=1, max_len=3,
+        work_capacity=1 << 12, result_capacity=1 << 12,
+    )
+    got = set()
+    cnt = int(ps.count)
+    for i in range(cnt):
+        L = int(ps.length[i])
+        got.add(tuple(int(e) for e in np.asarray(ps.edges[i][:L])))
+    expect = _brute_paths(n, edges, 0, 1, 3)
+    assert got == expect, (got ^ expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(graphs)
+def test_triangle_count_matches_bruteforce(g):
+    n, edges = g
+    src = [a for a, b in edges]
+    dst = [b for a, b in edges]
+    view, et = make_view(n, src, dst)
+    masks = [jnp.ones((et.capacity,), bool)] * 3
+    cnt, ovf = T.count_closed_triangles(view, masks, work_capacity=1 << 14)
+    assert not bool(ovf)
+    expect = 0
+    for s in range(n):
+        expect += len(_brute_paths(n, edges, s, 3, 3, close_loop=True))
+    assert int(cnt) == expect
+
+
+def test_path_reconstruction():
+    # chain 0->1->2->3 with a costly shortcut 0->3
+    view, et = make_view(4, [0, 1, 2, 0], [1, 2, 3, 3],
+                         {"w": np.array([1.0, 1.0, 1.0, 10.0], np.float32)})
+    dist, parent = T.sssp(view, jnp.array([0], jnp.int32),
+                          weight_by_row=jnp.asarray(et.col("w")), max_iters=8)
+    edges, verts, length = T.reconstruct_paths(
+        view, parent, jnp.array([3], jnp.int32), max_len=8
+    )
+    assert int(length[0]) == 3
+    assert [int(v) for v in verts[0][:4]] == [3, 2, 1, 0]
+
+
+def test_bfs_respects_edge_and_vertex_masks():
+    view, et = make_view(4, [0, 1, 0], [1, 2, 2], {"sel": np.array([1, 1, 0])})
+    emask = jnp.asarray(np.array([1, 1, 0], bool))
+    d = np.asarray(T.bfs(view, jnp.array([0], jnp.int32),
+                         edge_mask_by_row=emask, max_hops=4))[0]
+    assert d[2] == 2  # direct edge masked out; path through 1
+    vmask = jnp.asarray(np.array([True, False, True, True]))
+    d2 = np.asarray(T.bfs(view, jnp.array([0], jnp.int32),
+                          edge_mask_by_row=emask, vertex_mask=vmask, max_hops=4))[0]
+    assert d2[2] == -1  # vertex 1 excluded => unreachable
