@@ -4,31 +4,41 @@ Engine (native frontier BFS over the graph view) vs. SQLGraph-style iterated
 relational self-joins. The paper's claim: native traversal is ~flat in path
 length while join-based cost grows with hops and intermediate size (up to 4
 orders of magnitude on large graphs). CPU-scaled reproduction.
+
+``backends`` (or ``REPRO_FIG8_BACKENDS=xla_coo,pallas_frontier``) reports
+the native sweep per TraversalEngine backend so BENCH trajectories can
+compare the blocked-COO sweep against the packed frontier-kernel path.
 """
 from __future__ import annotations
 
 import functools
+import os
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.baselines.sqlgraph import reachability_joins
-from repro.core import traversal as T
 from repro.core.graphview import build_graph_view
 from repro.core.table import Table
+from repro.core.traversal_engine import TraversalEngine
 from repro.data.synthetic import graph_tables, random_graph, reachable_pairs
 
 from .common import time_call
 
 
-def run(quick: bool = False):
+def run(quick: bool = False, backends=None):
     V, E = (5_000, 25_000) if quick else (20_000, 100_000)
     S = 32
     lengths = [2, 4, 6] if quick else [2, 4, 6, 8, 10]
+    if backends is None:
+        raw = os.environ.get("REPRO_FIG8_BACKENDS", "xla_coo")
+        backends = tuple(b.strip() for b in raw.split(",") if b.strip())
+    backends = backends or ("xla_coo",)
     g = random_graph(V, E, kind="powerlaw", seed=7)
     vd, ed = graph_tables(g)
     vt, et = Table.create("V", vd), Table.create("E", ed)
     view = build_graph_view("G", vt, et, v_id="vid", e_src="src", e_dst="dst")
+    te = TraversalEngine(block_size=1 << 15)
 
     # frontier relation can hold every (query, vertex) pair — the honest
     # memory bill of the relational formulation (paper §7.2's blow-up)
@@ -41,31 +51,35 @@ def run(quick: bool = False):
         srcs, tgts = reachable_pairs(g, L, S, seed=L)
         js, jt = jnp.asarray(srcs), jnp.asarray(tgts)
 
-        native = functools.partial(
-            T.bfs, view, js, target_pos=jt, max_hops=L, block_size=1 << 15
-        )
-        us_nat = time_call(native)
+        us_nat = None
+        for b in backends:
+            native = functools.partial(
+                te.bfs, view, js, target_pos=jt, max_hops=L, backend=b
+            )
+            us_b = time_call(native)
+            d = native()
+            reached = np.asarray(
+                jnp.take_along_axis(
+                    d, jnp.clip(jt, 0, V - 1)[:, None], axis=1
+                )[:, 0] >= 0
+            )
+            assert reached.all(), f"generated pairs must be reachable ({b})"
+            tag = "" if b == backends[0] else f"[{b}]"
+            rows.append((f"fig8/native_bfs{tag}/L={L}", us_b / S, "per-query-us"))
+            if us_nat is None:
+                us_nat = us_b
 
         base = functools.partial(
             reachability_joins, et, "src", "dst", js, jt,
             n_hops=L, frontier_capacity=fcap,
         )
         us_join = time_call(base)
-
-        # correctness cross-check while we're here
-        d = native()
-        reached_nat = np.asarray(
-            jnp.take_along_axis(d, jnp.clip(jt, 0, V - 1)[:, None], axis=1)[:, 0] >= 0
-        )
         reached_join, join_ovf = base()
         reached_join = np.asarray(reached_join)
-        assert reached_nat.all(), "generated pairs must be reachable (native)"
         if bool(join_ovf):
             note = "DNF(intermediate-overflow, as paper Twitter)"
         else:
             assert reached_join.all(), "join baseline missed a reachable pair"
             note = f"speedup={us_join/us_nat:.1f}x"
-
-        rows.append((f"fig8/native_bfs/L={L}", us_nat / S, "per-query-us"))
         rows.append((f"fig8/sqlgraph_joins/L={L}", us_join / S, note))
     return rows

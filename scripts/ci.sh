@@ -1,0 +1,14 @@
+#!/usr/bin/env bash
+# Tier-1 CI: fast test suite (slow dry-run compiles excluded) plus a quick
+# benchmark smoke. Run from the repo root:  bash scripts/ci.sh
+# The full suite including slow markers is:  python -m pytest -q
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1 tests (slow excluded) =="
+python -m pytest -q -m "not slow"
+
+echo "== benchmark smoke (quick sizes) =="
+REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+
+echo "CI OK"

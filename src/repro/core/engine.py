@@ -14,11 +14,9 @@ and maintains graph views under online updates (§3.3):
 """
 from __future__ import annotations
 
-import functools
 from dataclasses import dataclass
 from typing import Dict, List, Mapping, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -26,9 +24,9 @@ from repro.core import expr as X
 from repro.core import operators as O
 from repro.core import planner as PL
 from repro.core import query as Q
-from repro.core import traversal as T
 from repro.core.graphview import GraphView, build_graph_view
 from repro.core.table import Table
+from repro.core.traversal_engine import TraversalEngine
 
 
 @dataclass
@@ -70,6 +68,7 @@ class GRFusion:
         max_work_capacity: int = 1 << 18,
         result_capacity: int = 1 << 14,
         bfs_max_hops: int = 32,
+        traversal_backend: str = "auto",
     ):
         self.tables: Dict[str, Table] = {}
         self.views: Dict[str, ViewBundle] = {}
@@ -79,17 +78,10 @@ class GRFusion:
         self.max_work_capacity = max_work_capacity
         self.result_capacity = result_capacity
         self.bfs_max_hops = bfs_max_hops
-        self._enum = jax.jit(
-            T.enumerate_paths,
-            static_argnames=(
-                "min_len",
-                "max_len",
-                "close_loop",
-                "work_capacity",
-                "result_capacity",
-                "count_only",
-            ),
-        )
+        # all BFS/SSSP/path dispatch goes through the TraversalEngine; the
+        # backend knob here is the engine-wide default ('auto' = planner
+        # density policy), overridable per query via Query.traversal_backend
+        self.traversal = TraversalEngine(default_backend=traversal_backend)
 
     # ------------------------------------------------------------- catalog
     def create_table(self, name: str, data: Mapping[str, np.ndarray], capacity=None) -> Table:
@@ -161,6 +153,7 @@ class GRFusion:
             v_id=v_id, e_src=e_src, e_dst=e_dst, v_attrs=va, e_attrs=ea,
             directed=directed, delta_capacity=delta_capacity,
         )
+        self.traversal.register_view(name)
         return view
 
     # ------------------------------------------------------------- updates
@@ -188,6 +181,7 @@ class GRFusion:
                 ok = sf & df & (slots >= 0)
                 view2, ovf = vb.view.insert_delta(sp, dp, slots, ok)
                 vb.view = view2
+                self.traversal.bump_epoch(vname)  # delta edges change topology
                 if vb.directed is False:
                     view3, ovf2 = vb.view.insert_delta(dp, sp, slots, ok)
                     vb.view = view3
@@ -237,6 +231,7 @@ class GRFusion:
             v_id=vb.v_id, e_src=vb.e_src, e_dst=vb.e_dst,
             directed=vb.directed, delta_capacity=vb.delta_capacity,
         )
+        self.traversal.bump_epoch(name)
 
     # ------------------------------------------------------ mask compilation
     def _vertex_mask(self, vb: ViewBundle, preds: List[X.Expr]):
@@ -422,15 +417,28 @@ class GRFusion:
             for m in hop_masks[1:]:
                 uniform_mask = uniform_mask & m  # only used by bfs/sssp paths
 
+            if spec.physical in ("bfs", "sssp", "bfs_path"):
+                backend = self.traversal.resolve_backend(
+                    view, requested=spec.backend,
+                    n_sources=int(start_pos.shape[0]),
+                )
+                plan.explain.append(f"traversal backend: {backend}")
+            elif spec.backend is not None:
+                plan.explain.append(
+                    "traversal backend: request ignored (enumeration has a "
+                    "single implementation)"
+                )
+
             if spec.physical == "bfs":
                 if targets is None and end_mask is not None:
                     tpos = jnp.argmax(end_mask)  # single const target
                     targets = jnp.broadcast_to(tpos, start_pos.shape).astype(jnp.int32)
-                dist = T.bfs(
+                dist = self.traversal.bfs(
                     view, start_pos,
                     edge_mask_by_row=uniform_mask, vertex_mask=gvmask,
                     target_pos=targets,
                     max_hops=min(spec.max_len, self.bfs_max_hops),
+                    backend=backend, graph=spec.graph,
                 )
                 tc = jnp.clip(targets, 0, view.n_vertices - 1)
                 d = jnp.take_along_axis(dist, tc[:, None], axis=1)[:, 0]
@@ -452,10 +460,10 @@ class GRFusion:
                     w = et.col(wcol).astype(jnp.float32)
                 else:
                     w = jnp.ones((et.capacity,), jnp.float32)
-                dist, parent = T.sssp(
-                    view, start_pos, weight_by_row=w,
+                dist, parent = self.traversal.sssp(
+                    view, start_pos, w,
                     edge_mask_by_row=uniform_mask, vertex_mask=gvmask,
-                    max_iters=64,
+                    max_iters=64, backend=backend, graph=spec.graph,
                 )
                 if targets is None and end_mask is not None and spec.end_anchor:
                     tpos = jnp.argmax(end_mask).astype(jnp.int32)
@@ -463,7 +471,7 @@ class GRFusion:
                 if targets is not None:
                     tc = jnp.clip(targets, 0, view.n_vertices - 1)
                     d = jnp.take_along_axis(dist, tc[:, None], axis=1)[:, 0]
-                    edges, verts, lens = T.reconstruct_paths(
+                    edges, verts, lens = self.traversal.reconstruct_paths(
                         view, parent, jnp.where(targets >= 0, targets, 0),
                         max_len=min(max(spec.max_len, 8), 64),
                     )
@@ -530,10 +538,10 @@ class GRFusion:
                     and R is None
                     and end_mask is None
                 )
-                out = self._enum(
+                out = self.traversal.enumerate_paths(
                     view, start_pos,
                     min_len=spec.min_len, max_len=spec.max_len,
-                    hop_edge_masks=self._hop_masks(spec, vb),
+                    hop_edge_masks=hop_masks,
                     vertex_mask=gvmask,
                     end_anchor=end_mask if targets is None else None,
                     close_loop=spec.close_loop,

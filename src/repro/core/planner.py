@@ -73,6 +73,10 @@ class PathSpec:
     sp_weight_attr: Optional[str] = None
     physical: str = "enum"  # 'enum' | 'bfs' | 'sssp'
     wants_path_string: bool = False
+    # traversal backend request: None = engine default ('auto' resolves via
+    # the TraversalEngine's frontier-density policy at execution time, when
+    # the view statistics and batch width are known)
+    backend: Optional[str] = None
 
 
 @dataclass
@@ -118,6 +122,8 @@ def plan_query(query: Q.Query, catalog) -> Plan:
             spec.sp_weight_attr = query.sp_hint
         if query.max_path_len is not None:
             spec.max_len = query.max_path_len
+        if query.backend is not None:
+            spec.backend = query.backend
 
     table_filters: Dict[str, List[X.Expr]] = {a: [] for a in table_aliases}
     join_conds: List[Tuple[str, str]] = []
@@ -278,6 +284,8 @@ def plan_query(query: Q.Query, catalog) -> Plan:
         else:
             spec.physical = "enum"
         explain.append(f"physical PathScan: {spec.physical}")
+        if spec.backend is not None:
+            explain.append(f"traversal backend request: {spec.backend}")
 
     return Plan(
         query=query,

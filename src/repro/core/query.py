@@ -176,6 +176,7 @@ class Query:
     sp_hint: Optional[str] = None  # SHORTESTPATH(attr)
     bf_hint: Optional[str] = None  # 'bfs' | 'dfs' traversal hint (paper §6.3)
     max_path_len: Optional[int] = None  # engine default applies when unset
+    backend: Optional[str] = None  # TraversalEngine backend; None = default
 
     def from_table(self, name, alias=None):
         self.froms.append(FromItem("table", name, alias or name))
@@ -228,4 +229,10 @@ class Query:
 
     def hint_max_length(self, n: int):
         self.max_path_len = n
+        return self
+
+    def traversal_backend(self, name: str):
+        """Pin the physical traversal backend for this query
+        ('xla_coo' | 'pallas_frontier' | 'reference')."""
+        self.backend = name
         return self

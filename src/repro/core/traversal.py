@@ -94,12 +94,12 @@ def _full_edge_mask(view: GraphView, edge_mask_by_row, edge_table_cap: int):
 # --------------------------------------------------------------------------
 # BFScan — multi-source frontier BFS
 # --------------------------------------------------------------------------
-@functools.partial(
-    jax.jit,
-    static_argnames=(
-        "max_hops", "block_size", "unroll_hops", "state_spec", "dist_dtype"
-    ),
+BFS_STATIC_ARGNAMES = (
+    "max_hops", "block_size", "unroll_hops", "state_spec", "dist_dtype"
 )
+
+
+@functools.partial(jax.jit, static_argnames=BFS_STATIC_ARGNAMES)
 def bfs(
     view: GraphView,
     source_pos: jnp.ndarray,  # int32 [S]; -1 = inactive query lane
@@ -193,7 +193,10 @@ def bfs(
 # --------------------------------------------------------------------------
 # SPScan — frontier Bellman-Ford with parent extraction
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("max_iters", "block_size"))
+SSSP_STATIC_ARGNAMES = ("max_iters", "block_size")
+
+
+@functools.partial(jax.jit, static_argnames=SSSP_STATIC_ARGNAMES)
 def sssp(
     view: GraphView,
     source_pos: jnp.ndarray,  # int32 [S]
@@ -245,9 +248,39 @@ def sssp(
         return new, jnp.any(new < dist), it + 1
 
     dist, _, _ = jax.lax.while_loop(cond, step, (dist0, jnp.asarray(True), jnp.int32(0)))
+    parent = _parent_pass(
+        view, dist, source_pos, weight_by_row,
+        edge_mask_by_row=edge_mask_by_row, block_size=block_size,
+    )
+    return dist, parent
 
-    # Parent extraction: one more pass; among edges achieving dist[dst] pick
-    # the lowest slot index (deterministic tie-break).
+
+def _parent_pass(
+    view: GraphView,
+    dist: jnp.ndarray,  # f32 [S, V] converged SSSP distances
+    source_pos: jnp.ndarray,  # int32 [S]
+    weight_by_row: jnp.ndarray,
+    edge_mask_by_row: jnp.ndarray | None = None,
+    *,
+    block_size: int = 1 << 16,
+) -> jnp.ndarray:
+    """Canonical parent extraction: one pass over the blocked COO stream;
+    among edges achieving dist[dst] pick the lowest slot index (deterministic
+    tie-break). Because slots index the padded ``all_coo`` stream, any
+    backend that produces the same ``dist`` gets bit-identical parents from
+    this pass — the seam the differential harness relies on.
+    """
+    V = view.n_vertices
+    S = dist.shape[0]
+    INF = jnp.float32(jnp.inf)
+    src_b, dst_b, eid_b, nb = _blocked_coo(view, block_size)
+    ecap = weight_by_row.shape[0]
+    emask_rows = _full_edge_mask(view, edge_mask_by_row, ecap)
+    eid_c = jnp.clip(eid_b, 0, ecap - 1)
+    ok_b = (eid_b >= 0) & jnp.take(emask_rows, eid_c)
+    w_b = jnp.where(ok_b, jnp.take(weight_by_row.astype(jnp.float32), eid_c), INF)
+    src_c = jnp.clip(src_b, 0, V - 1)
+
     def parent_body(i, par):
         cand = jnp.take(dist, src_c[i], axis=1) + w_b[i][None, :]
         reach = jnp.take_along_axis(
@@ -264,8 +297,10 @@ def sssp(
     at_source = (
         jnp.zeros((S, V), jnp.bool_).at[jnp.arange(S), source_pos].set(True, mode="drop")
     )
-    parent = jnp.where((parent == INT_MAX) | at_source | ~jnp.isfinite(dist), -1, parent)
-    return dist, parent
+    return jnp.where((parent == INT_MAX) | at_source | ~jnp.isfinite(dist), -1, parent)
+
+
+sssp_parents = jax.jit(_parent_pass, static_argnames=("block_size",))
 
 
 @functools.partial(jax.jit, static_argnames=("max_len", "block_size"))

@@ -1,0 +1,683 @@
+"""TraversalEngine: unified dispatch for all BFS/SSSP/path traversal.
+
+GRAPHITE (arXiv:1412.6477) argues traversal backends should be
+interchangeable *physical operators* behind one logical interface; GRFusion
+(arXiv:1709.06715) needs that seam so the planner can trade the blocked-COO
+XLA sweep against the fused Pallas frontier kernel per query. This module is
+that seam. Everything in the engine that walks a graph goes through here.
+
+Backend registry
+----------------
+  * ``xla_coo``          — the blocked-COO frontier sweep / Bellman-Ford in
+                           ``core/traversal.py``. Works everywhere, shapes
+                           are static per (S, V), jit-cached.
+  * ``pallas_frontier``  — the packed dst-sorted frontier path from
+                           ``kernels/frontier/ops.py``: one host-side edge
+                           sort per topology, then fused scatter/dedup/
+                           distance hops on the MXU (interpret mode off-TPU).
+                           SSSP runs dst-sorted packed Jacobi relaxation on
+                           the same packing.
+  * ``reference``        — pure-numpy oracle (independent of XLA *and*
+                           Pallas); the ground truth the differential suite
+                           compares everything against.
+  * ``auto``             — frontier-density policy: the fused kernel is
+                           selected on TPU backends for dense multi-source
+                           sweeps (avg fan-out and batch width above
+                           thresholds); everything else takes ``xla_coo``.
+
+All backends return bit-identical results by construction: BFS distances
+are integral hop counts; SSSP distances are the unique least fixpoint of
+float32 ``min(dist[src] + w)`` relaxation (order-independent for
+non-negative weights); SSSP parents always come from the *canonical*
+parent pass (``traversal.sssp_parents``) over the blocked COO stream, so
+identical distances imply identical parent slots.
+
+Caches
+------
+  * **Packing cache** — key ``(topology_key, block_rows, block_edges)``,
+    value the packed ``(packed_src, packed_eid, ldst)`` arrays. The
+    topology key is ``(graph_name, epoch)`` when the owning engine
+    registers the view and bumps the epoch on every compaction / delta
+    insert (the cheap path), or a content fingerprint of the COO + delta
+    arrays for standalone views. Edge sorting is therefore paid once per
+    compaction, not per query. Attribute updates (weights, tombstones,
+    predicate masks) never touch the key — the paper's §3.2 decoupling.
+  * **Plan (trace) cache** — module-level jitted entry points shared by
+    every engine instance; XLA traces are keyed on array shapes only, so
+    recompaction with unchanged capacities (and sibling engines with the
+    same shapes) reuses traces. ``stats`` counts traces and pack
+    builds/hits so tests can assert the second query is cache-hot.
+
+Batched admission
+-----------------
+``submit_reachability`` / ``submit_sssp`` enqueue point queries;
+``flush`` merges each queue into one ``[S, V]`` multi-source sweep (lanes
+padded to a power-of-two bucket to bound retracing). This is the paper's
+"thousands of queries share one sweep over the edge stream" serving shape.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import functools
+import hashlib
+import os
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import traversal as T
+from repro.core.graphview import GraphView
+from repro.kernels.frontier.ops import bfs_pallas, pack_edges_by_dst
+
+BACKENDS = ("xla_coo", "pallas_frontier", "reference")
+_INF = jnp.float32(jnp.inf)
+
+# Trace counters live at module level because the jitted entry points do
+# too: one XLA trace cache is shared by every TraversalEngine instance
+# (identical shapes never recompile per engine). The counters increment at
+# trace time only, so tests can assert "the second query re-traced
+# nothing". Per-engine event counts live on the instance; the ``stats``
+# property merges both views.
+_TRACE_COUNTS: collections.Counter = collections.Counter()
+
+
+def _trace_counted(fn, key, static_argnames=()):
+    def inner(*a, **k):
+        _TRACE_COUNTS[key] += 1  # runs at trace time only
+        return fn(*a, **k)
+
+    functools.update_wrapper(inner, fn)
+    return jax.jit(inner, static_argnames=static_argnames)
+
+
+_bfs_xla = _trace_counted(
+    T.bfs.__wrapped__, "traces_bfs_xla", T.BFS_STATIC_ARGNAMES
+)
+_sssp_xla = _trace_counted(
+    T.sssp.__wrapped__, "traces_sssp_xla", T.SSSP_STATIC_ARGNAMES
+)
+_enum_xla = _trace_counted(
+    T.enumerate_paths, "traces_enum",
+    (
+        "min_len", "max_len", "close_loop",
+        "work_capacity", "result_capacity", "count_only",
+    ),
+)
+
+
+def _reference_edges(view: GraphView, edge_mask_by_row=None):
+    """Live numpy (src, dst, eid) streams for the oracles: tombstoned /
+    masked rows dropped, endpoints in range. The single definition all
+    reference implementations share — semantic tweaks happen here once."""
+    V = view.n_vertices
+    src, dst, eid = (np.asarray(a) for a in view.all_coo())
+    ok = eid >= 0
+    if edge_mask_by_row is not None:
+        em = np.asarray(edge_mask_by_row)
+        ok = ok & em[np.clip(eid, 0, em.shape[0] - 1)]
+    ok = ok & (src < V) & (dst < V)
+    return src[ok], dst[ok], eid[ok]
+
+
+def _reference_vmask(view: GraphView, vertex_mask=None) -> np.ndarray:
+    vmask = np.asarray(view.v_valid)
+    if vertex_mask is not None:
+        vmask = vmask & np.asarray(vertex_mask)
+    return vmask
+
+
+@dataclasses.dataclass
+class PendingQuery:
+    """A point query admitted to the batcher; filled in by ``flush``."""
+
+    kind: str  # 'reach' | 'sssp'
+    source: int  # vertex position (-1 = unresolvable, answered unreachable)
+    target: int
+    result: Optional[dict] = None
+
+
+@jax.jit
+def _packed_sssp_dist(
+    dist0,  # f32 [S, VP] (INF init, 0 at sources, INF at masked)
+    src_safe,  # int32 [F] flat packed sources (clipped)
+    gdst,  # int32 [F] flat global dsts (VP = dropped)
+    w,  # f32 [F] per-slot weights (INF = inactive slot)
+    vmask_p,  # bool [VP]
+    max_iters,  # int32
+):
+    """Jacobi scatter-min relaxation over the dst-sorted packed stream.
+
+    Converges to the same float32 fixpoint as the blocked-COO Gauss-Seidel
+    sweep (min over identical candidate sets; float min is exact), which is
+    what makes cross-backend distances bit-identical.
+    """
+
+    def relax(dist):
+        cand = jnp.take(dist, src_safe, axis=1) + w[None, :]
+        new = dist.at[:, gdst].min(cand, mode="drop")
+        return jnp.where(vmask_p[None, :], new, _INF)
+
+    def cond(state):
+        dist, changed, it = state
+        return changed & (it < max_iters)
+
+    def step(state):
+        dist, _, it = state
+        new = relax(dist)
+        return new, jnp.any(new < dist), it + 1
+
+    dist, _, _ = jax.lax.while_loop(
+        cond, step, (dist0, jnp.asarray(True), jnp.int32(0))
+    )
+    return dist
+
+
+class TraversalEngine:
+    """Front door for all traversal dispatch (see module docstring)."""
+
+    def __init__(
+        self,
+        *,
+        default_backend: str = "auto",
+        block_rows: int = 128,
+        block_edges: int = 256,
+        block_size: int = 1 << 16,
+        interpret: Optional[bool] = None,
+        pack_cache_capacity: int = 16,
+        lane_width: int = 32,
+        max_lanes: int = 1024,
+    ):
+        if default_backend != "auto" and default_backend not in BACKENDS:
+            raise ValueError(f"unknown backend {default_backend!r}")
+        self.default_backend = default_backend
+        self.block_rows = block_rows
+        self.block_edges = block_edges
+        self.block_size = block_size
+        # Pallas interpret mode: required off-TPU; overridable for tests
+        self.interpret = (
+            interpret if interpret is not None
+            else jax.default_backend() != "tpu"
+        )
+        self.lane_width = lane_width
+        self.max_lanes = max_lanes  # widest single [S, V] sweep flush builds
+        self._stats = collections.Counter()
+        self._packs: "collections.OrderedDict" = collections.OrderedDict()
+        self._pack_cap = pack_cache_capacity
+        self._epochs: Dict[str, int] = {}
+        self._fp_cache: "collections.OrderedDict" = collections.OrderedDict()
+        self._pending: List[Tuple[GraphView, Optional[str], PendingQuery]] = []
+        self._pending_w: List[
+            Tuple[GraphView, Optional[str], object, PendingQuery]
+        ] = []
+
+    @property
+    def stats(self) -> collections.Counter:
+        """Per-engine event counts merged with the shared trace counters."""
+        return self._stats + _TRACE_COUNTS
+
+    # ------------------------------------------------------- topology epochs
+    def register_view(self, name: str):
+        """Start epoch tracking for a named graph (owning-engine path)."""
+        self._epochs.setdefault(name, 0)
+
+    def bump_epoch(self, name: str):
+        """Topology changed (compaction / delta insert): invalidate packs."""
+        self._epochs[name] = self._epochs.get(name, 0) + 1
+        stale = [k for k in self._packs if k[0][0] == name]
+        for k in stale:
+            del self._packs[k]
+
+    def topology_key(self, view: GraphView, graph: Optional[str] = None):
+        if graph is not None and graph in self._epochs:
+            return (graph, self._epochs[graph])
+        return self._fingerprint(view)
+
+    def _fingerprint(self, view: GraphView):
+        """Content key for standalone views (identity-memoized per object)."""
+        ent = self._fp_cache.get(id(view))
+        if ent is not None and ent[0] is view:
+            self._fp_cache.move_to_end(id(view))
+            return ent[1]
+        h = hashlib.blake2b(digest_size=16)
+        for a in (
+            view.coo_src, view.coo_dst, view.coo_eid,
+            view.delta_src, view.delta_dst, view.delta_eid, view.delta_valid,
+        ):
+            h.update(np.asarray(a).tobytes())
+        key = ("#fp", h.hexdigest())
+        self._fp_cache[id(view)] = (view, key)
+        while len(self._fp_cache) > 64:
+            self._fp_cache.popitem(last=False)
+        return key
+
+    # --------------------------------------------------------- packing cache
+    def get_pack(self, view: GraphView, graph: Optional[str] = None):
+        """Packed dst-sorted streams for the frontier kernel, cached per
+        (topology epoch, block shape)."""
+        key = (self.topology_key(view, graph), self.block_rows, self.block_edges)
+        hit = self._packs.get(key)
+        if hit is not None:
+            self._stats["pack_hits"] += 1
+            self._packs.move_to_end(key)
+            return hit
+        src, dst, eid = view.all_coo()
+        ps, pstream, ldst = pack_edges_by_dst(
+            np.asarray(src), np.asarray(dst), view.n_vertices,
+            block_rows=self.block_rows, block_edges=self.block_edges,
+        )
+        # the packer indexes the raw stream; translate to edge-TABLE rows so
+        # masks/weights gather correctly for delta and undirected streams
+        # (stream position != row there)
+        eid_np = np.asarray(eid)
+        safe = np.clip(pstream, 0, max(eid_np.shape[0] - 1, 0))
+        pe = np.where(pstream >= 0, eid_np[safe], -1).astype(np.int32)
+        pack = (jnp.asarray(ps), jnp.asarray(pe), jnp.asarray(ldst))
+        self._packs[key] = pack
+        while len(self._packs) > self._pack_cap:
+            self._packs.popitem(last=False)
+        self._stats["pack_builds"] += 1
+        return pack
+
+    # ------------------------------------------------------- backend policy
+    def resolve_backend(
+        self,
+        view: GraphView,
+        *,
+        requested: Optional[str] = None,
+        n_sources: int = 1,
+    ) -> str:
+        """Auto policy: frontier-density heuristic.
+
+        The fused MXU kernel amortizes its packed layout when the [S, V]
+        sweep is dense — wide query batches over high-fan-out graphs — and
+        only runs compiled on TPU (interpret mode elsewhere is a
+        correctness tool, not a fast path).
+        """
+        b = requested or self.default_backend
+        env = os.environ.get("REPRO_TRAVERSAL_BACKEND")
+        if b == "auto" and env:
+            b = env
+        if b != "auto":
+            if b not in BACKENDS:
+                raise ValueError(f"unknown traversal backend {b!r}")
+            return b
+        if jax.default_backend() == "tpu":
+            dense = float(view.avg_fan_out) >= 4.0 and n_sources >= 8
+            if dense:
+                return "pallas_frontier"
+        return "xla_coo"
+
+    # ------------------------------------------------------------------ BFS
+    def bfs(
+        self,
+        view: GraphView,
+        source_pos,
+        edge_mask_by_row=None,
+        vertex_mask=None,
+        target_pos=None,
+        *,
+        max_hops: int = 32,
+        backend: Optional[str] = None,
+        graph: Optional[str] = None,
+    ) -> jnp.ndarray:
+        """Hop distances int32 [S, V]; -1 unreachable. Bit-identical across
+        backends (targets only bound the sweep, identically everywhere)."""
+        source_pos = jnp.asarray(source_pos, jnp.int32)
+        b = self.resolve_backend(
+            view, requested=backend, n_sources=int(source_pos.shape[0])
+        )
+        self._stats["queries_bfs"] += 1
+        self._stats[f"backend_{b}"] += 1
+        if b == "xla_coo":
+            return _bfs_xla(
+                view, source_pos, edge_mask_by_row, vertex_mask,
+                target_pos, max_hops=max_hops, block_size=self.block_size,
+            )
+        if b == "pallas_frontier":
+            ps, pe, ldst = self.get_pack(view, graph)
+            vmask = view.v_valid if vertex_mask is None else (
+                view.v_valid & vertex_mask
+            )
+            return bfs_pallas(
+                source_pos, ps, pe, ldst, view.n_vertices,
+                edge_mask_by_row=edge_mask_by_row,
+                vertex_mask=vmask, target_pos=target_pos,
+                block_rows=self.block_rows, max_hops=max_hops,
+                interpret=self.interpret,
+            )
+        return jnp.asarray(
+            self._bfs_reference(
+                view, source_pos, edge_mask_by_row, vertex_mask,
+                target_pos, max_hops=max_hops,
+            )
+        )
+
+    @staticmethod
+    def _bfs_reference(
+        view, source_pos, edge_mask_by_row, vertex_mask, target_pos,
+        *, max_hops,
+    ) -> np.ndarray:
+        """Numpy oracle mirroring the XLA sweep's loop conditions exactly."""
+        V = view.n_vertices
+        src, dst, _ = _reference_edges(view, edge_mask_by_row)
+        vmask = _reference_vmask(view, vertex_mask)
+        sp = np.asarray(source_pos)
+        S = sp.shape[0]
+        frontier = np.zeros((S, V), bool)
+        lanes = (sp >= 0) & (sp < V)
+        frontier[np.arange(S)[lanes], sp[lanes]] = True
+        frontier &= vmask[None, :]
+        dist = np.where(frontier, 0, -1).astype(np.int32)
+        visited = frontier.copy()
+        tp = None if target_pos is None else np.asarray(target_pos)
+
+        def targets_done(d):
+            if tp is None:
+                return False
+            tc = np.clip(tp, 0, V - 1)
+            found = d[np.arange(S), tc] >= 0
+            found = found | (tp < 0) | (sp < 0)
+            return bool(found.all())
+
+        hop = 0
+        while hop < max_hops and frontier.any() and not targets_done(dist):
+            msgs = frontier[:, src]  # [S, E]
+            nxt_t = np.zeros((V, S), bool)
+            np.logical_or.at(nxt_t, dst, msgs.T)
+            nxt = nxt_t.T & ~visited & vmask[None, :]
+            dist = np.where(nxt, hop + 1, dist).astype(np.int32)
+            visited |= nxt
+            frontier = nxt
+            hop += 1
+        return dist
+
+    # ----------------------------------------------------------------- SSSP
+    def sssp(
+        self,
+        view: GraphView,
+        source_pos,
+        weight_by_row,
+        edge_mask_by_row=None,
+        vertex_mask=None,
+        *,
+        max_iters: int = 64,
+        backend: Optional[str] = None,
+        graph: Optional[str] = None,
+    ):
+        """(dist f32 [S, V], parent_slot int32 [S, V]). Parents always come
+        from the canonical blocked-COO parent pass, so equal distances give
+        equal parents regardless of backend."""
+        source_pos = jnp.asarray(source_pos, jnp.int32)
+        weight_by_row = jnp.asarray(weight_by_row, jnp.float32)
+        b = self.resolve_backend(
+            view, requested=backend, n_sources=int(source_pos.shape[0])
+        )
+        self._stats["queries_sssp"] += 1
+        self._stats[f"backend_{b}"] += 1
+        if b == "xla_coo":
+            return _sssp_xla(
+                view, source_pos, weight_by_row, edge_mask_by_row,
+                vertex_mask, max_iters=max_iters, block_size=self.block_size,
+            )
+        if b == "pallas_frontier":
+            dist = self._sssp_packed_dist(
+                view, source_pos, weight_by_row, edge_mask_by_row,
+                vertex_mask, max_iters=max_iters, graph=graph,
+            )
+        else:
+            dist = jnp.asarray(
+                self._sssp_reference_dist(
+                    view, source_pos, weight_by_row, edge_mask_by_row,
+                    vertex_mask, max_iters=max_iters,
+                )
+            )
+        parent = T.sssp_parents(
+            view, dist, source_pos, weight_by_row,
+            edge_mask_by_row, block_size=self.block_size,
+        )
+        return dist, parent
+
+    def _sssp_packed_dist(
+        self, view, source_pos, weight_by_row, edge_mask_by_row,
+        vertex_mask, *, max_iters, graph,
+    ):
+        ps, pe, ldst = self.get_pack(view, graph)
+        Tt, J, BE = ps.shape
+        VP = Tt * self.block_rows
+        V = view.n_vertices
+        ecap = weight_by_row.shape[0]
+        ok = pe >= 0
+        if edge_mask_by_row is not None:
+            ok = ok & jnp.take(
+                edge_mask_by_row, jnp.clip(pe, 0, ecap - 1)
+            )
+        w = jnp.where(ok, jnp.take(weight_by_row, jnp.clip(pe, 0, ecap - 1)), _INF)
+        gdst = (
+            jnp.arange(Tt, dtype=jnp.int32)[:, None, None] * self.block_rows + ldst
+        )
+        gdst = jnp.where(ldst >= 0, gdst, VP).reshape(-1)
+        src_safe = jnp.clip(ps, 0, VP - 1).reshape(-1)
+        vmask = view.v_valid if vertex_mask is None else (
+            view.v_valid & vertex_mask
+        )
+        vmask_p = jnp.pad(vmask, (0, VP - V), constant_values=False)
+        S = source_pos.shape[0]
+        dist0 = jnp.full((S, VP), _INF)
+        dist0 = dist0.at[jnp.arange(S), source_pos].set(0.0, mode="drop")
+        dist0 = jnp.where(vmask_p[None, :], dist0, _INF)
+        dist = _packed_sssp_dist(
+            dist0, src_safe, gdst, w.reshape(-1), vmask_p,
+            jnp.int32(max_iters),
+        )
+        return dist[:, :V]
+
+    @staticmethod
+    def _sssp_reference_dist(
+        view, source_pos, weight_by_row, edge_mask_by_row, vertex_mask,
+        *, max_iters,
+    ) -> np.ndarray:
+        """Numpy float32 Bellman-Ford to fixpoint (Jacobi sweeps)."""
+        V = view.n_vertices
+        src, dst, eid = _reference_edges(view, edge_mask_by_row)
+        w_rows = np.asarray(weight_by_row, np.float32)
+        w = w_rows[np.clip(eid, 0, w_rows.shape[0] - 1)].astype(np.float32)
+        vmask = _reference_vmask(view, vertex_mask)
+        sp = np.asarray(source_pos)
+        S = sp.shape[0]
+        dist = np.full((S, V), np.inf, np.float32)
+        lanes = (sp >= 0) & (sp < V)
+        dist[np.arange(S)[lanes], sp[lanes]] = 0.0
+        dist = np.where(vmask[None, :], dist, np.inf).astype(np.float32)
+        for _ in range(max_iters):
+            cand = (dist[:, src] + w[None, :]).astype(np.float32)
+            new_t = dist.T.copy()
+            np.minimum.at(new_t, dst, cand.T)
+            new = np.where(vmask[None, :], new_t.T, np.inf).astype(np.float32)
+            if not (new < dist).any():
+                break
+            dist = new
+        return dist
+
+    # ------------------------------------------------------------- paths
+    def reconstruct_paths(self, view, parent_slot, target_pos, *, max_len=32):
+        return T.reconstruct_paths(
+            view, parent_slot, target_pos,
+            max_len=max_len, block_size=self.block_size,
+        )
+
+    def enumerate_paths(self, view, start_pos, **kwargs):
+        """Bounded simple-path enumeration (single XLA implementation; the
+        differential suite checks its counts against a numpy brute force)."""
+        self._stats["queries_enum"] += 1
+        return _enum_xla(view, start_pos, **kwargs)
+
+    # -------------------------------------------------- batched admission
+    def submit_reachability(
+        self, view: GraphView, src_pos: int, dst_pos: int,
+        *, graph: Optional[str] = None,
+    ) -> PendingQuery:
+        q = PendingQuery("reach", int(src_pos), int(dst_pos))
+        self._pending.append((view, graph, q))
+        return q
+
+    def submit_sssp(
+        self, view: GraphView, src_pos: int, dst_pos: int, weight_by_row,
+        *, graph: Optional[str] = None,
+    ) -> PendingQuery:
+        """Weighted queries merge into one sweep only when they share the
+        same ``weight_by_row`` array object — pass the table column itself,
+        not a fresh copy per call."""
+        q = PendingQuery("sssp", int(src_pos), int(dst_pos))
+        self._pending_w.append((view, graph, weight_by_row, q))
+        return q
+
+    def _lanes(self, n: int, lane_width: Optional[int] = None) -> int:
+        lanes = max(lane_width or self.lane_width, 1)
+        while lanes < n:
+            lanes <<= 1
+        return lanes
+
+    def _chunks(self, qs: list) -> list:
+        return [qs[i : i + self.max_lanes] for i in range(0, len(qs), self.max_lanes)]
+
+    def flush(
+        self,
+        *,
+        max_hops: int = 16,
+        max_iters: int = 64,
+        edge_mask_by_row=None,
+        backend: Optional[str] = None,
+        lane_width: Optional[int] = None,
+        handles: Optional[List[PendingQuery]] = None,
+    ) -> List[PendingQuery]:
+        """Merge admitted point queries into [S, V] sweeps (per view for
+        reachability; per (view, weights) for weighted queries), each sweep
+        at most ``max_lanes`` wide, and resolve their PendingQueries.
+
+        ``handles`` restricts the flush to those specific queries — callers
+        that share one TraversalEngine (e.g. several QueryServers) must pass
+        their own handles so another caller's queries are never resolved
+        with this caller's edge mask / hop budget / backend.
+        """
+        only = None if handles is None else {id(h) for h in handles}
+
+        def _take(pending):
+            if only is None:
+                mine, rest = list(pending), []
+            else:
+                mine = [e for e in pending if id(e[-1]) in only]
+                rest = [e for e in pending if id(e[-1]) not in only]
+            pending.clear()
+            pending.extend(rest)
+            return mine
+
+        done: List[PendingQuery] = []
+        by_view: Dict[int, Tuple[GraphView, Optional[str], List[PendingQuery]]] = {}
+        for view, graph, q in _take(self._pending):
+            by_view.setdefault(id(view), (view, graph, []))[2].append(q)
+        for view, graph, all_qs in by_view.values():
+            for qs in self._chunks(all_qs):
+                lanes = self._lanes(len(qs), lane_width)
+                src = np.full(lanes, -1, np.int32)
+                tgt = np.full(lanes, -1, np.int32)
+                for i, q in enumerate(qs):
+                    src[i], tgt[i] = q.source, q.target
+                dist = self.bfs(
+                    view, jnp.asarray(src), edge_mask_by_row=edge_mask_by_row,
+                    target_pos=jnp.asarray(tgt), max_hops=max_hops,
+                    backend=backend, graph=graph,
+                )
+                d = np.asarray(
+                    jnp.take_along_axis(
+                        dist,
+                        jnp.clip(jnp.asarray(tgt), 0, view.n_vertices - 1)[:, None],
+                        axis=1,
+                    )[:, 0]
+                )
+                for i, q in enumerate(qs):
+                    hops = int(d[i]) if q.source >= 0 and q.target >= 0 else -1
+                    q.result = {"reachable": hops >= 0, "hops": hops}
+                    done.append(q)
+                self._stats["batches_flushed"] += 1
+
+        by_view_w: Dict[tuple, tuple] = {}
+        for view, graph, w, q in _take(self._pending_w):
+            by_view_w.setdefault((id(view), id(w)), (view, graph, w, []))[3].append(q)
+        for view, graph, w, all_qs in by_view_w.values():
+            for qs in self._chunks(all_qs):
+                lanes = self._lanes(len(qs), lane_width)
+                src = np.full(lanes, -1, np.int32)
+                tgt = np.full(lanes, -1, np.int32)
+                for i, q in enumerate(qs):
+                    src[i], tgt[i] = q.source, q.target
+                dist, _ = self.sssp(
+                    view, jnp.asarray(src), w,
+                    edge_mask_by_row=edge_mask_by_row,
+                    max_iters=max_iters, backend=backend, graph=graph,
+                )
+                d = np.asarray(
+                    jnp.take_along_axis(
+                        dist,
+                        jnp.clip(jnp.asarray(tgt), 0, view.n_vertices - 1)[:, None],
+                        axis=1,
+                    )[:, 0]
+                )
+                for i, q in enumerate(qs):
+                    ok = q.source >= 0 and q.target >= 0 and np.isfinite(d[i])
+                    q.result = {
+                        "reachable": bool(ok),
+                        "distance": float(d[i]) if ok else float("inf"),
+                    }
+                    done.append(q)
+                self._stats["batches_flushed"] += 1
+        return done
+
+
+# ---------------------------------------------------------------- reference
+def count_paths_reference(
+    view: GraphView,
+    start_pos,
+    *,
+    min_len: int,
+    max_len: int,
+    close_loop: bool = False,
+    edge_mask_by_row=None,
+    vertex_mask=None,
+) -> int:
+    """Brute-force simple-path count with ``enumerate_paths`` semantics
+    (interior vertices never revisited; the start vertex only on the
+    closing hop of a loop query). Small graphs only — oracle use."""
+    V = view.n_vertices
+    src, dst, _ = _reference_edges(view, edge_mask_by_row)
+    vmask = _reference_vmask(view, vertex_mask)
+    adj: Dict[int, list] = {}
+    for s, d in zip(src, dst):
+        adj.setdefault(int(s), []).append(int(d))
+    count = 0
+
+    def rec(path):
+        nonlocal count
+        L = len(path) - 1
+        if min_len <= L <= max_len:
+            if not close_loop or (L == max_len and path[-1] == path[0]):
+                count += 1
+        if L == max_len:
+            return
+        for nb in adj.get(path[-1], ()):
+            closing = close_loop and L == max_len - 1 and nb == path[0]
+            if not vmask[nb]:
+                continue
+            if nb in path and not closing:
+                continue
+            if close_loop and not closing and L == max_len - 1:
+                continue
+            rec(path + [nb])
+
+    for s in np.asarray(start_pos):
+        s = int(s)
+        if s >= 0 and s < V and vmask[s]:
+            rec([s])
+    return count

@@ -1,0 +1,1 @@
+"""Distributed substrate: logical sharding rules and gradient compression."""

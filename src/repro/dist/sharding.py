@@ -1,0 +1,89 @@
+"""Logical sharding rules -> PartitionSpec trees.
+
+Rules are ``(path_regex, trailing_spec)`` pairs matched against the
+'/'-joined tree path of each parameter leaf; the first match wins. The
+spec aligns to the LAST ``len(spec)`` dims of the leaf, so stacked-layer
+parameters (``[n_layers, ...]``) pick up a replicated leading dim
+automatically. Unmatched leaves are replicated.
+"""
+from __future__ import annotations
+
+import re
+from typing import Sequence, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def data_axes(mesh_axes) -> Tuple[str, ...]:
+    """Batch-sharding axes: pod-major when the multi-pod axis exists."""
+    return ("pod", "data") if "pod" in mesh_axes else ("data",)
+
+
+def _path_name(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        elif isinstance(k, jax.tree_util.GetAttrKey):
+            parts.append(str(k.name))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_tree(abstract_tree, rules: Sequence[Tuple[str, Tuple]]):
+    """Map an abstract param tree to PartitionSpecs via first-match rules."""
+    compiled = [(re.compile(pat), tuple(spec)) for pat, spec in rules]
+
+    def mk(path, leaf):
+        nd = len(leaf.shape)
+        name = _path_name(path)
+        for rex, spec in compiled:
+            if rex.search(name):
+                spec = spec[-nd:] if nd < len(spec) else spec
+                return P(*((None,) * (nd - len(spec))) + tuple(spec))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(mk, abstract_tree)
+
+
+def lm_param_rules(mesh_axes):
+    """Megatron-style TP over 'model'; MoE experts sharded over 'model'."""
+    m = "model"
+    return [
+        (r"moe/w_(gate|up|down)$", (m, None, None)),  # expert-parallel
+        (r"moe/(w_router|b_router)$", ()),
+        (r"attn/(wq|wk|wv|wq_b|wk_b|wv_b)$", (None, m)),
+        (r"attn/wo$", (m, None)),
+        (r"(ffn|shared)/w_(gate|up)$", (None, m)),
+        (r"(ffn|shared)/w_down$", (m, None)),
+        (r"embed$", (m, None)),  # vocab-sharded embedding
+        (r"(lm_head|mtp/proj)$", (None, m)),
+    ]
+
+
+def lm_param_rules_tp_experts(mesh_axes):
+    """Expert counts that don't divide the mesh: TP inside each expert."""
+    m = "model"
+    rules = [
+        (r"moe/w_(gate|up)$", (None, None, m)),
+        (r"moe/w_down$", (None, m, None)),
+    ]
+    return rules + lm_param_rules(mesh_axes)
+
+
+def lm_batch_specs(mesh_axes):
+    b = data_axes(mesh_axes)
+    return {"tokens": P(b, None), "labels": P(b, None)}
+
+
+def fm_param_rules(mesh_axes):
+    """Factorization-machine tables: rows (vocab) sharded over 'model'."""
+    m = "model"
+    return [
+        (r"(^|/)v$", (m, None)),
+        (r"(^|/)w$", (m,)),
+    ]

@@ -27,26 +27,38 @@ def pack_edges_by_dst(src, dst, n_vertices, *, block_rows=128, block_edges=256):
     gather, ldst, T, J = pack_segments(
         dst[order], n_vertices, block_rows=block_rows, block_edges=block_edges
     )
+    if len(src) == 0:  # empty stream: all-padding tiles
+        pad = np.full_like(gather, -1, dtype=np.int32)
+        return pad, pad.copy(), ldst
     src_sorted = src[order]
-    safe = np.clip(gather, 0, max(len(src) - 1, 0))
+    safe = np.clip(gather, 0, len(src) - 1)
     packed_src = np.where(gather >= 0, src_sorted[safe], -1)
     packed_eid = np.where(gather >= 0, order[safe], -1)
     return packed_src.astype(np.int32), packed_eid.astype(np.int32), ldst
 
 
 def bfs_pallas(
-    sources,  # int32 [S] vertex positions
+    sources,  # int32 [S] vertex positions (-1 = inactive lane)
     packed_src: jnp.ndarray,  # [T, J, BE]
     packed_eid: jnp.ndarray,  # [T, J, BE]
     ldst: jnp.ndarray,  # [T, J, BE]
     n_vertices: int,
     edge_mask_by_row: jnp.ndarray | None = None,
+    vertex_mask: jnp.ndarray | None = None,  # bool [V]
+    target_pos: jnp.ndarray | None = None,  # int32 [S] early-exit targets
     *,
     block_rows: int = 128,
     max_hops: int = 8,
     interpret: bool = True,
 ):
-    """Returns dist int32 [S, V] (-1 unreachable)."""
+    """Returns dist int32 [S, V] (-1 unreachable).
+
+    Vertex masks are folded into the packed edge validity (an edge from or
+    into a masked vertex never fires), matching the blocked-COO sweep's
+    semantics exactly. With ``target_pos`` the host hop loop stops once
+    every lane has reached its target (or its lane is inactive), mirroring
+    the XLA sweep's while-loop condition.
+    """
     packed_src = jnp.asarray(packed_src)
     packed_eid = jnp.asarray(packed_eid)
     ldst = jnp.asarray(ldst)
@@ -62,18 +74,46 @@ def bfs_pallas(
     else:
         eok = packed_eid >= 0
     src_ok = (packed_src >= 0) & eok
-    ldst_m = jnp.where(src_ok, ldst, -1)
     src_safe = jnp.clip(packed_src, 0, VP - 1)
+    if vertex_mask is not None:
+        vmask_p = jnp.pad(
+            jnp.asarray(vertex_mask, jnp.bool_), (0, VP - n_vertices),
+            constant_values=False,
+        )
+        gdst = (
+            jnp.arange(T, dtype=jnp.int32)[:, None, None] * block_rows + ldst
+        )
+        src_ok = (
+            src_ok
+            & jnp.take(vmask_p, src_safe)
+            & jnp.take(vmask_p, jnp.clip(gdst, 0, VP - 1))
+        )
+    ldst_m = jnp.where(src_ok, ldst, -1)
 
     frontier = (
         jnp.zeros((VP, S), jnp.float32)
         .at[sources, jnp.arange(S)]
         .set(1.0, mode="drop")
     )
+    if vertex_mask is not None:
+        frontier = frontier * vmask_p.astype(jnp.float32)[:, None]
     visited = frontier
     dist = jnp.where(frontier > 0, 0, -1).astype(jnp.int32)
 
+    tgt_c = None
+    if target_pos is not None:
+        tgt_c = jnp.clip(jnp.asarray(target_pos, jnp.int32), 0, VP - 1)
+
     for h in range(1, max_hops + 1):
+        # same stop conditions as the XLA sweep's while-loop, checked
+        # before each hop: frontier drained, or every lane found its target
+        if not bool(jnp.any(frontier > 0)):
+            break
+        if tgt_c is not None:
+            found = dist[tgt_c, jnp.arange(S)] >= 0
+            found = found | (target_pos < 0) | (sources < 0)
+            if bool(jnp.all(found)):
+                break
         msgs = jnp.take(frontier, src_safe.reshape(-1), axis=0).reshape(T, J, BE, S)
         msgs = msgs * src_ok[..., None]
         frontier, dist, visited = frontier_hop(

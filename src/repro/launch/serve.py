@@ -18,6 +18,11 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="grfusion")
     ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument(
+        "--backend", default=None,
+        choices=["auto", "xla_coo", "pallas_frontier", "reference"],
+        help="traversal backend for the graph-query serving path",
+    )
     args = ap.parse_args()
 
     module = configs.get(args.arch)
@@ -49,18 +54,21 @@ def main():
 
     g = random_graph(5000, 25000, kind="powerlaw", seed=0)
     vd, ed = graph_tables(g)
-    eng = GRFusion()
+    eng = GRFusion(traversal_backend=args.backend or "auto")
     eng.create_table("V", vd)
     eng.create_table("E", ed, capacity=len(ed["src"]) + 1024)
     eng.create_graph_view("G", vertexes="V", edges="E", v_id="vid",
                           e_src="src", e_dst="dst")
-    srv = QueryServer(eng, "G", lane_width=32, max_hops=12)
+    srv = QueryServer(eng, "G", lane_width=32, max_hops=12,
+                      backend=args.backend)
     rnp = np.random.default_rng(1)
     for _ in range(args.requests):
         srv.submit(int(rnp.integers(0, 5000)), int(rnp.integers(0, 5000)))
     results = srv.flush()
     reach = sum(r["reachable"] for r in results)
+    stats = dict(eng.traversal.stats)
     print(f"answered {len(results)} reachability queries; {reach} reachable")
+    print(f"traversal stats: {stats}")
 
 
 if __name__ == "__main__":

@@ -95,16 +95,25 @@ class LMServer:
 
 
 class QueryServer:
-    """Batches graph-relational reachability queries into one BFS sweep."""
+    """Batches graph-relational reachability queries into one BFS sweep.
 
-    def __init__(self, engine, graph: str, *, lane_width: int = 64, max_hops: int = 16):
-        from repro.core import traversal as T
+    Thin admission shim over ``TraversalEngine``'s batched multi-query
+    path: external vertex ids are resolved to positions, enqueued, and one
+    ``flush`` merges every pending query into [S, V] frontier sweeps (the
+    traversal engine buckets lane counts to bound retracing). ``backend``
+    pins a physical traversal backend; None keeps the engine default.
+    """
 
+    def __init__(
+        self, engine, graph: str, *, lane_width: int = 64,
+        max_hops: int = 16, backend: Optional[str] = None,
+    ):
         self.engine = engine
         self.graph = graph
-        self.width = lane_width
+        self.lane_width = lane_width
         self.max_hops = max_hops
-        self._bfs = T.bfs
+        self.backend = backend
+        self.trav = engine.traversal
         self.pending: List[Dict] = []
 
     def submit(self, src_id: int, dst_id: int):
@@ -114,28 +123,28 @@ class QueryServer:
         if not self.pending:
             return []
         vb = self.engine.views[self.graph]
-        out: List[Dict] = []
-        for i in range(0, len(self.pending), self.width):
-            chunk = self.pending[i : i + self.width]
-            pad = self.width - len(chunk)
-            src = jnp.asarray([q["src"] for q in chunk] + [0] * pad, jnp.int32)
-            dst = jnp.asarray([q["dst"] for q in chunk] + [0] * pad, jnp.int32)
-            sp, sf = vb.view.id_index.lookup(src)
-            tp, tf = vb.view.id_index.lookup(dst)
-            sp = jnp.where(sf, sp, -1)
-            dist = self._bfs(
-                vb.view, sp, target_pos=jnp.where(tf, tp, -1),
-                edge_mask_by_row=self.engine.tables[vb.edge_table].valid,
-                max_hops=self.max_hops,
+        ids = jnp.asarray(
+            [[q["src"], q["dst"]] for q in self.pending], jnp.int32
+        )
+        pos, found = vb.view.id_index.lookup(ids.reshape(-1))
+        pos = np.asarray(jnp.where(found, pos, -1)).reshape(-1, 2)
+        handles = [
+            self.trav.submit_reachability(
+                vb.view, int(sp), int(tp), graph=self.graph
             )
-            d = np.asarray(
-                jnp.take_along_axis(
-                    dist, jnp.clip(tp, 0, vb.view.n_vertices - 1)[:, None], axis=1
-                )[:, 0]
-            )
-            for j, q in enumerate(chunk):
-                out.append(
-                    {**q, "reachable": bool(d[j] >= 0), "hops": int(d[j])}
-                )
+            for sp, tp in pos
+        ]
+        # flush only OUR handles: other servers sharing this engine keep
+        # their queue (and their own edge mask / hop budget / backend)
+        self.trav.flush(
+            max_hops=self.max_hops,
+            edge_mask_by_row=self.engine.tables[vb.edge_table].valid,
+            backend=self.backend,
+            lane_width=self.lane_width,
+            handles=handles,
+        )
+        out = [
+            {**q, **h.result} for q, h in zip(self.pending, handles)
+        ]
         self.pending = []
         return out

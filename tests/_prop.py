@@ -1,0 +1,124 @@
+"""Property-testing shim: real hypothesis when importable, otherwise a
+seeded deterministic fallback so the suite collects and runs offline.
+
+Usage in tests (drop-in for the hypothesis names used in this repo):
+
+    from _prop import given, settings, st
+
+The fallback implements the strategy subset this suite uses — integers,
+floats, booleans, just, tuples, lists (with ``unique=True``), flatmap —
+and runs each ``@given`` test on ``max_examples`` samples drawn from a
+fixed per-test seed (derived from the test name), so failures reproduce
+across runs and machines. Shrinking, assume(), and the full hypothesis
+API are NOT provided; keep strategies within this subset or guard real
+hypothesis-only features with HAVE_HYPOTHESIS.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised when hypothesis is installed
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def map(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)))
+
+        def flatmap(self, f):
+            return _Strategy(lambda rng: f(self._draw(rng)).draw(rng))
+
+    class _St:
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1))
+            )
+
+        @staticmethod
+        def floats(min_value, max_value, allow_nan=False, allow_infinity=False):
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value))
+            )
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def just(value):
+            return _Strategy(lambda rng: value)
+
+        @staticmethod
+        def sampled_from(seq):
+            seq = list(seq)
+            return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+        @staticmethod
+        def tuples(*strats):
+            return _Strategy(lambda rng: tuple(s.draw(rng) for s in strats))
+
+        @staticmethod
+        def lists(elements, *, min_size=0, max_size=10, unique=False):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                if not unique:
+                    return [elements.draw(rng) for _ in range(n)]
+                out, seen = [], set()
+                for _ in range(20 * max(n, 1)):
+                    if len(out) >= n:
+                        break
+                    v = elements.draw(rng)
+                    if v not in seen:
+                        seen.add(v)
+                        out.append(v)
+                return out
+
+            return _Strategy(draw)
+
+    st = _St()
+
+    def settings(max_examples=10, deadline=None, **_kw):
+        def deco(fn):
+            fn._prop_max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(*strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_prop_max_examples", 10)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                for i in range(n):
+                    rng = np.random.default_rng((seed, i))
+                    drawn = tuple(s.draw(rng) for s in strats)
+                    try:
+                        fn(*args, *drawn, **kwargs)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example (offline shim, case {i}): "
+                            f"{drawn!r}"
+                        ) from e
+
+            # hide the drawn parameters from pytest's fixture resolution
+            # (functools.wraps sets __wrapped__, which pytest follows)
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+
+        return deco

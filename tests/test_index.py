@@ -1,6 +1,6 @@
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core.index import IdIndex
 

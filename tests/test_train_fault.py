@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.data.pipeline import lm_batch_fn
 from repro.dist.compression import Compressor, dequantize_int8, quantize_int8
@@ -145,10 +145,14 @@ def test_ring_allreduce_single_device_identity():
 
     from repro.dist.compression import ring_allreduce_int8
 
+    shard_map = getattr(jax, "shard_map", None)
+    if shard_map is None:  # jax < 0.5 keeps it in experimental
+        from jax.experimental.shard_map import shard_map
+
     mesh = jax.make_mesh((1,), ("d",))
     x = jnp.arange(8.0)
     f = jax.jit(
-        jax.shard_map(
+        shard_map(
             partial(ring_allreduce_int8, axis_name="d"),
             mesh=mesh, in_specs=P(), out_specs=P(),
         )

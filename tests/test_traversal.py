@@ -3,7 +3,7 @@ import heapq
 
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, st
 
 from repro.core import traversal as T
 from repro.core.graphview import build_graph_view

@@ -1,0 +1,154 @@
+"""TraversalEngine unit tests: backend policy, per-query knob, serving path."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import GRFusion
+from repro.core.graphview import build_graph_view
+from repro.core.query import Query, P, col
+from repro.core.table import Table
+from repro.core.traversal_engine import TraversalEngine
+from repro.serve.engine import QueryServer
+
+
+def _chain_view(n=12):
+    vt = Table.create("V", {"vid": np.arange(n, dtype=np.int32)})
+    et = Table.create("E", {
+        "src": np.arange(n - 1, dtype=np.int32),
+        "dst": np.arange(1, n, dtype=np.int32),
+        "w": np.ones(n - 1, np.float32),
+    })
+    return build_graph_view("G", vt, et, v_id="vid", e_src="src", e_dst="dst")
+
+
+def test_auto_policy_defaults_to_xla_on_cpu():
+    view = _chain_view()
+    te = TraversalEngine()
+    assert te.resolve_backend(view, n_sources=64) == "xla_coo"
+
+
+def test_env_override_and_validation(monkeypatch):
+    view = _chain_view()
+    te = TraversalEngine()
+    monkeypatch.setenv("REPRO_TRAVERSAL_BACKEND", "reference")
+    assert te.resolve_backend(view) == "reference"
+    # explicit request beats the env override
+    assert te.resolve_backend(view, requested="xla_coo") == "xla_coo"
+    monkeypatch.setenv("REPRO_TRAVERSAL_BACKEND", "nonsense")
+    with pytest.raises(ValueError):
+        te.resolve_backend(view)
+    with pytest.raises(ValueError):
+        TraversalEngine(default_backend="bogus")
+
+
+@pytest.fixture
+def social():
+    eng = GRFusion()
+    eng.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "fName": np.array(["Edy", "Jones", "Bill", "Ann", "Cara"]),
+    }, capacity=8)
+    eng.create_table("Relationships", {
+        "uId1": np.array([1, 2, 3, 4]),
+        "uId2": np.array([3, 3, 4, 5]),
+        "w": np.array([1.0, 1.0, 2.0, 0.5], np.float32),
+    }, capacity=16)
+    eng.create_graph_view(
+        "SocialNetwork", vertexes="Users", edges="Relationships",
+        v_id="uId", e_src="uId1", e_dst="uId2", directed=False,
+    )
+    return eng
+
+
+def _reach_query(backend=None):
+    q = (Query().from_table("Users", "A").from_table("Users", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Edy") & (col("B.fName") == "Cara")
+                & (P("PS").start.id == col("A.uId"))
+                & (P("PS").end.id == col("B.uId")))
+         .select(exists=col("PS.exists"), length=col("PS.length"))
+         .limit(1))
+    if backend:
+        q = q.traversal_backend(backend)
+    return q
+
+
+@pytest.mark.parametrize("backend", ["xla_coo", "pallas_frontier", "reference"])
+def test_engine_reachability_same_answer_on_every_backend(social, backend):
+    base = social.run(_reach_query())
+    r = social.run(_reach_query(backend))
+    assert any(f"traversal backend: {backend}" in e for e in r.explain)
+    assert bool(r.columns["exists"][0]) == bool(base.columns["exists"][0])
+    assert int(r.columns["length"][0]) == int(base.columns["length"][0])
+    assert social.traversal.stats[f"backend_{backend}"] >= 1
+
+
+@pytest.mark.parametrize("backend", ["xla_coo", "pallas_frontier", "reference"])
+def test_engine_sssp_same_answer_on_every_backend(social, backend):
+    q = (Query().from_table("Users", "A").from_table("Users", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Edy") & (col("B.fName") == "Cara")
+                & (P("PS").start.id == col("A.uId"))
+                & (P("PS").end.id == col("B.uId")))
+         .hint_shortest_path("w")
+         .select(distance=col("PS.distance"))
+         .traversal_backend(backend))
+    r = social.run(q)
+    assert r.count == 1
+    assert float(r.columns["distance"][0]) == pytest.approx(3.5)
+
+
+def test_query_server_batches_through_traversal_engine(social):
+    srv = QueryServer(social, "SocialNetwork", lane_width=8, max_hops=8)
+    srv.submit(1, 5)
+    srv.submit(5, 1)
+    srv.submit(1, 999)  # unknown id => unreachable, not an error
+    out = srv.flush()
+    assert [o["reachable"] for o in out] == [True, True, False]
+    assert out[0]["hops"] == 3
+    assert social.traversal.stats["batches_flushed"] == 1
+    assert social.traversal.stats["queries_bfs"] == 1  # merged into one sweep
+
+
+def test_two_query_servers_do_not_cross_flush(social):
+    # each server flushes only its own handles; if srv1's flush drained
+    # srv2's queue it would answer with srv1's hop budget (8) and the
+    # second assertion would see reachable=True
+    srv1 = QueryServer(social, "SocialNetwork", lane_width=8, max_hops=8)
+    srv2 = QueryServer(social, "SocialNetwork", lane_width=8, max_hops=1)
+    srv1.submit(1, 5)
+    srv2.submit(1, 5)
+    assert srv1.flush()[0]["reachable"]
+    assert not srv2.flush()[0]["reachable"]  # 1 hop is not enough
+
+
+def test_flush_chunks_wide_batches():
+    view = _chain_view(16)
+    te = TraversalEngine(lane_width=4, max_lanes=4)
+    handles = [te.submit_reachability(view, 0, i % 16) for i in range(10)]
+    te.flush(max_hops=20)
+    before = te.stats["queries_bfs"]
+    assert before == 3  # ceil(10 / max_lanes) sweeps, each at most 4 lanes
+    for i, h in enumerate(handles):
+        assert h.result["reachable"] and h.result["hops"] == i % 16
+
+
+def test_submit_sssp_merges_shared_weight_array():
+    view = _chain_view(10)
+    w = jnp.full((9,), 1.0, jnp.float32)
+    te = TraversalEngine(lane_width=4)
+    hs = [te.submit_sssp(view, 0, t, w) for t in (3, 5, 7)]
+    te.flush(max_iters=16)
+    assert te.stats["queries_sssp"] == 1  # same weights object => one sweep
+    assert [h.result["distance"] for h in hs] == [3.0, 5.0, 7.0]
+
+
+def test_submit_sssp_admission():
+    view = _chain_view(10)
+    w = jnp.full((9,), 2.0, jnp.float32)
+    te = TraversalEngine(lane_width=4)
+    h1 = te.submit_sssp(view, 0, 9, w)
+    h2 = te.submit_sssp(view, 9, 0, w)
+    te.flush(max_iters=16)
+    assert h1.result["reachable"] and h1.result["distance"] == pytest.approx(18.0)
+    assert not h2.result["reachable"]
