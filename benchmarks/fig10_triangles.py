@@ -12,6 +12,8 @@ import jax.numpy as jnp
 from repro.baselines.sqlgraph import triangle_count_joins
 from repro.core import traversal as T
 from repro.core.graphview import build_graph_view
+from repro.core.logical import PathSpec
+from repro.core.optimizer import choose_work_capacity
 from repro.core.table import Table
 from repro.data.synthetic import graph_tables, random_graph
 
@@ -29,9 +31,12 @@ def run(quick: bool = False):
     lab = jnp.asarray(ed["label"])
     sel = jnp.asarray(ed["sel"])
 
-    wcap0 = 1
-    while wcap0 < 4 * E:  # hop expansions are bounded by a few x edge count
-        wcap0 <<= 1
+    # initial work-buffer guess from the optimizer's §6.3 memory rule (the
+    # same rule the engine's PathScanExec uses), then escalate on overflow
+    spec = PathSpec(alias="T", graph="G", min_len=3, max_len=3, close_loop=True)
+    wcap0 = choose_work_capacity(
+        spec, float(view.avg_fan_out), view.n_vertices, None, max_cap=1 << 20
+    )
 
     rows = []
     for s in sels:

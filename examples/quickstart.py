@@ -2,8 +2,13 @@
 
 Builds the paper's Fig-3/4 social network, creates an UNDIRECTED graph view
 (Listing 1), and runs the paper's flagship queries through cross-data-model
-query pipelines: vertex scan (Listing 5), friends-of-friends (Listing 2),
-reachability with LIMIT 1 (Listing 3), and an online update (§3.3).
+operator trees: vertex scan (Listing 5), friends-of-friends (Listing 2),
+reachability with LIMIT 1 (Listing 3), shortest path on a sub-graph
+(Listings 6/8), and an online update (§3.3).
+
+Every query is also shown through ``GRFusion.explain(query)`` — the typed
+physical plan: PathScan sits in the same operator tree as scans/joins, and
+the printed form names each optimizer rewrite rule that shaped it.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -49,43 +54,76 @@ def main():
     )
     print("Listing 5 (vertexes of Smiths):", r.rows())
 
-    # Listing 2: friends-of-friends of lawyers over recent relationships
+    # Listing 2: friends-of-friends of lawyers over recent relationships.
+    # The TableScan(Users) and the PathScan compose in ONE operator tree;
+    # the optimizer pushes the Job filter into the scan, infers the length
+    # bound [2, 2] (§6.1), and pushes the sDate predicate into the
+    # traversal's per-hop edge masks (§6.2).
     PS = P("PS")
-    r = eng.run(
-        Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
-        .where((col("U.Job") == "Lawyer")
-               & (PS.start.id == col("U.uId"))
-               & (PS.length == 2)
-               & (PS.edges[0:"*"].attr("sDate") > 20000101))
-        .select(lawyer=col("U.fName"), fof=PS.end.attr("lstName"))
-    )
+    q2 = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+          .where((col("U.Job") == "Lawyer")
+                 & (PS.start.id == col("U.uId"))
+                 & (PS.length == 2)
+                 & (PS.edges[0:"*"].attr("sDate") > 20000101))
+          .select(lawyer=col("U.fName"), fof=PS.end.attr("lstName")))
+    print("\nListing 2 EXPLAIN:")
+    print(eng.explain(q2).pretty())
+    r = eng.run(q2)
     print("Listing 2 (friends-of-friends):", r.rows())
-    print("  plan:", "; ".join(r.explain))
 
-    # Listing 3: reachability, LIMIT 1 -> frontier-BFS fast path
-    r = eng.run(
-        Query().from_table("Users", "A").from_table("Users", "B")
-        .from_paths("SocialNetwork", "PS")
-        .where((col("A.fName") == "Edy") & (col("B.fName") == "Cara")
-               & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.uId")))
-        .select(hops=col("PS.length")).limit(1)
-    )
-    print("Listing 3 (Edy ->* Cara):", r.rows(), "via", r.explain[1])
+    # Listing 3: reachability, LIMIT 1 — the physical-pathscan rule picks
+    # the frontier-BFS fast path because both path ends are anchored
+    q3 = (Query().from_table("Users", "A").from_table("Users", "B")
+          .from_paths("SocialNetwork", "PS")
+          .where((col("A.fName") == "Edy") & (col("B.fName") == "Cara")
+                 & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.uId")))
+          .select(hops=col("PS.length")).limit(1))
+    print("\nListing 3 EXPLAIN:")
+    print(eng.explain(q3).pretty())
+    r = eng.run(q3)
+    print("Listing 3 (Edy ->* Cara):", r.rows())
 
-    # §3.3 online update: a new relationship shortens the path (delta buffer,
-    # no topology rebuild)
+    # Listings 6/8: SHORTESTPATH hint + sub-graph predicate -> SPScan
+    eng.create_table("Locs", {"lid": np.arange(5)})
+    eng.create_table("Roads", {
+        "rid": np.arange(6),
+        "s": np.array([0, 0, 1, 2, 3, 1]), "d": np.array([1, 2, 2, 3, 4, 4]),
+        "dist": np.array([1.0, 4.0, 1.0, 1.0, 5.0, 10.0]),
+        "spd": np.array([60, 20, 60, 60, 60, 60]),
+    })
+    eng.create_graph_view("RoadNet", vertexes="Locs", edges="Roads",
+                          v_id="lid", e_src="s", e_dst="d")
+    RS = P("RS")
+    q6 = (Query().from_paths("RoadNet", "RS")
+          .hint_shortest_path("dist")
+          .where((RS.start.id == 0) & (RS.end.id == 4)
+                 & (RS.edges[0:"*"].attr("spd") > 30))
+          .select(d=col("RS.distance"), length=col("RS.length")))
+    print("\nListing 6/8 EXPLAIN:")
+    print(eng.explain(q6).pretty())
+    r = eng.run(q6)
+    print("Listing 6/8 (shortest path, spd > 30):", r.rows())
+
+    # two PATHS sources in one query: stacked PathScan plan nodes — the
+    # second traversal seeds from the first one's end vertices (§5.3)
+    P1, P2 = P("P1"), P("P2")
+    qq = (Query()
+          .from_paths("SocialNetwork", "P1").from_paths("SocialNetwork", "P2")
+          .where((P1.start.id == 1) & (P1.length == 1)
+                 & (P2.start.id == P1.end.id) & (P2.length == 1))
+          .select(mid=P1.end.id, end=P2.end.id))
+    r = eng.run(qq)
+    print("\ntwo stacked PATHS sources:", r.rows())
+
+    # §3.3 online update: a new relationship shortens the path. A prepared
+    # plan is optimized once and re-executed against live catalog state.
+    prepared = eng.prepare(q3)
     eng.insert("Relationships", {
         "relId": np.array([99]), "uId1": np.array([1]), "uId2": np.array([5]),
         "startDate": np.array([20240101]), "isRelative": np.array([0]),
     })
-    r = eng.run(
-        Query().from_table("Users", "A").from_table("Users", "B")
-        .from_paths("SocialNetwork", "PS")
-        .where((col("A.fName") == "Edy") & (col("B.fName") == "Cara")
-               & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.uId")))
-        .select(hops=col("PS.length")).limit(1)
-    )
-    print("after online insert:", r.rows())
+    r = prepared.run()
+    print("after online insert (prepared plan, no re-planning):", r.rows())
 
 
 if __name__ == "__main__":

@@ -1,14 +1,59 @@
 #!/usr/bin/env bash
-# Tier-1 CI: fast test suite (slow dry-run compiles excluded) plus a quick
-# benchmark smoke. Run from the repo root:  bash scripts/ci.sh
+# Tier-1 CI, split into named stages with per-stage timing. Run from the
+# repo root:  bash scripts/ci.sh [stage ...]
+#
+# Stages (default: all, in order):
+#   collect       pytest collection only — fails fast on import/collection
+#                 errors before any slow work starts
+#   tier1         fast test suite (slow dry-run compiles excluded)
+#   differential  cross-backend traversal equivalence suite (-m differential)
+#   bench         quick-size benchmark smoke (REPRO_BENCH_QUICK=1)
+#
 # The full suite including slow markers is:  python -m pytest -q
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== tier-1 tests (slow excluded) =="
-python -m pytest -q -m "not slow"
+STAGES=("$@")
+if [ ${#STAGES[@]} -eq 0 ]; then
+  STAGES=(collect tier1 differential bench)
+fi
 
-echo "== benchmark smoke (quick sizes) =="
-REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+declare -a TIMINGS=()
 
-echo "CI OK"
+run_stage() {
+  local name="$1"; shift
+  echo "== stage: ${name} =="
+  local t0 t1
+  t0=$(date +%s)
+  "$@"
+  t1=$(date +%s)
+  TIMINGS+=("${name}: $((t1 - t0))s")
+  echo "== stage ${name} OK in $((t1 - t0))s =="
+}
+
+for stage in "${STAGES[@]}"; do
+  case "$stage" in
+    collect)
+      # collection errors (bad imports, syntax) abort the run immediately
+      run_stage collect python -m pytest -q --collect-only -m "not slow"
+      ;;
+    tier1)
+      run_stage tier1 python -m pytest -q -m "not slow and not differential"
+      ;;
+    differential)
+      run_stage differential python -m pytest -q -m differential
+      ;;
+    bench)
+      run_stage bench env REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+      ;;
+    *)
+      echo "unknown stage: ${stage}" >&2
+      exit 2
+      ;;
+  esac
+done
+
+echo "CI OK — stage timings:"
+for t in "${TIMINGS[@]}"; do
+  echo "  ${t}"
+done

@@ -20,13 +20,17 @@ from typing import Dict, List, Mapping, Optional
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import executor as EX
 from repro.core import expr as X
-from repro.core import operators as O
-from repro.core import planner as PL
+from repro.core import optimizer as OPT
 from repro.core import query as Q
+from repro.core.executor import QueryResult  # re-export (public result type)
 from repro.core.graphview import GraphView, build_graph_view
+from repro.core.logical import DEFAULT_MAX_LEN
 from repro.core.table import Table
 from repro.core.traversal_engine import TraversalEngine
+
+__all__ = ["GRFusion", "QueryResult", "ViewBundle", "PreparedPlan"]
 
 
 @dataclass
@@ -44,27 +48,25 @@ class ViewBundle:
 
 
 @dataclass
-class QueryResult:
-    columns: Dict[str, np.ndarray]
-    count: int
-    explain: List[str]
-    overflow: bool = False
+class PreparedPlan:
+    """A query planned once; ``run()`` re-executes the physical tree against
+    the live catalog without re-invoking the optimizer (serving hot path)."""
 
-    def rows(self) -> List[dict]:
-        return [
-            {k: v[i] for k, v in self.columns.items()} for i in range(self.count)
-        ]
+    engine: "GRFusion"
+    plan: OPT.PhysicalPlan
 
-    def scalar(self, name=None):
-        name = name or next(iter(self.columns))
-        return self.columns[name] if np.ndim(self.columns[name]) == 0 else self.columns[name][0]
+    def run(self) -> QueryResult:
+        return EX.execute(self.plan, self.engine)
+
+    def pretty(self) -> str:
+        return self.plan.pretty()
 
 
 class GRFusion:
     def __init__(
         self,
         *,
-        default_max_path_len: int = PL.DEFAULT_MAX_LEN,
+        default_max_path_len: int = DEFAULT_MAX_LEN,
         max_work_capacity: int = 1 << 18,
         result_capacity: int = 1 << 14,
         bfs_max_hops: int = 32,
@@ -264,513 +266,27 @@ class GRFusion:
         return mask
 
     # ------------------------------------------------------------- execution
-    def run(self, query: Q.Query) -> QueryResult:
-        self._last_froms = query.froms
-        if query.max_path_len is None and any(f.kind == "paths" for f in query.froms):
+    def plan(self, query: Q.Query) -> OPT.PhysicalPlan:
+        """builder -> logical tree -> rule pipeline -> physical tree."""
+        if query.max_path_len is None and any(
+            f.kind == "paths" for f in query.froms
+        ):
             query.max_path_len = self.default_max_path_len
-        plan = PL.plan_query(query, self.views)
-        return self._execute(plan)
+        return OPT.optimize(query, self.views)
 
-    # -- relational side -----------------------------------------------------
-    def _scan(self, item: Q.FromItem, filters: List[X.Expr]) -> O.RelBatch:
-        if item.kind == "table":
-            t = self.tables[item.name]
-            b = O.table_scan(t, prefix=item.alias + ".")
-            enc = lambda c, v: self.encode_value(item.name, c.split(".", 1)[1] if c and "." in c else c, v)
-        elif item.kind == "vertexes":
-            vb = self.views[item.name]
-            b = O.vertex_scan(vb.view, self.tables[vb.vertex_table], prefix=item.alias + ".")
-            enc = lambda c, v: self.encode_value(vb.vertex_table, c.split(".", 1)[1] if c and "." in c else c, v)
-        elif item.kind == "edges":
-            vb = self.views[item.name]
-            b = O.edge_scan(vb.view, self.tables[vb.edge_table], prefix=item.alias + ".")
-            enc = lambda c, v: self.encode_value(vb.edge_table, c.split(".", 1)[1] if c and "." in c else c, v)
-        else:
-            raise ValueError(item.kind)
-        for f in filters:
-            qual = _requalify(f, item.alias)
-            b = O.filter_batch(b, qual, encode=enc)
-        return b
+    def run(self, query: Q.Query) -> QueryResult:
+        return EX.execute(self.plan(query), self)
 
-    def _relational(self, plan: PL.Plan) -> Optional[O.RelBatch]:
-        items = [f for f in plan.query.froms if f.kind in ("table", "vertexes", "edges")]
-        if not items:
-            return None
-        batches = {
-            it.alias: self._scan(it, plan.table_filters.get(it.alias, []))
-            for it in items
-        }
-        joined = batches[items[0].alias]
-        joined_aliases = {items[0].alias}
-        remaining = {it.alias for it in items[1:]}
-        conds = list(plan.join_conds)
-        while remaining:
-            progressed = False
-            for lk, rk in list(conds):
-                la, ra = lk.split(".")[0], rk.split(".")[0]
-                if la in joined_aliases and ra in remaining:
-                    joined, ovf = O.join(joined, batches[ra], lk, rk)
-                    joined_aliases.add(ra)
-                    remaining.discard(ra)
-                    conds.remove((lk, rk))
-                    progressed = True
-                elif ra in joined_aliases and la in remaining:
-                    joined, ovf = O.join(joined, batches[la], rk, lk)
-                    joined_aliases.add(la)
-                    remaining.discard(la)
-                    conds.remove((lk, rk))
-                    progressed = True
-            if not progressed:
-                # bounded cartesian product for small filtered anchor tables
-                a = sorted(remaining)[0]
-                joined, ovf = O.cross_join(joined, batches[a])
-                plan.explain.append(f"cross join with {a} (bounded)")
-                joined_aliases.add(a)
-                remaining.discard(a)
-        # any leftover equi conditions become residual filters
-        for lk, rk in conds:
-            joined = joined.replace(
-                valid=joined.valid & (joined.col(lk) == joined.col(rk))
-            )
-        return joined
+    def explain(self, query: Q.Query) -> OPT.PhysicalPlan:
+        """Typed physical plan for ``query`` (no execution). ``str(plan)``
+        prints the operator tree plus one line per applied rewrite rule."""
+        return self.plan(query)
 
-    # -- graph side ------------------------------------------------------
-    def _start_positions(self, spec: PL.PathSpec, vb: ViewBundle, R: Optional[O.RelBatch]):
-        view = vb.view
-        if spec.start_anchor and spec.start_anchor[0] == "col":
-            assert R is not None
-            ids = R.col(spec.start_anchor[1]).astype(jnp.int32)
-            pos, found = view.id_index.lookup(ids)
-            pos = jnp.where(R.valid & found, pos, -1)
-            return pos, "rel"
-        if spec.start_anchor and spec.start_anchor[0] == "const":
-            pos, found = view.id_index.lookup(jnp.asarray([spec.start_anchor[1]], jnp.int32))
-            return jnp.where(found, pos, -1), "const"
-        # §5.1.2: undefined start set = all vertices
-        return jnp.arange(view.n_vertices, dtype=jnp.int32), "all"
-
-    def _end_anchor_mask(self, spec: PL.PathSpec, vb: ViewBundle, R: Optional[O.RelBatch]):
-        """End anchor as (mask [V]) or per-lane targets [S]."""
-        view = vb.view
-        if spec.end_anchor is None and not spec.end_attr_preds:
-            return None, None
-        mask = self._vertex_mask(vb, spec.end_attr_preds)
-        targets = None
-        if spec.end_anchor:
-            if spec.end_anchor[0] == "const":
-                pos, found = view.id_index.lookup(
-                    jnp.asarray([spec.end_anchor[1]], jnp.int32)
-                )
-                m2 = jnp.zeros((view.n_vertices,), jnp.bool_).at[pos].set(
-                    found, mode="drop"
-                )
-                mask = mask & m2
-            else:  # per-lane targets from the relational side
-                assert R is not None
-                ids = R.col(spec.end_anchor[1]).astype(jnp.int32)
-                pos, found = view.id_index.lookup(ids)
-                targets = jnp.where(R.valid & found, pos, -1)
-        return mask, targets
-
-    def _hop_masks(self, spec: PL.PathSpec, vb: ViewBundle):
-        base = self._edge_mask(vb, [])  # validity only
-        uniform = base
-        for lo, hi, pred in spec.hop_edge_preds:
-            if lo == 0 and hi is None:
-                uniform = uniform & self._edge_mask(vb, [pred])
-        masks = []
-        for h in range(spec.max_len):
-            m = uniform
-            for lo, hi, pred in spec.hop_edge_preds:
-                if lo == 0 and hi is None:
-                    continue
-                hi_eff = spec.max_len - 1 if hi is None else hi
-                if lo <= h <= hi_eff:
-                    m = m & self._edge_mask(vb, [pred])
-            masks.append(m)
-        return masks
-
-    def _execute(self, plan: PL.Plan) -> QueryResult:
-        R = self._relational(plan)
-        spec = plan.path
-        overflow = False
-
-        if spec is None:
-            combined = R
-            vb = None
-        else:
-            vb = self.views[spec.graph]
-            view = vb.view
-            et = self.tables[vb.edge_table]
-            vt = self.tables[vb.vertex_table]
-
-            start_pos, start_kind = self._start_positions(spec, vb, R)
-            smask = self._vertex_mask(vb, spec.start_attr_preds)
-            sp_c = jnp.clip(start_pos, 0, view.n_vertices - 1)
-            start_pos = jnp.where(
-                (start_pos >= 0) & jnp.take(smask, sp_c), start_pos, -1
-            )
-            end_mask, targets = self._end_anchor_mask(spec, vb, R)
-            gvmask = self._vertex_mask(vb, spec.global_vertex_preds)
-            hop_masks = self._hop_masks(spec, vb)
-            uniform_mask = hop_masks[0]
-            for m in hop_masks[1:]:
-                uniform_mask = uniform_mask & m  # only used by bfs/sssp paths
-
-            if spec.physical in ("bfs", "sssp", "bfs_path"):
-                backend = self.traversal.resolve_backend(
-                    view, requested=spec.backend,
-                    n_sources=int(start_pos.shape[0]),
-                )
-                plan.explain.append(f"traversal backend: {backend}")
-            elif spec.backend is not None:
-                plan.explain.append(
-                    "traversal backend: request ignored (enumeration has a "
-                    "single implementation)"
-                )
-
-            if spec.physical == "bfs":
-                if targets is None and end_mask is not None:
-                    tpos = jnp.argmax(end_mask)  # single const target
-                    targets = jnp.broadcast_to(tpos, start_pos.shape).astype(jnp.int32)
-                dist = self.traversal.bfs(
-                    view, start_pos,
-                    edge_mask_by_row=uniform_mask, vertex_mask=gvmask,
-                    target_pos=targets,
-                    max_hops=min(spec.max_len, self.bfs_max_hops),
-                    backend=backend, graph=spec.graph,
-                )
-                tc = jnp.clip(targets, 0, view.n_vertices - 1)
-                d = jnp.take_along_axis(dist, tc[:, None], axis=1)[:, 0]
-                ok = (targets >= 0) & (start_pos >= 0) & (d >= spec.min_len) | (
-                    (d == 0) & (spec.min_len == 0)
-                )
-                ok = ok & (d >= 0)
-                cols = {
-                    f"{spec.alias}.length": d,
-                    f"{spec.alias}.exists": (d >= 0) & (targets >= 0),
-                    f"{spec.alias}._start_pos": start_pos,
-                    f"{spec.alias}._end_pos": targets if targets is not None else jnp.full_like(start_pos, -1),
-                    f"{spec.alias}._origin": jnp.arange(start_pos.shape[0], dtype=jnp.int32),
-                }
-                pbatch = O.RelBatch(cols=cols, valid=ok)
-            elif spec.physical in ("sssp", "bfs_path"):
-                if spec.physical == "sssp":
-                    wcol = vb.e_attrs.get(spec.sp_weight_attr, spec.sp_weight_attr)
-                    w = et.col(wcol).astype(jnp.float32)
-                else:
-                    w = jnp.ones((et.capacity,), jnp.float32)
-                dist, parent = self.traversal.sssp(
-                    view, start_pos, w,
-                    edge_mask_by_row=uniform_mask, vertex_mask=gvmask,
-                    max_iters=64, backend=backend, graph=spec.graph,
-                )
-                if targets is None and end_mask is not None and spec.end_anchor:
-                    tpos = jnp.argmax(end_mask).astype(jnp.int32)
-                    targets = jnp.broadcast_to(tpos, start_pos.shape)
-                if targets is not None:
-                    tc = jnp.clip(targets, 0, view.n_vertices - 1)
-                    d = jnp.take_along_axis(dist, tc[:, None], axis=1)[:, 0]
-                    edges, verts, lens = self.traversal.reconstruct_paths(
-                        view, parent, jnp.where(targets >= 0, targets, 0),
-                        max_len=min(max(spec.max_len, 8), 64),
-                    )
-                    ok = (targets >= 0) & (start_pos >= 0) & jnp.isfinite(d)
-                    cols = {
-                        f"{spec.alias}.length": lens,
-                        f"{spec.alias}.distance": d,
-                        f"{spec.alias}._edges": edges,
-                        f"{spec.alias}._verts": verts,
-                        f"{spec.alias}._start_pos": start_pos,
-                        f"{spec.alias}._end_pos": targets,
-                        f"{spec.alias}._origin": jnp.arange(start_pos.shape[0], dtype=jnp.int32),
-                    }
-                    pbatch = O.RelBatch(cols=cols, valid=ok)
-                else:
-                    # single-source, all destinations (Grail comparison shape)
-                    d0 = dist[0]
-                    ok = jnp.isfinite(d0) & view.v_valid
-                    cols = {
-                        f"{spec.alias}.distance": d0,
-                        f"{spec.alias}.endvertexid": view.v_ids,
-                        f"{spec.alias}._end_pos": jnp.arange(view.n_vertices, dtype=jnp.int32),
-                        f"{spec.alias}._origin": jnp.zeros((view.n_vertices,), jnp.int32),
-                    }
-                    pbatch = O.RelBatch(cols=cols, valid=ok)
-            else:  # enumeration
-                n_src = int(start_pos.shape[0])
-                wcap = PL.choose_work_capacity(
-                    spec, float(view.avg_fan_out), n_src,
-                    plan.query.bf_hint, max_cap=self.max_work_capacity,
-                )
-                plan.explain.append(f"enum work capacity: {wcap}")
-                if bool(jnp.any(view.delta_valid)):
-                    self.compact_view(spec.graph)
-                    vb = self.views[spec.graph]
-                    view = vb.view
-                agg_w = None
-                agg_b = None
-                if spec.agg_attrs:
-                    agg_w = jnp.stack(
-                        [
-                            et.col(vb.e_attrs.get(a, a)).astype(jnp.float32)
-                            for a in spec.agg_attrs
-                        ]
-                    )
-                    if spec.agg_upper_bounds:
-                        agg_b = jnp.asarray(
-                            [
-                                spec.agg_upper_bounds.get(a, np.inf)
-                                for a in spec.agg_attrs
-                            ],
-                            jnp.float32,
-                        )
-                any_m = None
-                if spec.any_edge_preds:
-                    any_m = jnp.stack(
-                        [self._edge_mask(vb, [p]) for p in spec.any_edge_preds]
-                    )
-                count_only = (
-                    bool(plan.query.agg_select)
-                    and all(op == "count" for op, _ in plan.query.agg_select.values())
-                    and not plan.query.select_list
-                    and not plan.residuals
-                    and R is None
-                    and end_mask is None
-                )
-                out = self.traversal.enumerate_paths(
-                    view, start_pos,
-                    min_len=spec.min_len, max_len=spec.max_len,
-                    hop_edge_masks=hop_masks,
-                    vertex_mask=gvmask,
-                    end_anchor=end_mask if targets is None else None,
-                    close_loop=spec.close_loop,
-                    agg_weights=agg_w, agg_upper_bounds=agg_b,
-                    any_masks=any_m,
-                    work_capacity=wcap,
-                    result_capacity=self.result_capacity,
-                    count_only=count_only,
-                )
-                if count_only:
-                    cnt, ovf = out
-                    name = next(iter(plan.query.agg_select))
-                    return QueryResult(
-                        columns={name: np.asarray(cnt)},
-                        count=1,
-                        explain=plan.explain,
-                        overflow=bool(ovf),
-                    )
-                ps = out
-                overflow = bool(ps.overflow)
-                any_names = [f"any_{i}" for i in range(len(spec.any_edge_preds))]
-                pbatch = O.paths_to_batch(
-                    ps, view, prefix=spec.alias + ".",
-                    agg_names=[f"sum_{a}" for a in spec.agg_attrs],
-                    any_names=any_names,
-                )
-                for an in any_names:  # ANY semantics: at least one edge passes
-                    pbatch = pbatch.replace(
-                        valid=pbatch.valid & pbatch.col(f"{spec.alias}.{an}")
-                    )
-                if targets is not None:
-                    tgt_of_origin = jnp.take(
-                        targets, jnp.clip(ps.origin, 0, targets.shape[0] - 1)
-                    )
-                    pbatch = pbatch.replace(
-                        valid=pbatch.valid
-                        & (pbatch.col(f"{spec.alias}._end_pos") == tgt_of_origin)
-                    )
-
-            # combine with the relational side via the origin lane (§5.3)
-            if R is not None:
-                org = pbatch.col(f"{spec.alias}._origin")
-                oc = jnp.clip(org, 0, R.capacity - 1)
-                cols = dict(pbatch.cols)
-                for k, v in R.cols.items():
-                    cols[k] = jnp.take(v, oc, axis=0)
-                rv = jnp.take(R.valid, oc) if start_kind == "rel" else jnp.ones_like(pbatch.valid)
-                combined = O.RelBatch(cols=cols, valid=pbatch.valid & rv)
-            else:
-                combined = pbatch
-
-        if combined is None:
-            raise ValueError("empty FROM clause")
-
-        # residual predicates --------------------------------------------------
-        for res in plan.residuals:
-            mask = self._eval_combined(res, combined, spec, vb)
-            combined = combined.replace(valid=combined.valid & mask)
-
-        # select ---------------------------------------------------------------
-        if plan.query.agg_select:
-            aggs = {}
-            for name, (op, e) in plan.query.agg_select.items():
-                if op == "count":
-                    aggs[name] = np.asarray(jnp.sum(combined.valid.astype(jnp.int32)))
-                else:
-                    vals = self._eval_combined(e, combined, spec, vb)
-                    v = combined.valid
-                    if op == "sum":
-                        aggs[name] = np.asarray(jnp.sum(jnp.where(v, vals, 0)))
-                    elif op == "min":
-                        aggs[name] = np.asarray(
-                            jnp.min(jnp.where(v, vals, jnp.inf))
-                        )
-                    elif op == "max":
-                        aggs[name] = np.asarray(
-                            jnp.max(jnp.where(v, vals, -jnp.inf))
-                        )
-            return QueryResult(columns=aggs, count=1, explain=plan.explain, overflow=overflow)
-
-        if plan.query.order_key is not None:
-            colname, desc = plan.query.order_key
-            combined = O.order_by(combined, colname, descending=desc)
-        if plan.query.limit_n is not None:
-            combined = O.limit(combined, plan.query.limit_n)
-
-        sel = plan.query.select_list
-        out_cols = {}
-        decode_info = {}
-        if not sel:
-            keep = [k for k in combined.cols if not k.split(".")[-1].startswith("_")]
-            sel = {k: X.Col(k) for k in keep}
-        for out_name, e in sel.items():
-            vals, dec = self._eval_combined(e, combined, spec, vb, want_decode=True)
-            out_cols[out_name] = vals
-            decode_info[out_name] = dec
-
-        validm = np.asarray(combined.valid)
-        order = np.argsort(~validm, kind="stable")  # valid rows first
-        n = int(validm.sum())
-        final = {}
-        for k, v in out_cols.items():
-            arr = np.asarray(v)[order][:n] if np.ndim(v) else np.asarray(v)
-            dec = decode_info.get(k)
-            if dec is not None and np.ndim(arr):
-                arr = self.decode_column(dec[0], dec[1], arr)
-            final[k] = arr
-        return QueryResult(columns=final, count=n, explain=plan.explain, overflow=overflow)
-
-    # -- combined-batch expression evaluation ---------------------------------
-    def _eval_combined(self, e, batch: O.RelBatch, spec, vb, want_decode=False):
-        decode = [None]
-
-        def resolve_pathexpr(pe):
-            a = spec.alias
-            if isinstance(pe, Q.PathLength):
-                return batch.col(f"{a}.length")
-            if isinstance(pe, Q.PathAgg):
-                return batch.col(f"{a}.sum_{pe.attr}")
-            if isinstance(pe, Q.PathVertexAttr):
-                pos = batch.col(f"{a}._{pe.which}_pos")
-                vt = self.tables[vb.vertex_table]
-                if pe.attr == "id":
-                    return jnp.take(
-                        vb.view.v_ids, jnp.clip(pos, 0, vb.view.n_vertices - 1)
-                    )
-                srccol = vb.v_attrs.get(pe.attr, pe.attr)
-                decode[0] = (vb.vertex_table, srccol)
-                return jnp.take(
-                    vt.col(srccol), jnp.clip(pos, 0, vt.capacity - 1)
-                )
-            if isinstance(pe, Q.PathString):
-                return batch.col(f"{a}._verts")  # decoded by caller/helpers
-            raise NotImplementedError(repr(pe))
-
-        def resolve(name):
-            return batch.col(name)
-
-        def ev(node):
-            if isinstance(node, Q.PathExpr):
-                return resolve_pathexpr(node)
-            if isinstance(node, X.Col):
-                v = resolve(node.name)
-                if "." in node.name:
-                    alias, cname = node.name.split(".", 1)
-                    tn = self._alias_table(alias)
-                    if tn and (tn, cname) in self.rev_dicts:
-                        decode[0] = (tn, cname)
-                return v
-            if isinstance(node, X.Const):
-                return jnp.asarray(node.value)
-            if isinstance(node, X.Cmp):
-                lv, rv = ev_enc(node.left, node.right)
-                return X._CMPS[node.op](lv, rv)
-            if isinstance(node, X.BoolOp):
-                if node.op == "and":
-                    out = ev(node.args[0])
-                    for x in node.args[1:]:
-                        out = out & ev(x)
-                    return out
-                if node.op == "or":
-                    out = ev(node.args[0])
-                    for x in node.args[1:]:
-                        out = out | ev(x)
-                    return out
-                return ~ev(node.args[0])
-            if isinstance(node, X.Arith):
-                a, b = ev(node.left), ev(node.right)
-                return {"+": a + b, "-": a - b, "*": a * b}[node.op]
-            if isinstance(node, X.In):
-                item = ev(node.item)
-                out = jnp.zeros(item.shape, jnp.bool_)
-                for v in node.values:
-                    out = out | (item == jnp.asarray(self._enc_for(node.item, v)))
-                return out
-            raise TypeError(type(node))
-
-        def ev_enc(l, r):
-            # encode string constants against the column on the other side
-            if isinstance(r, X.Const) and isinstance(r.value, str):
-                return ev(l), jnp.asarray(self._enc_for(l, r.value))
-            if isinstance(l, X.Const) and isinstance(l.value, str):
-                return jnp.asarray(self._enc_for(r, l.value)), ev(r)
-            return ev(l), ev(r)
-
-        out = ev(e)
-        if want_decode:
-            return out, decode[0]
-        return out
-
-    def _alias_table(self, alias):
-        for f in self._last_froms:
-            if f.alias == alias:
-                if f.kind == "table":
-                    return f.name
-                vb = self.views.get(f.name)
-                if vb:
-                    return vb.vertex_table if f.kind == "vertexes" else vb.edge_table
-        return None
-
-    def _enc_for(self, node, value):
-        if isinstance(node, X.Col) and "." in node.name:
-            alias, cname = node.name.split(".", 1)
-            tn = self._alias_table(alias)
-            if tn:
-                return self.encode_value(tn, cname, value)
-        if isinstance(node, Q.PathVertexAttr):
-            return value  # handled in resolve via dictionaries at decode
-        return value
-
-    # keep a handle for _alias_table during run()
-    _last_froms: List[Q.FromItem] = []
+    def prepare(self, query: Q.Query) -> PreparedPlan:
+        """Plan once, execute many (parameterized / repeated serving)."""
+        return PreparedPlan(engine=self, plan=self.plan(query))
 
     def path_string(self, result: QueryResult, verts_col: str, i: int = 0) -> str:
         v = np.asarray(result.columns[verts_col])[i]
         ids = [int(x) for x in v if x >= 0]
         return "->".join(str(x) for x in ids)
-
-
-def _requalify(e: X.Expr, alias: str) -> X.Expr:
-    """Add back the alias prefix for batch columns named 'alias.col'."""
-    if isinstance(e, X.Col):
-        return X.Col(e.name if e.name.startswith(alias + ".") else f"{alias}.{e.name}")
-    if isinstance(e, X.Cmp):
-        return X.Cmp(e.op, _requalify(e.left, alias), _requalify(e.right, alias))
-    if isinstance(e, X.Arith):
-        return X.Arith(e.op, _requalify(e.left, alias), _requalify(e.right, alias))
-    if isinstance(e, X.BoolOp):
-        return X.BoolOp(e.op, tuple(_requalify(a, alias) for a in e.args))
-    if isinstance(e, X.In):
-        return X.In(_requalify(e.item, alias), e.values)
-    return e

@@ -1,0 +1,756 @@
+"""Tree-walking physical executor for the cross-model plan IR (paper §5).
+
+Each physical node produces/consumes ``RelBatch`` (the fixed-capacity
+columnar batch both data models share), so relational operators and graph
+operators compose in one tree:
+
+  TableScanExec / VertexScanExec / EdgeScanExec   leaf scans + pushed filters
+  HashJoinExec / CrossJoinExec                    relational combination
+  PathScanExec                                    traversal; consumes anchor
+                                                  lanes from its child and
+                                                  dispatches bfs / bfs_path /
+                                                  sssp / enum through the
+                                                  TraversalEngine (§6.3)
+  ResidualFilterExec / SortExec / LimitExec       post-combination shaping
+  ProjectExec / AggregateExec                     root finalizers -> QueryResult
+
+PathScans stack: a second PATHS source whose anchor references the first
+one's output columns executes above it, its output rows gathering the lower
+plan's columns through the origin lane (§5.3) — the pre-IR engine's
+single-PATHS restriction is gone.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dfield
+from typing import Any, Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import expr as X
+from repro.core import operators as O
+from repro.core import query as Q
+from repro.core.logical import PathSpec, format_pathspec
+from repro.core.logical import pretty as _tree_pretty
+
+
+@dataclass
+class QueryResult:
+    columns: Dict[str, np.ndarray]
+    count: int
+    explain: List[str]
+    overflow: bool = False
+
+    def rows(self) -> List[dict]:
+        return [
+            {k: v[i] for k, v in self.columns.items()} for i in range(self.count)
+        ]
+
+    def scalar(self, name=None):
+        name = name or next(iter(self.columns))
+        v = self.columns[name]
+        if np.ndim(v) == 0:
+            return v
+        if np.shape(v)[0] == 0 or self.count == 0:
+            return None
+        return v[0]
+
+
+@dataclass
+class ExecContext:
+    engine: Any  # GRFusion
+    plan: Any  # optimizer.PhysicalPlan
+    explain: List[str] = dfield(default_factory=list)
+    overflow: bool = False
+
+
+# --------------------------------------------------------------------------
+# node base + tree printing
+# --------------------------------------------------------------------------
+class ExecNode:
+    def children(self) -> list:
+        return []
+
+    def label(self) -> str:
+        return type(self).__name__
+
+    def run(self, ctx: ExecContext) -> O.RelBatch:
+        raise NotImplementedError
+
+
+def pretty(node: ExecNode, indent: int = 0) -> str:
+    # same duck-typed children()/label() walk as the logical printer
+    return _tree_pretty(node, indent)
+
+
+def _requalify(e: X.Expr, alias: str) -> X.Expr:
+    """Add back the alias prefix for batch columns named 'alias.col'."""
+    if isinstance(e, X.Col):
+        return X.Col(e.name if e.name.startswith(alias + ".") else f"{alias}.{e.name}")
+    if isinstance(e, X.Cmp):
+        return X.Cmp(e.op, _requalify(e.left, alias), _requalify(e.right, alias))
+    if isinstance(e, X.Arith):
+        return X.Arith(e.op, _requalify(e.left, alias), _requalify(e.right, alias))
+    if isinstance(e, X.BoolOp):
+        return X.BoolOp(e.op, tuple(_requalify(a, alias) for a in e.args))
+    if isinstance(e, X.In):
+        return X.In(_requalify(e.item, alias), e.values)
+    return e
+
+
+# --------------------------------------------------------------------------
+# scans
+# --------------------------------------------------------------------------
+def _apply_scan_filters(ctx, batch, source_table, alias, filters):
+    """Pushed-down filters against one scan, string constants encoded
+    through the source table's dictionary."""
+    enc = lambda c, v: ctx.engine.encode_value(
+        source_table, c.split(".", 1)[1] if c and "." in c else c, v
+    )
+    for f in filters:
+        batch = O.filter_batch(batch, _requalify(f, alias), encode=enc)
+    return batch
+
+
+@dataclass
+class _ScanExec(ExecNode):
+    alias: str
+    source: str  # table name (TableScan) or graph-view name (Vertex/Edge)
+    filters: List[X.Expr]
+
+    def label(self):
+        f = f" [{len(self.filters)} pushed filter(s)]" if self.filters else ""
+        return f"{type(self).__name__}({self.source} AS {self.alias}){f}"
+
+
+class TableScanExec(_ScanExec):
+    def run(self, ctx):
+        b = O.table_scan(ctx.engine.tables[self.source], prefix=self.alias + ".")
+        return _apply_scan_filters(ctx, b, self.source, self.alias, self.filters)
+
+
+class VertexScanExec(_ScanExec):
+    def run(self, ctx):
+        vb = ctx.engine.views[self.source]
+        b = O.vertex_scan(
+            vb.view, ctx.engine.tables[vb.vertex_table], prefix=self.alias + "."
+        )
+        return _apply_scan_filters(
+            ctx, b, vb.vertex_table, self.alias, self.filters
+        )
+
+
+class EdgeScanExec(_ScanExec):
+    def run(self, ctx):
+        vb = ctx.engine.views[self.source]
+        b = O.edge_scan(
+            vb.view, ctx.engine.tables[vb.edge_table], prefix=self.alias + "."
+        )
+        return _apply_scan_filters(ctx, b, vb.edge_table, self.alias, self.filters)
+
+
+# --------------------------------------------------------------------------
+# joins
+# --------------------------------------------------------------------------
+@dataclass
+class HashJoinExec(ExecNode):
+    left: ExecNode
+    right: ExecNode
+    left_key: str
+    right_key: str
+
+    def children(self):
+        return [self.left, self.right]
+
+    def label(self):
+        return f"HashJoinExec({self.left_key} == {self.right_key})"
+
+    def run(self, ctx):
+        lb = self.left.run(ctx)
+        rb = self.right.run(ctx)
+        joined, _ovf = O.join(lb, rb, self.left_key, self.right_key)
+        return joined
+
+
+@dataclass
+class CrossJoinExec(ExecNode):
+    left: ExecNode
+    right: ExecNode
+    right_alias: str
+
+    def children(self):
+        return [self.left, self.right]
+
+    def label(self):
+        return f"CrossJoinExec(+{self.right_alias}, bounded)"
+
+    def run(self, ctx):
+        lb = self.left.run(ctx)
+        rb = self.right.run(ctx)
+        joined, _ovf = O.cross_join(lb, rb)
+        ctx.explain.append(f"cross join with {self.right_alias} (bounded)")
+        return joined
+
+
+# --------------------------------------------------------------------------
+# PathScan — the graph operator inside the relational tree
+# --------------------------------------------------------------------------
+@dataclass
+class PathScanExec(ExecNode):
+    spec: PathSpec
+    child: Optional[ExecNode] = None
+
+    def children(self):
+        return [self.child] if self.child is not None else []
+
+    def label(self):
+        return f"PathScanExec({format_pathspec(self.spec)})"
+
+    # -- anchor / mask preparation (paper §6.2 pushdown) -------------------
+    def _start_positions(self, ctx, vb, R):
+        spec, view = self.spec, vb.view
+        if spec.start_anchor and spec.start_anchor[0] == "col":
+            assert R is not None, "column start anchor needs an anchor child"
+            ids = R.col(spec.start_anchor[1]).astype(jnp.int32)
+            pos, found = view.id_index.lookup(ids)
+            pos = jnp.where(R.valid & found, pos, -1)
+            return pos, "rel"
+        if spec.start_anchor and spec.start_anchor[0] == "const":
+            pos, found = view.id_index.lookup(
+                jnp.asarray([spec.start_anchor[1]], jnp.int32)
+            )
+            return jnp.where(found, pos, -1), "const"
+        # §5.1.2: undefined start set = all vertices
+        return jnp.arange(view.n_vertices, dtype=jnp.int32), "all"
+
+    def _end_anchor_mask(self, ctx, vb, R):
+        """End anchor as (mask [V]) or per-lane targets [S]."""
+        spec, view = self.spec, vb.view
+        if spec.end_anchor is None and not spec.end_attr_preds:
+            return None, None
+        mask = ctx.engine._vertex_mask(vb, spec.end_attr_preds)
+        targets = None
+        if spec.end_anchor:
+            if spec.end_anchor[0] == "const":
+                pos, found = view.id_index.lookup(
+                    jnp.asarray([spec.end_anchor[1]], jnp.int32)
+                )
+                m2 = jnp.zeros((view.n_vertices,), jnp.bool_).at[pos].set(
+                    found, mode="drop"
+                )
+                mask = mask & m2
+            else:  # per-lane targets from the anchor child
+                assert R is not None, "column end anchor needs an anchor child"
+                ids = R.col(spec.end_anchor[1]).astype(jnp.int32)
+                pos, found = view.id_index.lookup(ids)
+                targets = jnp.where(R.valid & found, pos, -1)
+        return mask, targets
+
+    def _hop_masks(self, ctx, vb):
+        spec = self.spec
+        eng = ctx.engine
+        base = eng._edge_mask(vb, [])  # validity only
+        uniform = base
+        for lo, hi, pred in spec.hop_edge_preds:
+            if lo == 0 and hi is None:
+                uniform = uniform & eng._edge_mask(vb, [pred])
+        masks = []
+        for h in range(spec.max_len):
+            m = uniform
+            for lo, hi, pred in spec.hop_edge_preds:
+                if lo == 0 and hi is None:
+                    continue
+                hi_eff = spec.max_len - 1 if hi is None else hi
+                if lo <= h <= hi_eff:
+                    m = m & eng._edge_mask(vb, [pred])
+            masks.append(m)
+        return masks
+
+    def _prepare(self, ctx, vb, R):
+        """Shared anchor/mask preparation for both run() and run_count()."""
+        spec = self.spec
+        eng = ctx.engine
+        view = vb.view
+        start_pos, start_kind = self._start_positions(ctx, vb, R)
+        smask = eng._vertex_mask(vb, spec.start_attr_preds)
+        sp_c = jnp.clip(start_pos, 0, view.n_vertices - 1)
+        start_pos = jnp.where(
+            (start_pos >= 0) & jnp.take(smask, sp_c), start_pos, -1
+        )
+        gvmask = eng._vertex_mask(vb, spec.global_vertex_preds)
+        hop_masks = self._hop_masks(ctx, vb)
+        return start_pos, start_kind, sp_c, gvmask, hop_masks
+
+    # -- execution ---------------------------------------------------------
+    def run(self, ctx) -> O.RelBatch:
+        spec = self.spec
+        eng = ctx.engine
+        R = self.child.run(ctx) if self.child is not None else None
+        vb = eng.views[spec.graph]
+        view = vb.view
+        et = eng.tables[vb.edge_table]
+
+        start_pos, start_kind, sp_c, gvmask, hop_masks = self._prepare(ctx, vb, R)
+        end_mask, targets = self._end_anchor_mask(ctx, vb, R)
+        # only used by bfs/sssp paths; max_len == 0 (pure 0-hop self-reach)
+        # has no hop masks, so fall back to bare edge validity
+        uniform_mask = hop_masks[0] if hop_masks else eng._edge_mask(vb, [])
+        for m in hop_masks[1:]:
+            uniform_mask = uniform_mask & m
+
+        if spec.physical in ("bfs", "sssp", "bfs_path"):
+            backend = eng.traversal.resolve_backend(
+                view, requested=spec.backend,
+                n_sources=int(start_pos.shape[0]),
+            )
+            ctx.explain.append(f"traversal backend: {backend}")
+        elif spec.backend is not None:
+            ctx.explain.append(
+                "traversal backend: request ignored (enumeration has a "
+                "single implementation)"
+            )
+
+        a = spec.alias
+        if spec.physical == "bfs":
+            if targets is None and end_mask is not None:
+                # single const target; an unresolvable id (all-False mask)
+                # must yield -1, not argmax's position 0
+                tpos = jnp.where(
+                    jnp.any(end_mask), jnp.argmax(end_mask), -1
+                ).astype(jnp.int32)
+                targets = jnp.broadcast_to(tpos, start_pos.shape)
+            dist = eng.traversal.bfs(
+                view, start_pos,
+                edge_mask_by_row=uniform_mask, vertex_mask=gvmask,
+                target_pos=targets,
+                max_hops=min(spec.max_len, eng.bfs_max_hops),
+                backend=backend, graph=spec.graph,
+            )
+            tc = jnp.clip(targets, 0, view.n_vertices - 1)
+            d = jnp.take_along_axis(dist, tc[:, None], axis=1)[:, 0]
+            # validity: the lane must have live anchors on BOTH ends, and the
+            # distance must clear the minimum — OR be a 0-hop self-reach when
+            # min_len == 0. The grouping is load-bearing: without the inner
+            # parentheses a 0-distance lane with a dead anchor leaks through.
+            ok = (targets >= 0) & (start_pos >= 0) & (
+                (d >= spec.min_len) | ((d == 0) & (spec.min_len == 0))
+            )
+            ok = ok & (d >= 0)
+            cols = {
+                f"{a}.length": d,
+                f"{a}.exists": (d >= 0) & (targets >= 0),
+                f"{a}.startvertexid": jnp.take(view.v_ids, sp_c),
+                f"{a}.endvertexid": jnp.take(view.v_ids, tc),
+                f"{a}._start_pos": start_pos,
+                f"{a}._end_pos": targets,
+                f"{a}._origin": jnp.arange(start_pos.shape[0], dtype=jnp.int32),
+            }
+            pbatch = O.RelBatch(cols=cols, valid=ok)
+        elif spec.physical in ("sssp", "bfs_path"):
+            if spec.physical == "sssp":
+                wcol = vb.e_attrs.get(spec.sp_weight_attr, spec.sp_weight_attr)
+                w = et.col(wcol).astype(jnp.float32)
+            else:
+                w = jnp.ones((et.capacity,), jnp.float32)
+            dist, parent = eng.traversal.sssp(
+                view, start_pos, w,
+                edge_mask_by_row=uniform_mask, vertex_mask=gvmask,
+                max_iters=64, backend=backend, graph=spec.graph,
+            )
+            if targets is None and end_mask is not None and spec.end_anchor:
+                tpos = jnp.where(
+                    jnp.any(end_mask), jnp.argmax(end_mask), -1
+                ).astype(jnp.int32)
+                targets = jnp.broadcast_to(tpos, start_pos.shape)
+            if targets is not None:
+                tc = jnp.clip(targets, 0, view.n_vertices - 1)
+                d = jnp.take_along_axis(dist, tc[:, None], axis=1)[:, 0]
+                edges, verts, lens = eng.traversal.reconstruct_paths(
+                    view, parent, jnp.where(targets >= 0, targets, 0),
+                    max_len=min(max(spec.max_len, 8), 64),
+                )
+                ok = (targets >= 0) & (start_pos >= 0) & jnp.isfinite(d)
+                cols = {
+                    f"{a}.length": lens,
+                    f"{a}.distance": d,
+                    f"{a}.startvertexid": jnp.take(view.v_ids, sp_c),
+                    f"{a}.endvertexid": jnp.take(view.v_ids, tc),
+                    f"{a}._edges": edges,
+                    f"{a}._verts": verts,
+                    f"{a}._start_pos": start_pos,
+                    f"{a}._end_pos": targets,
+                    f"{a}._origin": jnp.arange(start_pos.shape[0], dtype=jnp.int32),
+                }
+                pbatch = O.RelBatch(cols=cols, valid=ok)
+            else:
+                # single-source, all destinations (Grail comparison shape)
+                d0 = dist[0]
+                ok = jnp.isfinite(d0) & view.v_valid
+                cols = {
+                    f"{a}.distance": d0,
+                    f"{a}.endvertexid": view.v_ids,
+                    f"{a}.startvertexid": jnp.broadcast_to(
+                        jnp.take(view.v_ids, sp_c[0]), (view.n_vertices,)
+                    ),
+                    f"{a}._end_pos": jnp.arange(view.n_vertices, dtype=jnp.int32),
+                    f"{a}._origin": jnp.zeros((view.n_vertices,), jnp.int32),
+                }
+                pbatch = O.RelBatch(cols=cols, valid=ok)
+        else:  # enumeration
+            ps = self._enumerate(ctx, vb, R, start_pos, end_mask, targets,
+                                 gvmask, hop_masks, count_only=False)
+            # view/vb may have been compacted inside _enumerate
+            vb = eng.views[spec.graph]
+            view = vb.view
+            ctx.overflow = ctx.overflow or bool(ps.overflow)
+            any_names = [f"any_{i}" for i in range(len(spec.any_edge_preds))]
+            pbatch = O.paths_to_batch(
+                ps, view, prefix=a + ".",
+                agg_names=[f"sum_{x}" for x in spec.agg_attrs],
+                any_names=any_names,
+            )
+            for an in any_names:  # ANY semantics: at least one edge passes
+                pbatch = pbatch.replace(
+                    valid=pbatch.valid & pbatch.col(f"{a}.{an}")
+                )
+            if targets is not None:
+                tgt_of_origin = jnp.take(
+                    targets, jnp.clip(ps.origin, 0, targets.shape[0] - 1)
+                )
+                pbatch = pbatch.replace(
+                    valid=pbatch.valid
+                    & (pbatch.col(f"{a}._end_pos") == tgt_of_origin)
+                )
+
+        # combine with the anchor child via the origin lane (§5.3)
+        if R is not None:
+            org = pbatch.col(f"{a}._origin")
+            oc = jnp.clip(org, 0, R.capacity - 1)
+            cols = dict(pbatch.cols)
+            for k, v in R.cols.items():
+                cols[k] = jnp.take(v, oc, axis=0)
+            rv = (
+                jnp.take(R.valid, oc)
+                if start_kind == "rel"
+                else jnp.ones_like(pbatch.valid)
+            )
+            return O.RelBatch(cols=cols, valid=pbatch.valid & rv)
+        return pbatch
+
+    def run_count(self, ctx):
+        """COUNT(*)-fused traversal (aggregate-pushdown rule): no PathSet
+        materialization, returns (count, overflow)."""
+        spec = self.spec
+        vb = ctx.engine.views[spec.graph]
+        start_pos, _, _, gvmask, hop_masks = self._prepare(ctx, vb, None)
+        if spec.backend is not None:
+            ctx.explain.append(
+                "traversal backend: request ignored (enumeration has a "
+                "single implementation)"
+            )
+        return self._enumerate(ctx, vb, None, start_pos, None, None,
+                               gvmask, hop_masks, count_only=True)
+
+    def _enumerate(self, ctx, vb, R, start_pos, end_mask, targets, gvmask,
+                   hop_masks, *, count_only):
+        from repro.core import optimizer as OPT
+
+        spec = self.spec
+        eng = ctx.engine
+        view = vb.view
+        n_src = int(start_pos.shape[0])
+        wcap = OPT.choose_work_capacity(
+            spec, float(view.avg_fan_out), n_src,
+            ctx.plan.query.bf_hint, max_cap=eng.max_work_capacity,
+        )
+        ctx.explain.append(f"enum work capacity: {wcap}")
+        if bool(jnp.any(view.delta_valid)):
+            eng.compact_view(spec.graph)
+            vb = eng.views[spec.graph]
+            view = vb.view
+        et = eng.tables[vb.edge_table]
+        agg_w = None
+        agg_b = None
+        if spec.agg_attrs:
+            agg_w = jnp.stack(
+                [
+                    et.col(vb.e_attrs.get(x, x)).astype(jnp.float32)
+                    for x in spec.agg_attrs
+                ]
+            )
+            if spec.agg_upper_bounds:
+                agg_b = jnp.asarray(
+                    [spec.agg_upper_bounds.get(x, np.inf) for x in spec.agg_attrs],
+                    jnp.float32,
+                )
+        any_m = None
+        if spec.any_edge_preds:
+            any_m = jnp.stack(
+                [eng._edge_mask(vb, [p]) for p in spec.any_edge_preds]
+            )
+        return eng.traversal.enumerate_paths(
+            view, start_pos,
+            min_len=spec.min_len, max_len=spec.max_len,
+            hop_edge_masks=hop_masks,
+            vertex_mask=gvmask,
+            end_anchor=end_mask if targets is None else None,
+            close_loop=spec.close_loop,
+            agg_weights=agg_w, agg_upper_bounds=agg_b,
+            any_masks=any_m,
+            work_capacity=wcap,
+            result_capacity=eng.result_capacity,
+            count_only=count_only,
+        )
+
+
+# --------------------------------------------------------------------------
+# post-combination shaping
+# --------------------------------------------------------------------------
+@dataclass
+class ResidualFilterExec(ExecNode):
+    child: ExecNode
+    predicates: List[X.Expr]
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        return f"ResidualFilterExec({len(self.predicates)} predicate(s))"
+
+    def run(self, ctx):
+        batch = self.child.run(ctx)
+        for res in self.predicates:
+            mask = eval_on_batch(ctx, res, batch)
+            batch = batch.replace(valid=batch.valid & mask)
+        return batch
+
+
+@dataclass
+class SortExec(ExecNode):
+    child: ExecNode
+    key: str
+    descending: bool
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        return f"SortExec({self.key}{' DESC' if self.descending else ''})"
+
+    def run(self, ctx):
+        return O.order_by(self.child.run(ctx), self.key, descending=self.descending)
+
+
+@dataclass
+class LimitExec(ExecNode):
+    child: ExecNode
+    n: int
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        return f"LimitExec({self.n})"
+
+    def run(self, ctx):
+        return O.limit(self.child.run(ctx), self.n)
+
+
+# --------------------------------------------------------------------------
+# root finalizers
+# --------------------------------------------------------------------------
+@dataclass
+class ProjectExec(ExecNode):
+    child: ExecNode
+    select_list: Dict[str, Any]
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        names = ", ".join(self.select_list) if self.select_list else "*"
+        return f"ProjectExec({names})"
+
+    def finalize(self, ctx) -> QueryResult:
+        combined = self.child.run(ctx)
+        sel = self.select_list
+        if not sel:
+            keep = [k for k in combined.cols if not k.split(".")[-1].startswith("_")]
+            sel = {k: X.Col(k) for k in keep}
+        out_cols = {}
+        decode_info = {}
+        for out_name, e in sel.items():
+            vals, dec = eval_on_batch(ctx, e, combined, want_decode=True)
+            out_cols[out_name] = vals
+            decode_info[out_name] = dec
+
+        validm = np.asarray(combined.valid)
+        order = np.argsort(~validm, kind="stable")  # valid rows first
+        n = int(validm.sum())
+        final = {}
+        for k, v in out_cols.items():
+            arr = np.asarray(v)[order][:n] if np.ndim(v) else np.asarray(v)
+            dec = decode_info.get(k)
+            if dec is not None and np.ndim(arr):
+                arr = ctx.engine.decode_column(dec[0], dec[1], arr)
+            final[k] = arr
+        return QueryResult(
+            columns=final, count=n, explain=ctx.explain, overflow=ctx.overflow
+        )
+
+
+@dataclass
+class AggregateExec(ExecNode):
+    child: ExecNode
+    agg_select: Dict[str, tuple]
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        parts = ", ".join(f"{k}={op}" for k, (op, _) in self.agg_select.items())
+        return f"AggregateExec({parts})"
+
+    def finalize(self, ctx) -> QueryResult:
+        if isinstance(self.child, PathScanExec) and self.child.spec.count_only:
+            cnt, ovf = self.child.run_count(ctx)
+            cols = {name: np.asarray(cnt) for name in self.agg_select}
+            return QueryResult(
+                columns=cols, count=1, explain=ctx.explain,
+                overflow=ctx.overflow or bool(ovf),
+            )
+        combined = self.child.run(ctx)
+        aggs = {}
+        for name, (op, e) in self.agg_select.items():
+            if op == "count":
+                aggs[name] = np.asarray(jnp.sum(combined.valid.astype(jnp.int32)))
+                continue
+            vals = eval_on_batch(ctx, e, combined)
+            v = combined.valid
+            if op == "sum":
+                aggs[name] = np.asarray(jnp.sum(jnp.where(v, vals, 0)))
+            elif op == "min":
+                aggs[name] = np.asarray(jnp.min(jnp.where(v, vals, jnp.inf)))
+            elif op == "max":
+                aggs[name] = np.asarray(jnp.max(jnp.where(v, vals, -jnp.inf)))
+        return QueryResult(
+            columns=aggs, count=1, explain=ctx.explain, overflow=ctx.overflow
+        )
+
+
+# --------------------------------------------------------------------------
+# combined-batch expression evaluation (relational + path columns)
+# --------------------------------------------------------------------------
+def _alias_table(ctx, alias):
+    for f in ctx.plan.query.froms:
+        if f.alias == alias:
+            if f.kind == "table":
+                return f.name
+            vb = ctx.engine.views.get(f.name)
+            if vb:
+                return vb.vertex_table if f.kind == "vertexes" else vb.edge_table
+    return None
+
+
+def _enc_for(ctx, node, value):
+    if isinstance(node, X.Col) and "." in node.name:
+        alias, cname = node.name.split(".", 1)
+        tn = _alias_table(ctx, alias)
+        if tn:
+            return ctx.engine.encode_value(tn, cname, value)
+    if isinstance(node, Q.PathVertexAttr):
+        return value  # handled in resolve via dictionaries at decode
+    return value
+
+
+def eval_on_batch(ctx, e, batch: O.RelBatch, want_decode=False):
+    """Evaluate an expression against a combined batch; PathExpr nodes
+    resolve through their own alias's PathSpec (multi-PATHS aware)."""
+    eng = ctx.engine
+    decode = [None]
+
+    def resolve_pathexpr(pe):
+        a = pe.alias
+        spec = ctx.plan.specs[a]
+        vb = eng.views[spec.graph]
+        if isinstance(pe, Q.PathLength):
+            return batch.col(f"{a}.length")
+        if isinstance(pe, Q.PathAgg):
+            return batch.col(f"{a}.sum_{pe.attr}")
+        if isinstance(pe, Q.PathVertexAttr):
+            pos = batch.col(f"{a}._{pe.which}_pos")
+            vt = eng.tables[vb.vertex_table]
+            if pe.attr == "id":
+                return jnp.take(
+                    vb.view.v_ids, jnp.clip(pos, 0, vb.view.n_vertices - 1)
+                )
+            srccol = vb.v_attrs.get(pe.attr, pe.attr)
+            decode[0] = (vb.vertex_table, srccol)
+            return jnp.take(vt.col(srccol), jnp.clip(pos, 0, vt.capacity - 1))
+        if isinstance(pe, Q.PathString):
+            return batch.col(f"{a}._verts")  # decoded by caller/helpers
+        raise NotImplementedError(repr(pe))
+
+    def ev(node):
+        if isinstance(node, Q.PathExpr):
+            return resolve_pathexpr(node)
+        if isinstance(node, X.Col):
+            v = batch.col(node.name)
+            if "." in node.name:
+                alias, cname = node.name.split(".", 1)
+                tn = _alias_table(ctx, alias)
+                if tn and (tn, cname) in eng.rev_dicts:
+                    decode[0] = (tn, cname)
+            return v
+        if isinstance(node, X.Const):
+            return jnp.asarray(node.value)
+        if isinstance(node, X.Cmp):
+            lv, rv = ev_enc(node.left, node.right)
+            return X._CMPS[node.op](lv, rv)
+        if isinstance(node, X.BoolOp):
+            if node.op == "and":
+                out = ev(node.args[0])
+                for x in node.args[1:]:
+                    out = out & ev(x)
+                return out
+            if node.op == "or":
+                out = ev(node.args[0])
+                for x in node.args[1:]:
+                    out = out | ev(x)
+                return out
+            return ~ev(node.args[0])
+        if isinstance(node, X.Arith):
+            av, bv = ev(node.left), ev(node.right)
+            return {"+": av + bv, "-": av - bv, "*": av * bv}[node.op]
+        if isinstance(node, X.In):
+            item = ev(node.item)
+            out = jnp.zeros(item.shape, jnp.bool_)
+            for v in node.values:
+                out = out | (item == jnp.asarray(_enc_for(ctx, node.item, v)))
+            return out
+        raise TypeError(type(node))
+
+    def ev_enc(l, r):
+        # encode string constants against the column on the other side
+        if isinstance(r, X.Const) and isinstance(r.value, str):
+            return ev(l), jnp.asarray(_enc_for(ctx, l, r.value))
+        if isinstance(l, X.Const) and isinstance(l.value, str):
+            return jnp.asarray(_enc_for(ctx, r, l.value)), ev(r)
+        return ev(l), ev(r)
+
+    out = ev(e)
+    if want_decode:
+        return out, decode[0]
+    return out
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+def execute(plan, engine) -> QueryResult:
+    """Walk the physical tree; the root finalizer assembles the QueryResult."""
+    ctx = ExecContext(engine=engine, plan=plan, explain=list(plan.explain_lines()))
+    root = plan.root
+    if not hasattr(root, "finalize"):
+        raise TypeError(f"plan root {type(root).__name__} is not a finalizer")
+    return root.finalize(ctx)

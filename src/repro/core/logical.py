@@ -1,0 +1,296 @@
+"""Logical operator DAG — the cross-model plan IR (paper §5-§6).
+
+The paper's central systems claim is that graph operators (VertexScan,
+EdgeScan, PathScan) and relational operators (Filter, Join, Project,
+Aggregate) compose inside *one* query plan tree, and the optimizer rewrites
+across the model boundary. This module is that tree: a typed logical IR
+produced by ``build_logical(query)`` and rewritten by the named rules in
+``repro.core.optimizer`` into a physical tree (``repro.core.executor``).
+
+Nodes are plain dataclasses; ``pretty()`` renders the tree for
+``GRFusion.explain``. A ``PathScan`` carries a ``PathSpec`` — the full
+constraint bundle for one PATHS source (anchors, per-hop masks, length
+bounds, physical selection) that the optimizer fills in rule by rule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dfield
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import expr as X
+from repro.core import query as Q
+
+DEFAULT_MAX_LEN = 6
+
+
+@dataclass
+class PathSpec:
+    """Constraints on one PATHS FROM-item, filled in by optimizer rules."""
+
+    alias: str
+    graph: str
+    min_len: int = 1
+    max_len: int = DEFAULT_MAX_LEN
+    explicit_len: bool = False
+    start_anchor: Optional[Tuple[str, Any]] = None  # ('col', 'U.uId') | ('const', v)
+    end_anchor: Optional[Tuple[str, Any]] = None
+    start_attr_preds: List[X.Expr] = dfield(default_factory=list)
+    end_attr_preds: List[X.Expr] = dfield(default_factory=list)
+    global_vertex_preds: List[X.Expr] = dfield(default_factory=list)
+    hop_edge_preds: List[Tuple[int, Optional[int], X.Expr]] = dfield(default_factory=list)
+    any_edge_preds: List[X.Expr] = dfield(default_factory=list)
+    agg_attrs: List[str] = dfield(default_factory=list)
+    agg_upper_bounds: Dict[str, float] = dfield(default_factory=dict)
+    close_loop: bool = False
+    sp_weight_attr: Optional[str] = None
+    physical: str = "enum"  # 'enum' | 'bfs' | 'bfs_path' | 'sssp'
+    wants_path_string: bool = False
+    backend: Optional[str] = None  # traversal backend request (None = default)
+    count_only: bool = False  # COUNT(*) fused into the traversal (§6.3)
+
+
+def format_pathspec(spec: PathSpec) -> str:
+    """Single source of truth for PathScan labels (logical AND physical)."""
+    bits = [f"len=[{spec.min_len},{spec.max_len}]", f"physical={spec.physical}"]
+    if spec.start_anchor:
+        bits.append(f"start={spec.start_anchor[0]}:{spec.start_anchor[1]}")
+    if spec.end_anchor:
+        bits.append(f"end={spec.end_anchor[0]}:{spec.end_anchor[1]}")
+    if spec.close_loop:
+        bits.append("close_loop")
+    if spec.count_only:
+        bits.append("count_only")
+    if spec.backend:
+        bits.append(f"backend={spec.backend}")
+    return f"{spec.graph} AS {spec.alias}; {', '.join(bits)}"
+
+
+# --------------------------------------------------------------------------
+# logical nodes
+# --------------------------------------------------------------------------
+class LogicalOp:
+    def children(self) -> list:
+        return []
+
+    def label(self) -> str:
+        return type(self).__name__
+
+
+@dataclass
+class TableScan(LogicalOp):
+    alias: str
+    table: str
+    filters: List[X.Expr] = dfield(default_factory=list)
+
+    def label(self):
+        f = f" [{len(self.filters)} pushed filter(s)]" if self.filters else ""
+        return f"TableScan({self.table} AS {self.alias}){f}"
+
+
+@dataclass
+class VertexScan(LogicalOp):
+    alias: str
+    graph: str
+    filters: List[X.Expr] = dfield(default_factory=list)
+
+    def label(self):
+        f = f" [{len(self.filters)} pushed filter(s)]" if self.filters else ""
+        return f"VertexScan({self.graph} AS {self.alias}){f}"
+
+
+@dataclass
+class EdgeScan(LogicalOp):
+    alias: str
+    graph: str
+    filters: List[X.Expr] = dfield(default_factory=list)
+
+    def label(self):
+        f = f" [{len(self.filters)} pushed filter(s)]" if self.filters else ""
+        return f"EdgeScan({self.graph} AS {self.alias}){f}"
+
+
+@dataclass
+class RelJoin(LogicalOp):
+    """N-ary equi-join of relational inputs; the optimizer's join-ordering
+    rule lowers it to a left-deep binary HashJoin/CrossJoin chain."""
+
+    inputs: List[LogicalOp]
+    conds: List[Tuple[str, str]] = dfield(default_factory=list)
+
+    def children(self):
+        return list(self.inputs)
+
+    def label(self):
+        return f"RelJoin(conds={self.conds})"
+
+
+@dataclass
+class HashJoin(LogicalOp):
+    left: LogicalOp
+    right: LogicalOp
+    left_key: str
+    right_key: str
+
+    def children(self):
+        return [self.left, self.right]
+
+    def label(self):
+        return f"HashJoin({self.left_key} == {self.right_key})"
+
+
+@dataclass
+class CrossJoin(LogicalOp):
+    left: LogicalOp
+    right: LogicalOp
+    right_alias: str = ""
+
+    def children(self):
+        return [self.left, self.right]
+
+    def label(self):
+        return f"CrossJoin(+{self.right_alias}, bounded)"
+
+
+@dataclass
+class PathScan(LogicalOp):
+    """Graph traversal as a first-class plan node. ``child`` (optional) is the
+    plan fragment producing anchor lanes; the scan's output rows reference
+    their origin lane, so relational columns flow through the traversal."""
+
+    alias: str
+    graph: str
+    spec: PathSpec
+    child: Optional[LogicalOp] = None
+
+    def children(self):
+        return [self.child] if self.child is not None else []
+
+    def label(self):
+        return f"PathScan({format_pathspec(self.spec)})"
+
+
+@dataclass
+class Filter(LogicalOp):
+    child: LogicalOp
+    predicates: List[X.Expr] = dfield(default_factory=list)
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        return f"Filter({len(self.predicates)} residual predicate(s))"
+
+
+@dataclass
+class Project(LogicalOp):
+    child: LogicalOp
+    select_list: Dict[str, Any] = dfield(default_factory=dict)
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        names = ", ".join(self.select_list) if self.select_list else "*"
+        return f"Project({names})"
+
+
+@dataclass
+class Aggregate(LogicalOp):
+    child: LogicalOp
+    agg_select: Dict[str, tuple] = dfield(default_factory=dict)
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        parts = ", ".join(f"{k}={op}" for k, (op, _) in self.agg_select.items())
+        return f"Aggregate({parts})"
+
+
+@dataclass
+class Sort(LogicalOp):
+    child: LogicalOp
+    key: str = ""
+    descending: bool = False
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        return f"Sort({self.key}{' DESC' if self.descending else ''})"
+
+
+@dataclass
+class Limit(LogicalOp):
+    child: LogicalOp
+    n: int = 0
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        return f"Limit({self.n})"
+
+
+def pretty(node: LogicalOp, indent: int = 0) -> str:
+    lines = ["  " * indent + node.label()]
+    for c in node.children():
+        lines.append(pretty(c, indent + 1))
+    return "\n".join(lines)
+
+
+# --------------------------------------------------------------------------
+# builder: Query -> canonical (unoptimized) logical tree
+# --------------------------------------------------------------------------
+def build_logical(query: Q.Query) -> LogicalOp:
+    """Canonical shape: scans -> RelJoin -> PathScan stack -> Filter(WHERE)
+    -> Sort/Limit -> Aggregate|Project. All WHERE conjuncts start out in the
+    top Filter; the optimizer classifies and pushes them down."""
+    rel_leaves: List[LogicalOp] = []
+    path_nodes: List[PathScan] = []
+    for f in query.froms:
+        if f.kind == "table":
+            rel_leaves.append(TableScan(alias=f.alias, table=f.name))
+        elif f.kind == "vertexes":
+            rel_leaves.append(VertexScan(alias=f.alias, graph=f.name))
+        elif f.kind == "edges":
+            rel_leaves.append(EdgeScan(alias=f.alias, graph=f.name))
+        elif f.kind == "paths":
+            spec = PathSpec(alias=f.alias, graph=f.name)
+            if query.sp_hint:
+                spec.sp_weight_attr = query.sp_hint
+            if query.max_path_len is not None:
+                spec.max_len = query.max_path_len
+            if query.backend is not None:
+                spec.backend = query.backend
+            path_nodes.append(PathScan(alias=f.alias, graph=f.name, spec=spec))
+        else:
+            raise ValueError(f.kind)
+
+    node: Optional[LogicalOp]
+    if len(rel_leaves) > 1:
+        node = RelJoin(inputs=rel_leaves)
+    elif rel_leaves:
+        node = rel_leaves[0]
+    else:
+        node = None
+    for ps in path_nodes:
+        ps.child = node
+        node = ps
+    if node is None:
+        raise ValueError("empty FROM clause")
+
+    node = Filter(child=node, predicates=list(X.split_conjuncts(query.where_expr)))
+    if query.agg_select:
+        # aggregates consume the full (filtered) batch; ORDER BY / LIMIT are
+        # meaningless above a scalar aggregate and are dropped, matching the
+        # pre-IR engine semantics
+        node = Aggregate(child=node, agg_select=dict(query.agg_select))
+    else:
+        if query.order_key is not None:
+            node = Sort(child=node, key=query.order_key[0],
+                        descending=query.order_key[1])
+        if query.limit_n is not None:
+            node = Limit(child=node, n=query.limit_n)
+        node = Project(child=node, select_list=dict(query.select_list))
+    return node

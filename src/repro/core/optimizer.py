@@ -1,0 +1,693 @@
+"""Rule-based cross-model optimizer (paper §6).
+
+Lowers the canonical logical tree from ``logical.build_logical`` into a
+physical executor tree through an explicit pipeline of *named* rewrite
+rules, each of which appends structured events to the plan's trace:
+
+  classify-predicates      WHERE conjuncts -> pushed scan filters, equi-join
+                           conditions, per-path constraint buckets, residuals
+  path-ordering            stack PathScans so column anchors referencing
+                           another PATHS source execute above their producer
+                           (lifts the old single-PATHS restriction)
+  path-length-inference    §6.1 explicit Length predicates + implicit indexed
+                           minima bound the traversal loop statically
+  select-path-aggregates   SELECT-only aggregates ride in the path buffer
+  physical-pathscan        §6.3 logical PathScan -> {enum, bfs, bfs_path, sssp}
+  aggregate-pushdown       COUNT(*)-only plans fuse the count into traversal
+  join-ordering            greedy equi-join chain with bounded cross-join
+                           fallback; leftover conditions become residuals
+  traversal-backend        record per-query backend pin (resolution against
+                           live view statistics happens at execution time)
+
+The result is a ``PhysicalPlan`` whose ``root`` is an executor node tree
+(``repro.core.executor``); ``pretty()`` prints the typed operator tree plus
+one line per applied rule.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field as dfield
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core import expr as X
+from repro.core import query as Q
+from repro.core import logical as L
+from repro.core import executor as E
+
+DEFAULT_MAX_LEN = L.DEFAULT_MAX_LEN
+
+
+# --------------------------------------------------------------------------
+# plan containers
+# --------------------------------------------------------------------------
+@dataclass
+class RuleEvent:
+    rule: str
+    message: str
+
+    def __str__(self):
+        return f"[{self.rule}] {self.message}"
+
+
+@dataclass
+class PhysicalPlan:
+    query: Q.Query
+    root: "E.ExecNode"
+    logical: L.LogicalOp
+    specs: Dict[str, L.PathSpec]
+    table_filters: Dict[str, List[X.Expr]]
+    join_conds: List[Tuple[str, str]]
+    residuals: List[X.Expr]
+    trace: List[RuleEvent] = dfield(default_factory=list)
+
+    def explain_lines(self) -> List[str]:
+        return [e.message for e in self.trace]
+
+    def pretty(self) -> str:
+        lines = ["physical plan:"]
+        lines.append(E.pretty(self.root, 1))
+        lines.append("applied rules:")
+        for e in self.trace:
+            lines.append(f"  rule {e.rule}: {e.message}")
+        return "\n".join(lines)
+
+    def __str__(self):
+        return self.pretty()
+
+
+# --------------------------------------------------------------------------
+# helpers
+# --------------------------------------------------------------------------
+def _path_refs(e) -> List[Q.PathExpr]:
+    out = []
+
+    def walk(n):
+        if isinstance(n, Q.PathExpr):
+            out.append(n)
+        if isinstance(n, (X.Cmp, X.Arith)):
+            walk(n.left), walk(n.right)
+        elif isinstance(n, X.BoolOp):
+            for a in n.args:
+                walk(a)
+        elif isinstance(n, X.In):
+            walk(n.item)
+
+    walk(e)
+    return out
+
+
+def _table_aliases(e) -> set:
+    return {c.split(".")[0] for c in X.columns_of(e) if "." in c}
+
+
+def _strip_alias(e: X.Expr, alias: str) -> X.Expr:
+    """Rewrite Col('U.x') -> Col('x') for single-table pushdown."""
+    if isinstance(e, X.Col):
+        return X.Col(e.name.split(".", 1)[1]) if e.name.startswith(alias + ".") else e
+    if isinstance(e, X.Cmp):
+        return X.Cmp(e.op, _strip_alias(e.left, alias), _strip_alias(e.right, alias))
+    if isinstance(e, X.Arith):
+        return X.Arith(e.op, _strip_alias(e.left, alias), _strip_alias(e.right, alias))
+    if isinstance(e, X.BoolOp):
+        return X.BoolOp(e.op, tuple(_strip_alias(a, alias) for a in e.args))
+    if isinstance(e, X.In):
+        return X.In(_strip_alias(e.item, alias), e.values)
+    return e
+
+
+_FLIP = {"<": ">", ">": "<", "<=": ">=", ">=": "<=", "==": "==", "!=": "!="}
+
+
+@dataclass
+class _Scratch:
+    """Per-path working state shared between rules."""
+
+    len_lo: Optional[int] = None
+    len_hi: Optional[int] = None
+    imp_min: int = 0
+
+
+class _State:
+    def __init__(self, query: Q.Query, root: L.LogicalOp):
+        self.query = query
+        self.root = root
+        self.trace: List[RuleEvent] = []
+        # collected during walk of the canonical tree
+        self.scans: Dict[str, L.LogicalOp] = {}
+        self.paths: List[L.PathScan] = []
+        self.reljoin: Optional[L.RelJoin] = None
+        self.filter_node: Optional[L.Filter] = None
+        self.residuals: List[X.Expr] = []
+        self.join_conds: List[Tuple[str, str]] = []
+        self.scratch: Dict[str, _Scratch] = {}
+        self._index(root)
+        # _index walks top-down, but the PathScan stack is built bottom-up in
+        # FROM order — normalize so paths[0] is the bottom of the stack
+        from_order = [f.alias for f in query.froms if f.kind == "paths"]
+        self.paths.sort(key=lambda p: from_order.index(p.alias))
+
+    def _index(self, node: L.LogicalOp):
+        if isinstance(node, (L.TableScan, L.VertexScan, L.EdgeScan)):
+            self.scans[node.alias] = node
+        elif isinstance(node, L.PathScan):
+            self.paths.append(node)
+            self.scratch[node.alias] = _Scratch()
+        elif isinstance(node, L.RelJoin):
+            self.reljoin = node
+        elif isinstance(node, L.Filter):
+            self.filter_node = node
+        for c in node.children():
+            self._index(c)
+
+    def spec(self, alias: str) -> L.PathSpec:
+        for p in self.paths:
+            if p.alias == alias:
+                return p.spec
+        raise KeyError(alias)
+
+    def note(self, rule: str, message: str):
+        self.trace.append(RuleEvent(rule, message))
+
+
+# --------------------------------------------------------------------------
+# rules — each is a named function st: _State -> None
+# --------------------------------------------------------------------------
+def rule_classify_predicates(st: _State):
+    """Split WHERE conjuncts across the model boundary (paper §5.3/§6.2)."""
+    conjuncts = list(st.filter_node.predicates) if st.filter_node else []
+    residuals: List[X.Expr] = []
+    n_pushed = 0
+    path_order = [p.alias for p in st.paths]
+
+    for cj in conjuncts:
+        prefs = _path_refs(cj)
+        if not prefs:
+            aliases = _table_aliases(cj)
+            if len(aliases) == 1 and (a := next(iter(aliases))) in st.scans:
+                st.scans[a].filters.append(_strip_alias(cj, a))
+                n_pushed += 1
+                continue
+            if (
+                isinstance(cj, X.Cmp)
+                and cj.op == "=="
+                and isinstance(cj.left, X.Col)
+                and isinstance(cj.right, X.Col)
+            ):
+                st.join_conds.append((cj.left.name, cj.right.name))
+                continue
+            residuals.append(cj)
+            continue
+
+        aliases = {p.alias for p in prefs}
+        if not st.paths:
+            raise ValueError("path predicate without PATHS in FROM")
+        if len(aliases) == 1:
+            if _classify_single_path(st, cj, st.spec(next(iter(aliases))), residuals):
+                continue
+            residuals.append(cj)
+            continue
+        if _classify_cross_path(st, cj, path_order):
+            continue
+        residuals.append(cj)
+
+    st.residuals = residuals
+    if st.filter_node is not None:
+        st.filter_node.predicates = residuals
+    st.note(
+        "classify-predicates",
+        f"{n_pushed} pushed scan filter(s), {len(st.join_conds)} equi-join "
+        f"condition(s), {len(residuals)} residual(s)",
+    )
+
+
+def _classify_single_path(st: _State, cj, spec: L.PathSpec, residuals) -> bool:
+    """Absorb one conjunct into a PathSpec; False if it stays residual."""
+    sc = st.scratch[spec.alias]
+    if isinstance(cj, X.Cmp):
+        l, r = cj.left, cj.right
+        if isinstance(r, Q.PathExpr) and not isinstance(l, Q.PathExpr):
+            l, r, op = r, l, _FLIP[cj.op]
+        else:
+            op = cj.op
+
+        if isinstance(l, Q.PathLength) and isinstance(r, X.Const):
+            v = int(r.value)
+            if op == "==":
+                sc.len_lo, sc.len_hi = v, v
+            elif op == "<=":
+                sc.len_hi = v if sc.len_hi is None else min(sc.len_hi, v)
+            elif op == "<":
+                sc.len_hi = v - 1 if sc.len_hi is None else min(sc.len_hi, v - 1)
+            elif op == ">=":
+                sc.len_lo = v if sc.len_lo is None else max(sc.len_lo, v)
+            elif op == ">":
+                sc.len_lo = v + 1 if sc.len_lo is None else max(sc.len_lo, v + 1)
+            return True
+        if isinstance(l, Q.PathVertexAttr) and l.attr == "id" and op == "==":
+            if (
+                isinstance(r, Q.PathVertexAttr)
+                and r.attr == "id"
+                and r.alias == l.alias
+                and {l.which, r.which} == {"start", "end"}
+            ):
+                spec.close_loop = True
+                return True
+            anchor = None
+            if isinstance(r, X.Col):
+                anchor = ("col", r.name)
+            elif isinstance(r, X.Const):
+                anchor = ("const", r.value)
+            if anchor:
+                # only one anchor can seed the traversal; a second
+                # constraint on the same end must stay a residual filter,
+                # not silently overwrite the first
+                if l.which == "start" and spec.start_anchor is None:
+                    spec.start_anchor = anchor
+                    return True
+                if l.which == "end" and spec.end_anchor is None:
+                    spec.end_anchor = anchor
+                    return True
+            return False
+        if isinstance(l, Q.PathVertexAttr) and l.attr != "id":
+            pred = X.Cmp(op, X.Col(l.attr), r)
+            (spec.start_attr_preds if l.which == "start" else spec.end_attr_preds).append(pred)
+            return True
+        if isinstance(l, Q.PathEdgeSliceAttr):
+            pred = X.Cmp(op, X.Col(l.attr), r)
+            if l.lo == Q.ANY:
+                spec.any_edge_preds.append(pred)
+            else:
+                spec.hop_edge_preds.append((l.lo, l.hi, pred))
+                # §6.1 implicit minimum: Edges[5..*] => min length 6,
+                # Edges[7..9] => the positions must exist => min length 10.
+                sc.imp_min = max(
+                    sc.imp_min, (l.hi + 1) if l.hi is not None else (l.lo + 1)
+                )
+            return True
+        if isinstance(l, Q.PathVertexSliceAttr):
+            if l.lo in (0, 1) and l.hi is None:
+                spec.global_vertex_preds.append(X.Cmp(op, X.Col(l.attr), r))
+                if l.lo == 0:
+                    spec.start_attr_preds.append(X.Cmp(op, X.Col(l.attr), r))
+                return True
+            return False
+        if isinstance(l, Q.PathAgg) and isinstance(r, X.Const):
+            if l.attr not in spec.agg_attrs:
+                spec.agg_attrs.append(l.attr)
+            if op in ("<", "<="):
+                b = float(r.value)
+                spec.agg_upper_bounds[l.attr] = min(
+                    spec.agg_upper_bounds.get(l.attr, b), b
+                )
+            residuals.append(cj)  # exact check stays residual
+            return True
+        return False
+    if isinstance(cj, X.In) and isinstance(cj.item, Q.PathEdgeSliceAttr):
+        l = cj.item
+        pred = X.In(X.Col(l.attr), cj.values)
+        if l.lo == Q.ANY:
+            spec.any_edge_preds.append(pred)
+        else:
+            spec.hop_edge_preds.append((l.lo, l.hi, pred))
+            sc.imp_min = max(
+                st.scratch[spec.alias].imp_min,
+                (l.hi + 1) if l.hi is not None else (l.lo + 1),
+            )
+        return True
+    return False
+
+
+def _classify_cross_path(st: _State, cj, path_order: List[str]) -> bool:
+    """PS2.start.id == PS1.end.id — anchor the later PATHS source on the
+    earlier one's output vertex-id column (the cross-model sibling join)."""
+    if not (
+        isinstance(cj, X.Cmp)
+        and cj.op == "=="
+        and isinstance(cj.left, Q.PathVertexAttr)
+        and isinstance(cj.right, Q.PathVertexAttr)
+        and cj.left.attr == "id"
+        and cj.right.attr == "id"
+        and cj.left.alias != cj.right.alias
+    ):
+        return False
+    l, r = cj.left, cj.right
+    # Only a START anchor seeds the consumer's traversal lanes from the
+    # producer's output rows, so the consumer is the side referenced at
+    # .start — regardless of FROM order (rule_path_ordering restacks the
+    # producer below it). When both sides are .start the later FROM item
+    # consumes; an end/end reference cannot align origin lanes and stays a
+    # residual (the stacked-paths validation below rejects it if the
+    # consumer ends up unseeded).
+    if l.which != "start" and r.which == "start":
+        l, r = r, l
+    elif l.which == "start" and r.which == "start":
+        if path_order.index(l.alias) < path_order.index(r.alias):
+            l, r = r, l
+    spec = st.spec(l.alias)
+    anchor = ("col", f"{r.alias}.{r.which}vertexid")
+    if l.which != "start" or spec.start_anchor is not None:
+        return False
+    spec.start_anchor = anchor
+    st.note(
+        "classify-predicates",
+        f"cross-path anchor: {l.alias}.{l.which} <- {r.alias}.{r.which}vertexid",
+    )
+    return True
+
+
+def rule_path_ordering(st: _State):
+    """Topologically order stacked PathScans by column-anchor dependencies."""
+    if len(st.paths) < 2:
+        return
+    path_aliases = {p.alias for p in st.paths}
+
+    def deps(p: L.PathScan) -> set:
+        out = set()
+        for anchor in (p.spec.start_anchor, p.spec.end_anchor):
+            if anchor and anchor[0] == "col":
+                a = anchor[1].split(".")[0]
+                if a in path_aliases and a != p.alias:
+                    out.add(a)
+        return out
+
+    ordered: List[L.PathScan] = []
+    pending = list(st.paths)
+    placed: set = set()
+    while pending:
+        progressed = False
+        for p in list(pending):
+            if deps(p) <= placed:
+                ordered.append(p)
+                placed.add(p.alias)
+                pending.remove(p)
+                progressed = True
+        if not progressed:
+            raise NotImplementedError(
+                "cyclic PATHS anchor dependencies: "
+                + ", ".join(p.alias for p in pending)
+            )
+    if [p.alias for p in ordered] != [p.alias for p in st.paths]:
+        st.note(
+            "path-ordering",
+            "PathScan stack reordered: " + " -> ".join(p.alias for p in ordered),
+        )
+    # rebuild the stack bottom-up over the relational fragment (the builder
+    # stacks FROM-order with paths[0] at the bottom, so its child is the
+    # relational fragment or None)
+    node: Optional[L.LogicalOp] = st.paths[0].child
+    for p in ordered:
+        p.child = node
+        node = p
+    if st.filter_node is not None:
+        st.filter_node.child = node
+    st.paths = ordered
+    # a stacked PathScan's output rows gather its child's columns through
+    # the origin lane, which is only aligned when the scan is seeded from a
+    # column of that child — anything else would silently pair unrelated
+    # rows, so reject it here
+    for p in st.paths[1:]:
+        sa = p.spec.start_anchor
+        if not (sa and sa[0] == "col"):
+            raise NotImplementedError(
+                f"stacked PATHS source '{p.alias}' must be start-anchored "
+                "on a column of the plan below it (e.g. "
+                f"{p.alias}.start.id == OTHER.end.id); end-only or "
+                "unanchored composition is not supported yet"
+            )
+
+
+def rule_path_length_inference(st: _State):
+    """§6.1: bound each traversal loop statically; clamp contradictions."""
+    multi = len(st.paths) > 1
+    for p in st.paths:
+        spec, sc = p.spec, st.scratch[p.alias]
+        if sc.len_lo is not None or sc.len_hi is not None:
+            spec.explicit_len = True
+        lo = sc.len_lo if sc.len_lo is not None else 1
+        spec.min_len = max(lo, sc.imp_min, 0)
+        spec.max_len = min(
+            sc.len_hi if sc.len_hi is not None else spec.max_len, spec.max_len
+        )
+        clamped = spec.max_len < spec.min_len
+        if clamped:
+            spec.max_len = spec.min_len
+        tag = f"{p.alias}: " if multi else ""
+        st.note(
+            "path-length-inference",
+            f"{tag}length inference: [{spec.min_len}, {spec.max_len}]"
+            + (" (explicit)" if spec.explicit_len else " (implicit/default)"),
+        )
+        if clamped:
+            st.note(
+                "path-length-inference",
+                f"{tag}contradictory bounds: max clamped up to min "
+                f"(len_lo={sc.len_lo}, len_hi={sc.len_hi}, "
+                f"implicit_min={sc.imp_min})",
+            )
+
+
+def rule_select_path_aggregates(st: _State):
+    """Aggregates appearing only in SELECT still ride in the path buffer."""
+    q = st.query
+    for e in list(q.select_list.values()) + [
+        v[1] for v in q.agg_select.values() if v[1] is not None
+    ]:
+        for ref in _path_refs(e) if isinstance(e, X.Expr) else []:
+            spec = st.spec(ref.alias)
+            if isinstance(ref, Q.PathAgg) and ref.attr not in spec.agg_attrs:
+                spec.agg_attrs.append(ref.attr)
+                st.note(
+                    "select-path-aggregates",
+                    f"{spec.alias}: SELECT aggregate '{ref.attr}' carried in "
+                    "path buffer",
+                )
+            if isinstance(ref, Q.PathString):
+                spec.wants_path_string = True
+
+
+def rule_physical_pathscan(st: _State):
+    """§6.3: choose the physical traversal operator per PathScan."""
+    multi = len(st.paths) > 1
+    for p in st.paths:
+        spec = p.spec
+        uniform_only = not spec.hop_edge_preds or all(
+            lo == 0 and hi is None for (lo, hi, _) in spec.hop_edge_preds
+        )
+        if spec.sp_weight_attr:
+            spec.physical = "sssp"
+        elif (
+            spec.start_anchor is not None
+            and spec.end_anchor is not None
+            and uniform_only
+            and not spec.close_loop
+            and not spec.agg_attrs
+            and not spec.any_edge_preds
+            and not spec.global_vertex_preds
+            and not spec.end_attr_preds
+            and not spec.start_attr_preds
+        ):
+            # reachability pattern: frontier BFS; unit-weight SSSP when the
+            # query also wants the witness path materialized (LIMIT 1 form)
+            spec.physical = "bfs_path" if spec.wants_path_string else "bfs"
+        else:
+            spec.physical = "enum"
+        if spec.physical == "enum" and spec.min_len < 1:
+            spec.min_len = 1
+            spec.max_len = max(spec.max_len, spec.min_len)
+            st.note(
+                "physical-pathscan",
+                f"{p.alias}: enumeration requires min length >= 1; clamped",
+            )
+        tag = f"{p.alias}: " if multi else ""
+        st.note("physical-pathscan", f"{tag}physical PathScan: {spec.physical}")
+
+
+def rule_aggregate_pushdown(st: _State):
+    """COUNT(*)-only plans over a bare enumeration fuse the count into the
+    traversal (no PathSet materialization)."""
+    q = st.query
+    if (
+        len(st.paths) == 1
+        and not st.scans
+        and q.agg_select
+        and all(op == "count" for op, _ in q.agg_select.values())
+        and not q.select_list
+        and not st.residuals
+        and st.paths[0].spec.physical == "enum"
+        and st.paths[0].spec.end_anchor is None
+        and not st.paths[0].spec.end_attr_preds
+    ):
+        st.paths[0].spec.count_only = True
+        st.note(
+            "aggregate-pushdown",
+            f"{st.paths[0].alias}: COUNT fused into PathScan (count_only)",
+        )
+
+
+def rule_join_ordering(st: _State):
+    """Greedy equi-join chain; bounded cross-join fallback; leftover
+    conditions demoted to residual equality filters."""
+    rj = st.reljoin
+    if rj is None:
+        return
+    by_alias = {s.alias: s for s in rj.inputs}  # type: ignore[attr-defined]
+    order = [s.alias for s in rj.inputs]  # type: ignore[attr-defined]
+    joined: L.LogicalOp = by_alias[order[0]]
+    joined_aliases = {order[0]}
+    remaining = set(order[1:])
+    conds = list(st.join_conds)
+    while remaining:
+        progressed = False
+        for lk, rk in list(conds):
+            la, ra = lk.split(".")[0], rk.split(".")[0]
+            if la in joined_aliases and ra in remaining:
+                joined = L.HashJoin(left=joined, right=by_alias[ra],
+                                    left_key=lk, right_key=rk)
+                joined_aliases.add(ra)
+                remaining.discard(ra)
+                conds.remove((lk, rk))
+                progressed = True
+            elif ra in joined_aliases and la in remaining:
+                joined = L.HashJoin(left=joined, right=by_alias[la],
+                                    left_key=rk, right_key=lk)
+                joined_aliases.add(la)
+                remaining.discard(la)
+                conds.remove((lk, rk))
+                progressed = True
+        if not progressed:
+            a = sorted(remaining)[0]
+            joined = L.CrossJoin(left=joined, right=by_alias[a], right_alias=a)
+            st.note("join-ordering", f"cross join with {a} (bounded)")
+            joined_aliases.add(a)
+            remaining.discard(a)
+    for lk, rk in conds:
+        st.residuals.append(X.Cmp("==", X.Col(lk), X.Col(rk)))
+        st.note(
+            "join-ordering",
+            f"leftover equi condition {lk} == {rk} demoted to residual",
+        )
+    if st.filter_node is not None:
+        st.filter_node.predicates = st.residuals
+    # splice the binary join tree in place of the n-ary RelJoin
+    _replace_child(st.root, rj, joined)
+    st.reljoin = None
+
+
+def _replace_child(node: L.LogicalOp, old: L.LogicalOp, new: L.LogicalOp):
+    for attr in ("child", "left", "right"):
+        if getattr(node, attr, None) is old:
+            setattr(node, attr, new)
+    if isinstance(node, L.RelJoin):
+        node.inputs = [new if c is old else c for c in node.inputs]
+    for c in node.children():
+        _replace_child(c, old, new)
+
+
+def rule_traversal_backend(st: _State):
+    multi = len(st.paths) > 1
+    for p in st.paths:
+        if p.spec.backend is not None:
+            tag = f"{p.alias}: " if multi else ""
+            st.note(
+                "traversal-backend",
+                f"{tag}traversal backend request: {p.spec.backend}",
+            )
+
+
+RULE_PIPELINE = (
+    ("classify-predicates", rule_classify_predicates),
+    ("path-ordering", rule_path_ordering),
+    ("path-length-inference", rule_path_length_inference),
+    ("select-path-aggregates", rule_select_path_aggregates),
+    ("physical-pathscan", rule_physical_pathscan),
+    ("aggregate-pushdown", rule_aggregate_pushdown),
+    ("join-ordering", rule_join_ordering),
+    ("traversal-backend", rule_traversal_backend),
+)
+
+
+# --------------------------------------------------------------------------
+# driver
+# --------------------------------------------------------------------------
+def optimize(query: Q.Query, catalog=None) -> PhysicalPlan:
+    """builder -> logical tree -> rule pipeline -> physical executor tree."""
+    root = L.build_logical(query)
+    st = _State(query, root)
+    for _, rule in RULE_PIPELINE:
+        rule(st)
+    phys = _lower(st.root)
+    return PhysicalPlan(
+        query=query,
+        root=phys,
+        logical=st.root,
+        specs={p.alias: p.spec for p in st.paths},
+        table_filters={a: list(s.filters) for a, s in st.scans.items()},
+        join_conds=list(st.join_conds),
+        residuals=list(st.residuals),
+        trace=st.trace,
+    )
+
+
+def _lower(node: L.LogicalOp) -> "E.ExecNode":
+    """Logical -> physical executor nodes (1:1 after the rewrite rules)."""
+    if isinstance(node, L.TableScan):
+        return E.TableScanExec(node.alias, node.table, node.filters)
+    if isinstance(node, L.VertexScan):
+        return E.VertexScanExec(node.alias, node.graph, node.filters)
+    if isinstance(node, L.EdgeScan):
+        return E.EdgeScanExec(node.alias, node.graph, node.filters)
+    if isinstance(node, L.HashJoin):
+        return E.HashJoinExec(
+            _lower(node.left), _lower(node.right), node.left_key, node.right_key
+        )
+    if isinstance(node, L.CrossJoin):
+        return E.CrossJoinExec(_lower(node.left), _lower(node.right), node.right_alias)
+    if isinstance(node, L.PathScan):
+        child = _lower(node.child) if node.child is not None else None
+        return E.PathScanExec(node.spec, child)
+    if isinstance(node, L.Filter):
+        child = _lower(node.child)
+        if not node.predicates:
+            return child
+        return E.ResidualFilterExec(child, node.predicates)
+    if isinstance(node, L.Sort):
+        return E.SortExec(_lower(node.child), node.key, node.descending)
+    if isinstance(node, L.Limit):
+        return E.LimitExec(_lower(node.child), node.n)
+    if isinstance(node, L.Project):
+        return E.ProjectExec(_lower(node.child), node.select_list)
+    if isinstance(node, L.Aggregate):
+        return E.AggregateExec(_lower(node.child), node.agg_select)
+    raise TypeError(f"cannot lower {type(node).__name__}")
+
+
+def choose_work_capacity(
+    spec: L.PathSpec,
+    avg_fan_out: float,
+    n_sources: int,
+    hint: Optional[str],
+    max_cap: int = 1 << 18,
+    min_cap: int = 1 << 10,
+) -> int:
+    """TPU form of the paper's §6.3 memory rule.
+
+    BFS-layer memory grows like S*F^L, DFS like S*F*L. We always expand
+    layer-wise, but the buffer capacity emulates the choice: the 'dfs' hint
+    (or a blow-up estimate) picks the lean F*L-scaled buffer (overflow is
+    detected and reported), 'bfs' the F^L-scaled one.
+    """
+    F = max(avg_fan_out, 1.0)
+    L_ = max(spec.max_len, 1)
+    bfs_est = n_sources * (F ** L_)
+    dfs_est = n_sources * F * L_
+    if hint == "dfs":
+        est = dfs_est
+    elif hint == "bfs":
+        est = bfs_est
+    else:
+        # paper: BFS iff F < L^(1/(L-1)); otherwise lean (DFS-like) buffers
+        thr = L_ ** (1.0 / max(L_ - 1, 1))
+        est = bfs_est if F < thr else min(bfs_est, max(dfs_est, 4096))
+    cap = 1
+    while cap < est and cap < max_cap:
+        cap <<= 1
+    return max(min(cap, max_cap), min_cap, n_sources)

@@ -1,330 +1,67 @@
-"""Query planning for graph-relational queries (paper §5.3, §6).
+"""Compatibility shim over the operator-DAG planner (paper §5.3, §6).
 
-The planner takes a declarative Query and produces a physical plan:
+The planning pipeline now lives in three modules:
 
-  1. WHERE conjuncts are classified into: per-table filters (pushed into the
-     scans), equi-join conditions, path-length constraints, path anchors
-     (start/end vertex from relational columns or constants), per-hop edge /
-     vertex predicate masks, ANY predicates, path-aggregate bounds, and
-     residual predicates.
-  2. Path-length inference (§6.1): explicit ``PS.Length`` predicates and
-     implicit indexed predicates (``Edges[5..*]`` => min length 6) bound the
-     traversal loop statically.
-  3. Filter pushdown (§6.2): every slice/ANY/aggregate predicate compiles to
-     masks-by-row evaluated on the relational sources once, and is applied
-     *inside* the traversal.
-  4. Logical PathScan -> physical operator (§6.3): SPScan under a
-     SHORTESTPATH hint; frontier BFS for anchored reachability-style
-     queries; otherwise bounded path enumeration whose work-buffer capacity
-     is chosen from the catalog's average fan-out statistic — the TPU
-     adaptation of the paper's BFS-vs-DFS memory rule (F^L vs F*L): the
-     'dfs' hint selects a lean buffer, 'bfs' a wide one.
+  * ``repro.core.logical``   — logical operator nodes + ``PathSpec``
+  * ``repro.core.optimizer`` — named rewrite rules -> ``PhysicalPlan``
+  * ``repro.core.executor``  — physical nodes walked by ``GRFusion.run``
+
+This module keeps the historical ``plan_query(query, catalog) -> Plan``
+entry point (classified predicate buckets + a single ``PathSpec``) for
+callers that still want the flat summary view of a plan. New code should
+use ``GRFusion.plan`` / ``GRFusion.explain`` and get the full tree.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field as dfield
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core import expr as X
 from repro.core import query as Q
+from repro.core.logical import DEFAULT_MAX_LEN, PathSpec  # re-export
+from repro.core.optimizer import choose_work_capacity, optimize  # re-export
 
-DEFAULT_MAX_LEN = 6
-
-
-def _path_refs(e) -> List[Q.PathExpr]:
-    out = []
-
-    def walk(n):
-        if isinstance(n, Q.PathExpr):
-            out.append(n)
-        if isinstance(n, X.Cmp) or isinstance(n, X.Arith):
-            walk(n.left), walk(n.right)
-        elif isinstance(n, X.BoolOp):
-            for a in n.args:
-                walk(a)
-        elif isinstance(n, X.In):
-            walk(n.item)
-
-    walk(e)
-    return out
-
-
-def _table_aliases(e) -> set:
-    return {c.split(".")[0] for c in X.columns_of(e) if "." in c}
-
-
-@dataclass
-class PathSpec:
-    alias: str
-    graph: str
-    min_len: int = 1
-    max_len: int = DEFAULT_MAX_LEN
-    explicit_len: bool = False
-    start_anchor: Optional[Tuple[str, Any]] = None  # ('col', 'U.uId') | ('const', v)
-    end_anchor: Optional[Tuple[str, Any]] = None
-    start_attr_preds: List[X.Expr] = dfield(default_factory=list)  # vertex-attr exprs
-    end_attr_preds: List[X.Expr] = dfield(default_factory=list)
-    global_vertex_preds: List[X.Expr] = dfield(default_factory=list)
-    hop_edge_preds: List[Tuple[int, Optional[int], X.Expr]] = dfield(default_factory=list)
-    any_edge_preds: List[X.Expr] = dfield(default_factory=list)
-    agg_attrs: List[str] = dfield(default_factory=list)  # sum aggregates carried
-    agg_upper_bounds: Dict[str, float] = dfield(default_factory=dict)
-    close_loop: bool = False
-    sp_weight_attr: Optional[str] = None
-    physical: str = "enum"  # 'enum' | 'bfs' | 'sssp'
-    wants_path_string: bool = False
-    # traversal backend request: None = engine default ('auto' resolves via
-    # the TraversalEngine's frontier-density policy at execution time, when
-    # the view statistics and batch width are known)
-    backend: Optional[str] = None
+__all__ = [
+    "DEFAULT_MAX_LEN",
+    "PathSpec",
+    "Plan",
+    "plan_query",
+    "choose_work_capacity",
+]
 
 
 @dataclass
 class Plan:
+    """Flat summary of an optimized plan (legacy shape)."""
+
     query: Q.Query
     table_filters: Dict[str, List[X.Expr]]
-    join_conds: List[Tuple[str, str]]  # ('A.x', 'B.y')
+    join_conds: List[Tuple[str, str]]
     residuals: List[X.Expr]
     path: Optional[PathSpec]
     explain: List[str] = dfield(default_factory=list)
 
 
-def _strip_alias(e: X.Expr, alias: str) -> X.Expr:
-    """Rewrite Col('U.x') -> Col('x') for single-table pushdown."""
-    if isinstance(e, X.Col):
-        return X.Col(e.name.split(".", 1)[1]) if e.name.startswith(alias + ".") else e
-    if isinstance(e, X.Cmp):
-        return X.Cmp(e.op, _strip_alias(e.left, alias), _strip_alias(e.right, alias))
-    if isinstance(e, X.Arith):
-        return X.Arith(e.op, _strip_alias(e.left, alias), _strip_alias(e.right, alias))
-    if isinstance(e, X.BoolOp):
-        return X.BoolOp(e.op, tuple(_strip_alias(a, alias) for a in e.args))
-    if isinstance(e, X.In):
-        return X.In(_strip_alias(e.item, alias), e.values)
-    return e
-
-
-def _const_value(e):
-    return e.value if isinstance(e, X.Const) else None
-
-
 def plan_query(query: Q.Query, catalog) -> Plan:
-    """``catalog`` maps graph names -> ViewBundle (for statistics)."""
+    """Legacy entry point: run the rule pipeline, flatten to a ``Plan``.
+
+    Multi-PATHS queries cannot be represented in the flat shape (the
+    operator tree composes them as stacked plan nodes); use
+    ``GRFusion.plan`` for those.
+    """
     paths_items = [f for f in query.froms if f.kind == "paths"]
     if len(paths_items) > 1:
-        raise NotImplementedError("self-joins of PATHS are not supported yet")
-    table_aliases = {f.alias for f in query.froms if f.kind in ("table", "vertexes", "edges")}
-
-    spec: Optional[PathSpec] = None
-    if paths_items:
-        spec = PathSpec(alias=paths_items[0].alias, graph=paths_items[0].name)
-        if query.sp_hint:
-            spec.sp_weight_attr = query.sp_hint
-        if query.max_path_len is not None:
-            spec.max_len = query.max_path_len
-        if query.backend is not None:
-            spec.backend = query.backend
-
-    table_filters: Dict[str, List[X.Expr]] = {a: [] for a in table_aliases}
-    join_conds: List[Tuple[str, str]] = []
-    residuals: List[X.Expr] = []
-    explain: List[str] = []
-
-    imp_min = 0  # implicit minimum length from indexed predicates (§6.1)
-    len_lo, len_hi = None, None
-
-    for cj in X.split_conjuncts(query.where_expr):
-        prefs = _path_refs(cj)
-        if not prefs:
-            aliases = _table_aliases(cj)
-            if len(aliases) == 1:
-                a = next(iter(aliases))
-                table_filters.setdefault(a, []).append(_strip_alias(cj, a))
-                continue
-            if (
-                isinstance(cj, X.Cmp)
-                and cj.op == "=="
-                and isinstance(cj.left, X.Col)
-                and isinstance(cj.right, X.Col)
-            ):
-                join_conds.append((cj.left.name, cj.right.name))
-                continue
-            residuals.append(cj)
-            continue
-
-        assert spec is not None, "path predicate without PATHS in FROM"
-        handled = False
-        if isinstance(cj, X.Cmp):
-            l, r = cj.left, cj.right
-            # normalize: path ref on the left
-            if isinstance(r, Q.PathExpr) and not isinstance(l, Q.PathExpr):
-                flip = {"<": ">", ">": "<", "<=": ">=", ">=": "<=", "==": "==", "!=": "!="}
-                l, r, op = r, l, flip[cj.op]
-            else:
-                op = cj.op
-
-            if isinstance(l, Q.PathLength) and isinstance(r, X.Const):
-                v = int(r.value)
-                if op == "==":
-                    len_lo, len_hi = v, v
-                elif op == "<=":
-                    len_hi = v if len_hi is None else min(len_hi, v)
-                elif op == "<":
-                    len_hi = v - 1 if len_hi is None else min(len_hi, v - 1)
-                elif op == ">=":
-                    len_lo = v if len_lo is None else max(len_lo, v)
-                elif op == ">":
-                    len_lo = v + 1 if len_lo is None else max(len_lo, v + 1)
-                handled = True
-            elif isinstance(l, Q.PathVertexAttr) and l.attr == "id" and op == "==":
-                if isinstance(r, Q.PathVertexAttr) and r.attr == "id" and {l.which, r.which} == {"start", "end"}:
-                    spec.close_loop = True
-                    handled = True
-                else:
-                    anchor = None
-                    if isinstance(r, X.Col):
-                        anchor = ("col", r.name)
-                    elif isinstance(r, X.Const):
-                        anchor = ("const", r.value)
-                    if anchor:
-                        if l.which == "start":
-                            spec.start_anchor = anchor
-                        else:
-                            spec.end_anchor = anchor
-                        handled = True
-            elif isinstance(l, Q.PathVertexAttr) and l.attr != "id":
-                pred = X.Cmp(op, X.Col(l.attr), r)
-                if l.which == "start":
-                    spec.start_attr_preds.append(pred)
-                else:
-                    spec.end_attr_preds.append(pred)
-                handled = True
-            elif isinstance(l, Q.PathEdgeSliceAttr):
-                pred = X.Cmp(op, X.Col(l.attr), r)
-                if l.lo == Q.ANY:
-                    spec.any_edge_preds.append(pred)
-                else:
-                    spec.hop_edge_preds.append((l.lo, l.hi, pred))
-                    # §6.1 implicit minimum: Edges[5..*] => min length 6,
-                    # Edges[7..9] => the positions must exist => min length 10.
-                    imp_min = max(imp_min, (l.hi + 1) if l.hi is not None else (l.lo + 1))
-                handled = True
-            elif isinstance(l, Q.PathVertexSliceAttr):
-                if l.lo in (0, 1) and l.hi is None:
-                    spec.global_vertex_preds.append(X.Cmp(op, X.Col(l.attr), r))
-                    if l.lo == 0:
-                        spec.start_attr_preds.append(X.Cmp(op, X.Col(l.attr), r))
-                    handled = True
-            elif isinstance(l, Q.PathAgg) and isinstance(r, X.Const):
-                if l.attr not in spec.agg_attrs:
-                    spec.agg_attrs.append(l.attr)
-                if op in ("<", "<="):
-                    b = float(r.value)
-                    spec.agg_upper_bounds[l.attr] = min(
-                        spec.agg_upper_bounds.get(l.attr, b), b
-                    )
-                residuals.append(cj)  # exact check stays residual
-                handled = True
-        elif isinstance(cj, X.In) and isinstance(cj.item, Q.PathEdgeSliceAttr):
-            l = cj.item
-            pred = X.In(X.Col(l.attr), cj.values)
-            if l.lo == Q.ANY:
-                spec.any_edge_preds.append(pred)
-            else:
-                spec.hop_edge_preds.append((l.lo, l.hi, pred))
-            handled = True
-
-        if not handled:
-            residuals.append(cj)
-
-    if spec is not None:
-        if len_lo is not None or len_hi is not None:
-            spec.explicit_len = True
-        spec.min_len = max(len_lo or 1, imp_min, 1)
-        spec.max_len = min(
-            len_hi if len_hi is not None else spec.max_len, spec.max_len
+        raise NotImplementedError(
+            "the flat Plan shape holds a single PathSpec; use GRFusion.plan "
+            "for multi-PATHS operator trees"
         )
-        if spec.max_len < spec.min_len:
-            spec.max_len = spec.min_len
-        explain.append(
-            f"length inference: [{spec.min_len}, {spec.max_len}]"
-            + (" (explicit)" if spec.explicit_len else " (implicit/default)")
-        )
-
-        # aggregates appearing only in SELECT still ride in the path buffer
-        for e in list(query.select_list.values()) + [
-            v[1] for v in query.agg_select.values() if v[1] is not None
-        ]:
-            for ref in _path_refs(e) if isinstance(e, X.Expr) else []:
-                if isinstance(ref, Q.PathAgg) and ref.attr not in spec.agg_attrs:
-                    spec.agg_attrs.append(ref.attr)
-                if isinstance(ref, Q.PathString):
-                    spec.wants_path_string = True
-
-        # ------------------------------------------------ physical selection
-        uniform_only = not spec.hop_edge_preds or all(
-            lo == 0 and hi is None for (lo, hi, _) in spec.hop_edge_preds
-        )
-        if spec.sp_weight_attr:
-            spec.physical = "sssp"
-        elif (
-            spec.start_anchor is not None
-            and spec.end_anchor is not None
-            and uniform_only
-            and not spec.close_loop
-            and not spec.agg_attrs
-            and not spec.any_edge_preds
-            and not spec.global_vertex_preds
-            and not spec.end_attr_preds
-            and not spec.start_attr_preds
-        ):
-            # reachability pattern: frontier BFS; unit-weight SSSP when the
-            # query also wants the witness path materialized (LIMIT 1 form).
-            spec.physical = "bfs_path" if spec.wants_path_string else "bfs"
-        else:
-            spec.physical = "enum"
-        explain.append(f"physical PathScan: {spec.physical}")
-        if spec.backend is not None:
-            explain.append(f"traversal backend request: {spec.backend}")
-
+    phys = optimize(query, catalog)
+    spec = next(iter(phys.specs.values())) if phys.specs else None
     return Plan(
         query=query,
-        table_filters=table_filters,
-        join_conds=join_conds,
-        residuals=residuals,
+        table_filters=phys.table_filters,
+        join_conds=phys.join_conds,
+        residuals=phys.residuals,
         path=spec,
-        explain=explain,
+        explain=phys.explain_lines(),
     )
-
-
-def choose_work_capacity(
-    spec: PathSpec,
-    avg_fan_out: float,
-    n_sources: int,
-    hint: Optional[str],
-    max_cap: int = 1 << 18,
-    min_cap: int = 1 << 10,
-) -> int:
-    """TPU form of the paper's §6.3 memory rule.
-
-    BFS-layer memory grows like S*F^L, DFS like S*F*L. We always expand
-    layer-wise, but the buffer capacity emulates the choice: the 'dfs' hint
-    (or a blow-up estimate) picks the lean F*L-scaled buffer (overflow is
-    detected and reported), 'bfs' the F^L-scaled one.
-    """
-    F = max(avg_fan_out, 1.0)
-    L = max(spec.max_len, 1)
-    bfs_est = n_sources * (F ** L)
-    dfs_est = n_sources * F * L
-    if hint == "dfs":
-        est = dfs_est
-    elif hint == "bfs":
-        est = bfs_est
-    else:
-        # paper: BFS iff F < L^(1/(L-1)); otherwise lean (DFS-like) buffers
-        thr = L ** (1.0 / max(L - 1, 1))
-        est = bfs_est if F < thr else min(bfs_est, max(dfs_est, 4096))
-    cap = 1
-    while cap < est and cap < max_cap:
-        cap <<= 1
-    return max(min(cap, max_cap), min_cap, n_sources)

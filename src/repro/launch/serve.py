@@ -70,6 +70,24 @@ def main():
     print(f"answered {len(results)} reachability queries; {reach} reachable")
     print(f"traversal stats: {stats}")
 
+    # pre-optimized plan admission: the rule pipeline runs once, the
+    # physical tree is re-walked per request (repeated parameterized
+    # queries skip re-planning on the serving hot path)
+    from repro.core.query import Query, P, col
+
+    PS = P("PS")
+    prepared = srv.prepare(
+        Query().from_paths("G", "PS")
+        .where((PS.start.id == 0) & (PS.length <= 3))
+        .select_count("n")
+    )
+    for _ in range(4):
+        srv.submit_plan(prepared)
+    outs = srv.flush_plans()
+    print(f"prepared plan served {len(outs)} times; "
+          f"paths from vertex 0 (<=3 hops): {int(outs[0].columns['n'])}")
+    print(prepared.pretty())
+
 
 if __name__ == "__main__":
     main()

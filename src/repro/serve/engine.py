@@ -102,6 +102,14 @@ class QueryServer:
     ``flush`` merges every pending query into [S, V] frontier sweeps (the
     traversal engine buckets lane counts to bound retracing). ``backend``
     pins a physical traversal backend; None keeps the engine default.
+
+    Beyond raw (src, dst) reachability pairs, the server admits
+    *pre-optimized physical plans*: ``prepare(query)`` runs the optimizer's
+    rule pipeline once and returns a ``PreparedPlan`` whose executor tree
+    is re-walked on every ``submit_plan``/``flush_plans`` — repeated
+    parameterized queries skip re-planning entirely and still see live
+    catalog state (delta inserts, tombstones) because the tree resolves
+    views and masks at execution time.
     """
 
     def __init__(
@@ -115,9 +123,48 @@ class QueryServer:
         self.backend = backend
         self.trav = engine.traversal
         self.pending: List[Dict] = []
+        self.pending_plans: List = []
 
     def submit(self, src_id: int, dst_id: int):
         self.pending.append({"src": src_id, "dst": dst_id})
+
+    # -- pre-optimized plan admission -------------------------------------
+    def prepare(self, query):
+        """Run the rule pipeline once; returns a ``PreparedPlan``."""
+        return self.engine.prepare(query)
+
+    def submit_plan(self, plan_or_query):
+        """Enqueue a PreparedPlan (a bare Query is planned on admission)."""
+        from repro.core.engine import PreparedPlan
+        from repro.core.query import Query
+
+        if isinstance(plan_or_query, PreparedPlan):
+            prepared = plan_or_query
+        elif isinstance(plan_or_query, Query):
+            prepared = self.engine.prepare(plan_or_query)
+        else:
+            raise TypeError(
+                "submit_plan takes a PreparedPlan or a Query, got "
+                f"{type(plan_or_query).__name__} (pass GRFusion.prepare(q), "
+                "not GRFusion.plan(q))"
+            )
+        self.pending_plans.append(prepared)
+        return prepared
+
+    def flush_plans(self) -> List:
+        """Execute every queued prepared plan (no re-planning). The queue
+        is drained up front and every plan runs even if an earlier one
+        fails: each entry in the returned list is either the plan's
+        QueryResult or the exception its execution raised, so one bad plan
+        can neither wedge the queue nor discard its neighbors' results."""
+        plans, self.pending_plans = self.pending_plans, []
+        out = []
+        for p in plans:
+            try:
+                out.append(p.run())
+            except Exception as e:  # noqa: BLE001 - reported to the caller
+                out.append(e)
+        return out
 
     def flush(self) -> List[Dict]:
         if not self.pending:

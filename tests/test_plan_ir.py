@@ -1,0 +1,397 @@
+"""Plan-IR tests: logical->physical operator trees, rule-based optimizer,
+structured EXPLAIN, stacked multi-PATHS composition, prepared plans, and
+the executor-level regression fixes that rode along with the redesign."""
+import numpy as np
+import pytest
+
+from repro.core import executor as EX
+from repro.core import logical as L
+from repro.core import planner as PL
+from repro.core.engine import GRFusion
+from repro.core.query import Query, P, col
+from repro.serve.engine import QueryServer
+
+
+@pytest.fixture
+def social():
+    eng = GRFusion()
+    eng.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "fName": np.array(["Edy", "Jones", "Bill", "Ann", "Cara"]),
+        "lName": np.array(["Smith", "Parker", "Patrick", "May", "Jones"]),
+        "dob": np.array([19710925, 19801121, 19760201, 19900101, 19850505]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=8)
+    eng.create_table("Relationships", {
+        "relId": np.array([1, 2, 3, 4]),
+        "uId1": np.array([1, 2, 3, 4]),
+        "uId2": np.array([3, 3, 4, 5]),
+        "startDate": np.array([20090110, 20081231, 20100101, 19990101]),
+        "isRelative": np.array([1, 0, 0, 1]),
+    }, capacity=16)
+    eng.create_graph_view(
+        "SocialNetwork", vertexes="Users", edges="Relationships",
+        v_id="uId", e_src="uId1", e_dst="uId2",
+        v_attrs={"lstName": "lName", "birthdate": "dob", "Job": "Job"},
+        e_attrs={"sDate": "startDate", "relative": "isRelative"},
+        directed=False,
+    )
+    return eng
+
+
+# ---------------------------------------------------------------- explain
+def test_explain_returns_typed_tree_naming_rules(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where((col("U.Job") == "Lawyer") & (PS.start.id == col("U.uId"))
+                & (PS.length == 2)
+                & (PS.edges[0:"*"].attr("sDate") > 20000101))
+         .select(lname=PS.end.attr("lstName")))
+    plan = social.explain(q)
+    # typed physical tree
+    assert isinstance(plan.root, EX.ProjectExec)
+    node, kinds = plan.root, []
+    stack = [plan.root]
+    while stack:
+        n = stack.pop()
+        kinds.append(type(n).__name__)
+        stack.extend(n.children())
+    assert "PathScanExec" in kinds and "TableScanExec" in kinds
+    # typed logical tree preserved alongside
+    assert isinstance(plan.logical, L.Project)
+    # printed form names the applied rewrite rules
+    s = plan.pretty()
+    for rule in ("classify-predicates", "path-length-inference",
+                 "physical-pathscan"):
+        assert f"rule {rule}:" in s, s
+    assert "PathScanExec" in s
+    # explain strings stay compatible with the pre-IR engine
+    lines = plan.explain_lines()
+    assert any("length inference: [2, 2]" in e for e in lines)
+    assert any("physical PathScan: enum" in e for e in lines)
+
+
+def test_explain_does_not_execute(social):
+    calls = []
+    orig = social.traversal.enumerate_paths
+    social.traversal.enumerate_paths = lambda *a, **k: calls.append(1) or orig(*a, **k)
+    PS = P("PS")
+    social.explain(
+        Query().from_paths("SocialNetwork", "PS")
+        .where(PS.start.id == 1).select_count("n")
+    )
+    assert not calls
+    social.traversal.enumerate_paths = orig
+
+
+# ------------------------------------------------- two PATHS in one query
+def test_two_paths_sources_compose_as_plan_siblings(social):
+    """Previously NotImplementedError; now stacked PathScan plan nodes."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.start.id == P1.end.id) & (P2.length == 1))
+         .select(mid=P1.end.id, end=P2.end.id))
+    r = social.run(q)
+    got = sorted((int(m), int(e)) for m, e in
+                 zip(r.columns["mid"], r.columns["end"]))
+    assert got == [(3, 1), (3, 2), (3, 4)]
+
+    # near-equivalence with one 2-hop enumeration: each PATHS source is a
+    # *simple* path internally, but simplicity is not enforced across the
+    # join boundary, so the stacked form additionally admits the revisit
+    # 1-3-1 that the single simple-path enumeration excludes
+    PS = P("PS")
+    single = social.run(
+        Query().from_paths("SocialNetwork", "PS")
+        .where((PS.start.id == 1) & (PS.length == 2))
+        .select(end=PS.end.id)
+    )
+    single_ends = sorted(int(e) for e in single.columns["end"])
+    assert single_ends == [2, 4]
+    assert sorted(int(e) for e in r.columns["end"]) == [1] + single_ends
+
+    # the plan stacks two PathScanExec nodes
+    plan = social.explain(q)
+    stack, n_paths = [plan.root], 0
+    while stack:
+        n = stack.pop()
+        n_paths += isinstance(n, EX.PathScanExec)
+        stack.extend(n.children())
+    assert n_paths == 2
+
+
+def test_cross_path_anchor_is_from_order_independent(social):
+    """P1.start.id == P2.end.id (consumer earlier in FROM) must plan the
+    same as the mirrored P2.start.id == P1.end.id form: the consumer is
+    whichever side is referenced at .start, and path-ordering restacks."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == P2.end.id)  # P1 consumes P2's ends
+                & (P2.start.id == 1) & (P2.length == 1) & (P1.length == 1))
+         .select(mid=P2.end.id, end=P1.end.id))
+    plan = social.explain(q)
+    assert plan.specs["P1"].start_anchor == ("col", "P2.endvertexid")
+    assert any("path-ordering" == e.rule for e in plan.trace)
+    r = social.run(q)
+    got = sorted((int(m), int(e)) for m, e in
+                 zip(r.columns["mid"], r.columns["end"]))
+    assert got == [(3, 1), (3, 2), (3, 4)]
+
+
+def test_flat_planner_shim_still_rejects_multi_paths(social):
+    q = (Query().from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2"))
+    with pytest.raises(NotImplementedError):
+        PL.plan_query(q, social.views)
+
+
+def test_planner_shim_flat_summary_matches_tree(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where((col("U.Job") == "Lawyer") & (PS.start.id == col("U.uId"))
+                & (PS.length == 2))
+         .select(lname=PS.end.attr("lstName")))
+    plan = PL.plan_query(q, social.views)
+    assert plan.path is not None
+    assert plan.path.min_len == plan.path.max_len == 2
+    assert plan.path.start_anchor == ("col", "U.uId")
+    assert plan.table_filters["U"], "U filter must be pushed down"
+    assert any("length inference: [2, 2]" in e for e in plan.explain)
+
+
+# ------------------------------------------- optimizer edge cases (§6.1)
+def test_contradictory_length_bounds_clamp(social):
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == 1) & (PS.length == 2) & (PS.length >= 5))
+         .select(end=PS.end.id))
+    plan = social.explain(q)
+    spec = plan.specs["PS"]
+    assert spec.min_len == 5 and spec.max_len == 5
+    lines = plan.explain_lines()
+    assert any("length inference: [5, 5]" in e for e in lines)
+    assert any("contradictory bounds" in e for e in lines)
+
+
+def test_hint_max_length_vs_implicit_edge_minimum(social):
+    PS = P("PS")
+    # Edges[4..*] forces position 4 to exist => implicit min length 5,
+    # beating the explicit hint_max_length(3)
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == 1)
+                & (PS.edges[4:"*"].attr("sDate") > 0))
+         .hint_max_length(3)
+         .select(end=PS.end.id))
+    plan = social.explain(q)
+    spec = plan.specs["PS"]
+    assert spec.min_len == 5 and spec.max_len == 5
+    lines = plan.explain_lines()
+    assert any("length inference: [5, 5]" in e for e in lines)
+    assert any("contradictory bounds" in e for e in lines)
+
+
+def test_max_len_lt_min_len_clamp_via_lt_bound(social):
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == 1) & (PS.length < 3) & (PS.length > 3))
+         .select(end=PS.end.id))
+    spec = social.explain(q).specs["PS"]
+    assert spec.min_len == 4 and spec.max_len == 4
+
+
+# ----------------------- BFS validity grouping (min_len == 0 self-reach)
+def test_bfs_min_len_zero_self_reachability(social):
+    """PS.length >= 0 admits the 0-hop path from a vertex to itself."""
+    eng = social
+    eng.create_table("Probe", {"pid": np.array([1])}, capacity=4)
+    PS = P("PS")
+    q = (Query().from_table("Users", "A").from_table("Probe", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Edy")
+                & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.pid"))
+                & (PS.length >= 0))
+         .select(length=col("PS.length")))
+    plan = eng.explain(q)
+    assert plan.specs["PS"].physical == "bfs"
+    assert plan.specs["PS"].min_len == 0
+    r = eng.run(q)
+    assert r.count == 1 and int(r.columns["length"][0]) == 0
+
+
+def test_bfs_dead_end_anchor_does_not_leak_on_min_len_zero(social):
+    """Regression for the `a & b & c | (d & e)` precedence hazard: a lane
+    whose end anchor fails to resolve (targets == -1) must stay invalid
+    even when min_len == 0 and the clipped distance reads 0."""
+    eng = social
+    eng.create_table("Ghosts", {"gid": np.array([99])}, capacity=4)
+    PS = P("PS")
+    q = (Query().from_table("Users", "A").from_table("Ghosts", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Edy")
+                & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.gid"))
+                & (PS.length >= 0))
+         .select(length=col("PS.length")))
+    assert eng.explain(q).specs["PS"].physical == "bfs"
+    r = eng.run(q)
+    assert r.count == 0, "unresolvable end anchor must not produce rows"
+
+
+def test_length_eq_zero_self_reachability(social):
+    """PS.length == 0 infers bounds [0, 0]; the BFS branch must tolerate an
+    empty hop-mask list instead of crashing on hop_masks[0]."""
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == 1) & (PS.end.id == 1) & (PS.length == 0))
+         .select(hops=col("PS.length")))
+    plan = social.explain(q)
+    assert plan.specs["PS"].min_len == 0 and plan.specs["PS"].max_len == 0
+    assert plan.specs["PS"].physical == "bfs"
+    r = social.run(q)
+    assert r.count == 1 and int(r.columns["hops"][0]) == 0
+    # and a 0-hop query between two DIFFERENT vertices matches nothing
+    q2 = (Query().from_paths("SocialNetwork", "PS")
+          .where((PS.start.id == 1) & (PS.end.id == 2) & (PS.length == 0))
+          .select(hops=col("PS.length")))
+    assert social.run(q2).count == 0
+
+
+def test_conflicting_anchor_stays_residual(social):
+    """A second constraint on an already-anchored path end must filter,
+    not silently overwrite the anchor."""
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == 1) & (PS.start.id == 2) & (PS.length == 1))
+         .select(end=PS.end.id))
+    # both constraints must hold: unsatisfiable, not last-one-wins
+    assert social.run(q).count == 0
+    # sanity: each constraint alone is satisfiable
+    q1 = (Query().from_paths("SocialNetwork", "PS")
+          .where((PS.start.id == 1) & (PS.length == 1))
+          .select(end=PS.end.id))
+    assert social.run(q1).count > 0
+
+
+def test_stacked_paths_require_column_start_anchor(social):
+    """Misalignable stacked compositions raise instead of silently pairing
+    unrelated rows through the origin lane."""
+    P1, P2 = P("P1"), P("P2")
+    # end-only cross-path reference: cannot seed P2's lanes from P1
+    q_end = (Query()
+             .from_paths("SocialNetwork", "P1")
+             .from_paths("SocialNetwork", "P2")
+             .where((P1.start.id == 1) & (P1.length == 1)
+                    & (P2.end.id == P1.end.id) & (P2.length == 1))
+             .select(s=P2.start.id))
+    with pytest.raises(NotImplementedError):
+        social.explain(q_end)
+    # const-start stacked path: origin lanes cannot align with the child
+    q_const = (Query()
+               .from_paths("SocialNetwork", "P1")
+               .from_paths("SocialNetwork", "P2")
+               .where((P1.start.id == 1) & (P1.length == 1)
+                      & (P2.start.id == 4)
+                      & (P2.start.id == P1.end.id) & (P2.length == 1))
+               .select(mid=P1.end.id, end=P2.end.id))
+    with pytest.raises(NotImplementedError):
+        social.explain(q_const)
+
+
+def test_const_end_anchor_missing_id_yields_no_rows(social):
+    """An all-False const end-anchor mask must not argmax to position 0."""
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == 1) & (PS.end.id == 999))
+         .select(hops=col("PS.length")))
+    assert social.explain(q).specs["PS"].physical == "bfs"
+    assert social.run(q).count == 0
+    # same hole on the SPScan branch
+    q2 = (Query().from_paths("SocialNetwork", "PS")
+          .hint_shortest_path("relative")
+          .where((PS.start.id == 1) & (PS.end.id == 999))
+          .select(d=col("PS.distance")))
+    assert social.explain(q2).specs["PS"].physical == "sssp"
+    assert social.run(q2).count == 0
+
+
+# --------------------------------- QueryResult + ORDER BY/LIMIT coverage
+def test_query_result_rows_and_scalar_on_empty(social):
+    q = (Query().from_table("Users", "U")
+         .where(col("U.fName") == "Nobody")
+         .select(uid=col("U.uId")))
+    r = social.run(q)
+    assert r.count == 0
+    assert r.rows() == []
+    assert r.scalar() is None
+    assert r.scalar("uid") is None
+
+
+def test_query_result_scalar_on_aggregate(social):
+    r = social.run(Query().from_table("Users", "U").select_count("n"))
+    assert int(r.scalar()) == 5 and int(r.scalar("n")) == 5
+
+
+def test_order_by_limit_through_executor(social):
+    q = (Query().from_table("Users", "U")
+         .select(uid=col("U.uId"))
+         .order_by("U.dob", descending=True)
+         .limit(2))
+    r = social.run(q)
+    assert [int(x) for x in r.columns["uid"]] == [4, 5]
+    # and ascending without limit keeps all rows ordered
+    q2 = (Query().from_table("Users", "U")
+          .select(uid=col("U.uId")).order_by("U.dob"))
+    r2 = social.run(q2)
+    assert [int(x) for x in r2.columns["uid"]] == [1, 3, 2, 5, 4]
+
+
+def test_order_by_limit_on_path_lengths(social):
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == 1) & (PS.length <= 3))
+         .select(length=col("PS.length"))
+         .order_by("PS.length").limit(2))
+    r = social.run(q)
+    assert r.count == 2
+    lens = [int(x) for x in r.columns["length"]]
+    assert lens == sorted(lens) and lens[0] == 1
+
+
+# ------------------------------------------------------- prepared plans
+def test_prepared_plan_skips_replanning_but_sees_live_data(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "A").from_table("Users", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Jones") & (col("B.fName") == "Cara")
+                & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.uId")))
+         .select(length=col("PS.length")).limit(1))
+    prepared = social.prepare(q)
+    assert int(prepared.run().columns["length"][0]) == 3  # 2-3-4-5
+    # online insert through the delta buffer; same physical tree re-walked
+    social.insert("Relationships", {
+        "relId": np.array([99]), "uId1": np.array([2]), "uId2": np.array([5]),
+        "startDate": np.array([20230101]), "isRelative": np.array([0]),
+    })
+    assert int(prepared.run().columns["length"][0]) == 1
+
+
+def test_query_server_admits_prepared_plans(social):
+    srv = QueryServer(social, "SocialNetwork")
+    PS = P("PS")
+    q = (Query().from_table("Users", "A").from_table("Users", "B")
+         .from_paths("SocialNetwork", "PS")
+         .where((col("A.fName") == "Edy") & (col("B.fName") == "Cara")
+                & (PS.start.id == col("A.uId")) & (PS.end.id == col("B.uId")))
+         .select(exists=col("PS.exists")).limit(1))
+    prepared = srv.prepare(q)
+    srv.submit_plan(prepared)
+    srv.submit_plan(prepared)
+    srv.submit_plan(q)  # bare Query admitted too
+    out = srv.flush_plans()
+    assert len(out) == 3
+    assert all(bool(r.columns["exists"][0]) for r in out)
+    assert srv.pending_plans == []
