@@ -10,8 +10,14 @@ import time
 import jax
 
 
-def time_call(fn, *args, warmup: int = 1, reps: int = 3, **kwargs) -> float:
-    """Median wall-time per call in microseconds (blocks on async results)."""
+def time_call(fn, *args, warmup: int = 1, reps: int = 3, agg: str = "median",
+              **kwargs) -> float:
+    """Wall-time per call in microseconds (blocks on async results).
+
+    ``agg='median'`` (default) or ``'min'`` — use min when the number will
+    be ratioed against another min-estimated timing (e.g. ``time_pair``)
+    so both sides share an estimator.
+    """
     for _ in range(warmup):
         r = fn(*args, **kwargs)
         jax.block_until_ready(r)
@@ -22,7 +28,29 @@ def time_call(fn, *args, warmup: int = 1, reps: int = 3, **kwargs) -> float:
         jax.block_until_ready(r)
         times.append(time.perf_counter() - t0)
     times.sort()
-    return times[len(times) // 2] * 1e6
+    return (times[0] if agg == "min" else times[len(times) // 2]) * 1e6
+
+
+def time_pair(fn_a, fn_b, *, warmup: int = 1, reps: int = 7):
+    """Best wall-time per call (us) for two functions measured interleaved.
+
+    Ratios of medians from disjoint time windows are hostage to bursty
+    machine load; interleaving the reps and taking each side's minimum
+    gives a contention-robust comparison for deterministic workloads
+    (used for the planned-vs-raw plan-overhead gate).
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return min(ta) * 1e6, min(tb) * 1e6
 
 
 def emit(rows):

@@ -21,7 +21,7 @@ from repro.core.query import Query, P, col
 from repro.core.table import Table
 from repro.data.synthetic import graph_tables, random_graph
 
-from .common import time_call
+from .common import time_call, time_pair
 
 
 def run(quick: bool = False):
@@ -60,7 +60,6 @@ def run(quick: bool = False):
             T.bfs, view, js, edge_mask_by_row=mask, target_pos=jt,
             max_hops=L, block_size=1 << 15,
         )
-        us_nat = time_call(native)
         fcap = 1
         while fcap < min(S * V, 1 << 20):
             fcap <<= 1
@@ -68,10 +67,9 @@ def run(quick: bool = False):
             reachability_joins, et, "src", "dst", js, jt, mask,
             n_hops=L, frontier_capacity=fcap,
         )
-        us_join = time_call(base)
+        # min-estimated like us_nat (time_pair): like-for-like speedups
+        us_join = time_call(base, agg="min")
         _, join_ovf = base()
-        per_sel[s] = (us_nat, us_join)
-        rows.append((f"fig9/native_bfs/sel={s}%", us_nat / S, "per-query-us"))
 
         PS = P("PS")
         prepared = eng.prepare(
@@ -81,7 +79,10 @@ def run(quick: bool = False):
             .hint_max_length(L)
             .select(hops=col("PS.length"))
         )
-        us_plan = time_call(prepared.run)
+        # interleaved raw-vs-planned timing: see fig8 / BENCH_plan_overhead
+        us_nat, us_plan = time_pair(native, prepared.run)
+        per_sel[s] = (us_nat, us_join)
+        rows.append((f"fig9/native_bfs/sel={s}%", us_nat / S, "per-query-us"))
         r = prepared.run()
         d = np.asarray(native())
         dt = d[np.arange(S), np.asarray(jnp.clip(jt, 0, V - 1))]

@@ -4,14 +4,50 @@ Prints ``name,us_per_call,derived`` CSV. ``REPRO_BENCH_QUICK=1`` runs
 reduced sizes. Roofline numbers (§Roofline) come from the dry-run
 (``python -m repro.launch.dryrun``), not from here — this file is the
 paper-experiment reproduction on CPU.
+
+After the figure modules run, the harness derives the **plan-overhead
+record**: for every fig8/fig9 point that has both a ``native_*`` (raw
+traversal kernel) and a ``planned_*`` (full plan-IR prepared-plan path)
+row, the planned/native ratio is written to ``BENCH_plan_overhead.json``
+at the repo root. The compiled query runtime's contract is that prepared
+plans add at most ``REPRO_PLAN_OVERHEAD_MAX`` (default 1.3x, the stored
+threshold) on top of the raw kernels at S=32 lanes; the bench stage FAILS
+when the worst ratio regresses above the threshold, so the perf
+trajectory accumulates and is enforced from this PR on.
 """
 from __future__ import annotations
 
+import json
 import os
+import re
 import sys
 import traceback
 
 from .common import emit
+
+PLAN_OVERHEAD_THRESHOLD = 1.3  # stored threshold: planned vs raw, S=32 lanes
+PLAN_OVERHEAD_PATH = "BENCH_plan_overhead.json"
+
+
+def plan_overhead_record(rows, threshold: float, quick: bool) -> dict:
+    """Planned-vs-native per-query ratios for fig8/fig9 points."""
+    by_name = {name: us for name, us, _ in rows}
+    ratios = {}
+    for name, us in by_name.items():
+        m = re.match(r"(fig[89])/planned_(\w+)/(.+)", name)
+        if not m:
+            continue
+        fig, kind, point = m.groups()
+        native = by_name.get(f"{fig}/native_{kind}/{point}")
+        if native:
+            ratios[f"{fig}/{point}"] = round(us / native, 4)
+    return {
+        "ratios": ratios,
+        "max_ratio": round(max(ratios.values()), 4) if ratios else None,
+        "threshold": threshold,
+        "lanes": 32,
+        "quick": quick,
+    }
 
 
 def main() -> None:
@@ -33,13 +69,39 @@ def main() -> None:
     ]
     print("name,us_per_call,derived")
     failures = 0
+    all_rows = []
     for name, mod in mods:
         try:
-            emit(mod.run(quick=quick))
+            rows = mod.run(quick=quick)
+            emit(rows)
+            all_rows.extend(rows)
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{name}/ERROR,0.0,{type(e).__name__}:{e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+
+    threshold = float(
+        os.environ.get("REPRO_PLAN_OVERHEAD_MAX", PLAN_OVERHEAD_THRESHOLD)
+    )
+    record = plan_overhead_record(all_rows, threshold, quick)
+    out_path = os.environ.get("REPRO_BENCH_JSON", PLAN_OVERHEAD_PATH)
+    with open(out_path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    if record["ratios"]:
+        print(
+            f"plan_overhead/max,0.0,ratio={record['max_ratio']:.2f}x "
+            f"(threshold {threshold:.2f}x) -> {out_path}",
+            flush=True,
+        )
+        if record["max_ratio"] > threshold:
+            print(
+                f"plan_overhead/REGRESSION,0.0,max ratio "
+                f"{record['max_ratio']:.2f}x exceeds stored threshold "
+                f"{threshold:.2f}x",
+                flush=True,
+            )
+            failures += 1
     if failures:
         sys.exit(1)
 

@@ -7,7 +7,10 @@
 #                 errors before any slow work starts
 #   tier1         fast test suite (slow dry-run compiles excluded)
 #   differential  cross-backend traversal equivalence suite (-m differential)
-#   bench         quick-size benchmark smoke (REPRO_BENCH_QUICK=1)
+#   bench         quick-size benchmark smoke (REPRO_BENCH_QUICK=1); writes
+#                 BENCH_plan_overhead.json (planned-vs-raw fig8/fig9 ratios)
+#                 at the repo root and FAILS if the worst ratio regresses
+#                 above the stored threshold (REPRO_PLAN_OVERHEAD_MAX, 1.3)
 #
 # The full suite including slow markers is:  python -m pytest -q
 set -euo pipefail
@@ -45,6 +48,8 @@ for stage in "${STAGES[@]}"; do
       ;;
     bench)
       run_stage bench env REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+      echo "-- plan overhead record --"
+      cat BENCH_plan_overhead.json
       ;;
     *)
       echo "unknown stage: ${stage}" >&2

@@ -14,8 +14,9 @@ and maintains graph views under online updates (§3.3):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Mapping, Optional
+import collections
+from dataclasses import dataclass, field as dfield
+from typing import Any, Dict, List, Mapping, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -24,13 +25,14 @@ from repro.core import executor as EX
 from repro.core import expr as X
 from repro.core import optimizer as OPT
 from repro.core import query as Q
+from repro.core.compiled import EpochRegistry, table_key
 from repro.core.executor import QueryResult  # re-export (public result type)
 from repro.core.graphview import GraphView, build_graph_view
 from repro.core.logical import DEFAULT_MAX_LEN
-from repro.core.table import Table
+from repro.core.table import Table, TableStats
 from repro.core.traversal_engine import TraversalEngine
 
-__all__ = ["GRFusion", "QueryResult", "ViewBundle", "PreparedPlan"]
+__all__ = ["GRFusion", "QueryResult", "ViewBundle", "PreparedPlan", "GraphStats"]
 
 
 @dataclass
@@ -47,16 +49,65 @@ class ViewBundle:
     delta_capacity: int
 
 
+@dataclass(frozen=True)
+class GraphStats:
+    """Live topology statistics for one graph view (keyed by graph epoch)."""
+
+    name: str
+    n_vertices: int
+    n_edges: int
+    avg_fan_out: float
+
+    @property
+    def edge_selectivity(self) -> float:
+        """Live edge slots over total slots (tombstone density complement)."""
+        return self.n_edges / max(self.n_vertices * self.n_vertices, 1)
+
+
 @dataclass
 class PreparedPlan:
-    """A query planned once; ``run()`` re-executes the physical tree against
-    the live catalog without re-invoking the optimizer (serving hot path)."""
+    """A query planned once; ``execute()`` re-walks the physical tree
+    against the live catalog without re-invoking the optimizer.
+
+    The plan carries its compiled runtime (``repro.core.compiled``): scan
+    filters and traversal masks compile to fused column programs on first
+    execution and their masks are cached keyed by table/topology epoch, so
+    the serving hot path re-resolves only live column views. ``bind``
+    re-binds ``Param`` placeholders (anchor ids, predicate constants)
+    without re-planning — parameterized queries no longer need a side
+    anchor table. ``bind`` returns a NEW ``PreparedPlan`` sharing the
+    physical plan and its compiled runtime, so differently-bound handles
+    (e.g. several queued in one ``QueryServer`` flush) never alias each
+    other's parameter values.
+    """
 
     engine: "GRFusion"
     plan: OPT.PhysicalPlan
+    params: Dict[str, Any] = dfield(default_factory=dict)
 
+    def bind(self, **params) -> "PreparedPlan":
+        unknown = sorted(set(params) - set(self.plan.param_names))
+        if unknown:
+            raise KeyError(
+                f"unknown parameter(s) {unknown}; this plan declares "
+                f"{sorted(self.plan.param_names) or 'none'}"
+            )
+        return PreparedPlan(
+            engine=self.engine, plan=self.plan,
+            params={**self.params, **params},
+        )
+
+    def execute(self) -> QueryResult:
+        return EX.execute(self.plan, self.engine, params=self.params)
+
+    # historical alias (pre-bind API)
     def run(self) -> QueryResult:
-        return EX.execute(self.plan, self.engine)
+        return self.execute()
+
+    @property
+    def runtime(self):
+        """The plan's compiled-mask cache (None before first execution)."""
+        return self.plan.runtime
 
     def pretty(self) -> str:
         return self.plan.pretty()
@@ -80,10 +131,25 @@ class GRFusion:
         self.max_work_capacity = max_work_capacity
         self.result_capacity = result_capacity
         self.bfs_max_hops = bfs_max_hops
+        # one epoch registry answers every "did this change?" question:
+        # graph names key topology epochs (packing cache), table:<name>
+        # keys relational state (compiled predicate-mask cache). Shared
+        # with the TraversalEngine so both caches see the same counters.
+        self.epochs = EpochRegistry()
         # all BFS/SSSP/path dispatch goes through the TraversalEngine; the
         # backend knob here is the engine-wide default ('auto' = planner
         # density policy), overridable per query via Query.traversal_backend
-        self.traversal = TraversalEngine(default_backend=traversal_backend)
+        self.traversal = TraversalEngine(
+            default_backend=traversal_backend, epochs=self.epochs
+        )
+        # per-epoch catalog statistics caches (cost-based optimizer rules)
+        self._table_stats: Dict[str, Tuple[int, TableStats]] = {}
+        self._graph_stats: Dict[str, Tuple[int, GraphStats]] = {}
+        # engine-wide compiled-predicate cache shared by every PlanRuntime,
+        # keyed by structural expression identity (LRU-bounded)
+        self.predicate_cache: "collections.OrderedDict" = (
+            collections.OrderedDict()
+        )
 
     # ------------------------------------------------------------- catalog
     def create_table(self, name: str, data: Mapping[str, np.ndarray], capacity=None) -> Table:
@@ -97,7 +163,43 @@ class GRFusion:
                 enc[k] = v
         t = Table.create(name, enc, capacity)
         self.tables[name] = t
+        self.epochs.bump(table_key(name))
         return t
+
+    # ----------------------------------------------------- epochs and stats
+    def table_epoch(self, name: str) -> int:
+        """Change counter for one table (compiled-mask cache key)."""
+        return self.epochs.get(table_key(name))
+
+    def graph_epoch(self, name: str) -> int:
+        """Topology change counter for one graph view (packing-cache key)."""
+        return self.epochs.get(name)
+
+    def table_stats(self, name: str) -> TableStats:
+        """Catalog statistics for ``name``, recomputed only on epoch change."""
+        ep = self.table_epoch(name)
+        ent = self._table_stats.get(name)
+        if ent is not None and ent[0] == ep:
+            return ent[1]
+        s = self.tables[name].compute_stats()
+        self._table_stats[name] = (ep, s)
+        return s
+
+    def graph_stats(self, name: str) -> GraphStats:
+        """Live vertex/edge counts + fan-out for one view (epoch-cached)."""
+        ep = self.graph_epoch(name)
+        ent = self._graph_stats.get(name)
+        if ent is not None and ent[0] == ep:
+            return ent[1]
+        view = self.views[name].view
+        s = GraphStats(
+            name=name,
+            n_vertices=int(jnp.sum(view.v_valid.astype(jnp.int32))),
+            n_edges=int(view.num_edges),
+            avg_fan_out=float(view.avg_fan_out),
+        )
+        self._graph_stats[name] = (ep, s)
+        return s
 
     def _encode_column(self, table, colname, values):
         key = (table, colname)
@@ -173,6 +275,7 @@ class GRFusion:
         if bool(overflow):
             raise RuntimeError(f"table {table_name} capacity exceeded")
         self.tables[table_name] = t2
+        self.epochs.bump(table_key(table_name))
 
         for vname, vb in self.views.items():
             if vb.edge_table == table_name:
@@ -204,6 +307,7 @@ class GRFusion:
             encode=lambda c, v: self.encode_value(table_name, c, v),
         )
         self.tables[table_name] = t.delete(mask & t.valid)
+        self.epochs.bump(table_key(table_name))
         for vname, vb in self.views.items():
             if vb.vertex_table == table_name:
                 # keep referential integrity stats fresh (§3.3.1)
@@ -217,6 +321,7 @@ class GRFusion:
         )
         value = self.encode_value(table_name, col, value)
         self.tables[table_name] = t.update(mask & t.valid, col, value)
+        self.epochs.bump(table_key(table_name))
         # identifier updates must be reflected in the topology (§3.3.1)
         for vname, vb in self.views.items():
             if table_name == vb.vertex_table and col == vb.v_id:
@@ -235,9 +340,13 @@ class GRFusion:
         )
         self.traversal.bump_epoch(name)
 
-    # ------------------------------------------------------ mask compilation
-    def _vertex_mask(self, vb: ViewBundle, preds: List[X.Expr]):
-        """Compile vertex-attr predicates to a mask-by-position (pushdown)."""
+    # ---------------------------------------------- interpreted mask path
+    # The executor evaluates all predicate masks through the plan's
+    # compiled runtime (repro.core.compiled). These interpreted versions
+    # are the semantic reference the differential suite checks the
+    # compiled programs against bit-for-bit; they re-walk the AST per call.
+    def _vertex_mask(self, vb: ViewBundle, preds: List[X.Expr], params=None):
+        """Interpret vertex-attr predicates to a mask-by-position."""
         vt = self.tables[vb.vertex_table]
         mask = vt.valid
         for p in preds:
@@ -247,11 +356,12 @@ class GRFusion:
                 encode=lambda c, v: self.encode_value(
                     vb.vertex_table, vb.v_attrs.get(c, c), v
                 ),
+                params=params,
             )
             mask = mask & m
         return mask
 
-    def _edge_mask(self, vb: ViewBundle, preds: List[X.Expr]):
+    def _edge_mask(self, vb: ViewBundle, preds: List[X.Expr], params=None):
         et = self.tables[vb.edge_table]
         mask = et.valid
         for p in preds:
@@ -261,6 +371,7 @@ class GRFusion:
                 encode=lambda c, v: self.encode_value(
                     vb.edge_table, vb.e_attrs.get(c, c), v
                 ),
+                params=params,
             )
             mask = mask & m
         return mask
@@ -272,10 +383,12 @@ class GRFusion:
             f.kind == "paths" for f in query.froms
         ):
             query.max_path_len = self.default_max_path_len
-        return OPT.optimize(query, self.views)
+        return OPT.optimize(query, self.views, stats=self)
 
     def run(self, query: Q.Query) -> QueryResult:
-        return EX.execute(self.plan(query), self)
+        # ad-hoc queries ride the same prepared path (plan + compiled
+        # runtime + execute); the plan object is simply not retained
+        return self.prepare(query).execute()
 
     def explain(self, query: Q.Query) -> OPT.PhysicalPlan:
         """Typed physical plan for ``query`` (no execution). ``str(plan)``

@@ -60,8 +60,18 @@ class QueryResult:
 class ExecContext:
     engine: Any  # GRFusion
     plan: Any  # optimizer.PhysicalPlan
+    runtime: Any = None  # compiled.PlanRuntime (epoch-keyed mask cache)
+    params: Dict[str, Any] = dfield(default_factory=dict)  # bound Param values
     explain: List[str] = dfield(default_factory=list)
     overflow: bool = False
+
+    def param(self, name):
+        if name not in self.params:
+            raise KeyError(
+                f"unbound parameter {name!r}; call PreparedPlan.bind"
+                f"({name}=...) before executing"
+            )
+        return self.params[name]
 
 
 # --------------------------------------------------------------------------
@@ -83,33 +93,23 @@ def pretty(node: ExecNode, indent: int = 0) -> str:
     return _tree_pretty(node, indent)
 
 
-def _requalify(e: X.Expr, alias: str) -> X.Expr:
-    """Add back the alias prefix for batch columns named 'alias.col'."""
-    if isinstance(e, X.Col):
-        return X.Col(e.name if e.name.startswith(alias + ".") else f"{alias}.{e.name}")
-    if isinstance(e, X.Cmp):
-        return X.Cmp(e.op, _requalify(e.left, alias), _requalify(e.right, alias))
-    if isinstance(e, X.Arith):
-        return X.Arith(e.op, _requalify(e.left, alias), _requalify(e.right, alias))
-    if isinstance(e, X.BoolOp):
-        return X.BoolOp(e.op, tuple(_requalify(a, alias) for a in e.args))
-    if isinstance(e, X.In):
-        return X.In(_requalify(e.item, alias), e.values)
-    return e
-
-
 # --------------------------------------------------------------------------
 # scans
 # --------------------------------------------------------------------------
-def _apply_scan_filters(ctx, batch, source_table, alias, filters):
-    """Pushed-down filters against one scan, string constants encoded
-    through the source table's dictionary."""
-    enc = lambda c, v: ctx.engine.encode_value(
-        source_table, c.split(".", 1)[1] if c and "." in c else c, v
+def _apply_scan_filters(ctx, batch, source_table, alias, filters, *, epoch):
+    """Pushed-down filters against one scan through the plan's compiled
+    mask cache: the predicate conjunction compiles once into a fused
+    column program, and its mask is reused until ``epoch`` (or a bound
+    parameter feeding it) changes."""
+    if not filters:
+        return batch
+    mask = ctx.runtime.mask(
+        ("scan", alias), filters,
+        table=source_table, epoch=epoch,
+        resolve=lambda c: batch.col(f"{alias}.{c}"),
+        base=batch.valid, params=ctx.params,
     )
-    for f in filters:
-        batch = O.filter_batch(batch, _requalify(f, alias), encode=enc)
-    return batch
+    return batch.replace(valid=mask)
 
 
 @dataclass
@@ -126,7 +126,10 @@ class _ScanExec(ExecNode):
 class TableScanExec(_ScanExec):
     def run(self, ctx):
         b = O.table_scan(ctx.engine.tables[self.source], prefix=self.alias + ".")
-        return _apply_scan_filters(ctx, b, self.source, self.alias, self.filters)
+        return _apply_scan_filters(
+            ctx, b, self.source, self.alias, self.filters,
+            epoch=ctx.engine.table_epoch(self.source),
+        )
 
 
 class VertexScanExec(_ScanExec):
@@ -135,8 +138,14 @@ class VertexScanExec(_ScanExec):
         b = O.vertex_scan(
             vb.view, ctx.engine.tables[vb.vertex_table], prefix=self.alias + "."
         )
+        # fanin/fanout/_pos columns come from the view, so the mask depends
+        # on the topology epoch as well as the table epoch
         return _apply_scan_filters(
-            ctx, b, vb.vertex_table, self.alias, self.filters
+            ctx, b, vb.vertex_table, self.alias, self.filters,
+            epoch=(
+                ctx.engine.table_epoch(vb.vertex_table),
+                ctx.engine.graph_epoch(self.source),
+            ),
         )
 
 
@@ -146,7 +155,10 @@ class EdgeScanExec(_ScanExec):
         b = O.edge_scan(
             vb.view, ctx.engine.tables[vb.edge_table], prefix=self.alias + "."
         )
-        return _apply_scan_filters(ctx, b, vb.edge_table, self.alias, self.filters)
+        return _apply_scan_filters(
+            ctx, b, vb.edge_table, self.alias, self.filters,
+            epoch=ctx.engine.table_epoch(vb.edge_table),
+        )
 
 
 # --------------------------------------------------------------------------
@@ -158,17 +170,24 @@ class HashJoinExec(ExecNode):
     right: ExecNode
     left_key: str
     right_key: str
+    # output capacity from the cost-based join-ordering rule; None keeps
+    # the operator default (left batch capacity)
+    capacity: Optional[int] = None
 
     def children(self):
         return [self.left, self.right]
 
     def label(self):
-        return f"HashJoinExec({self.left_key} == {self.right_key})"
+        cap = f", cap={self.capacity}" if self.capacity else ""
+        return f"HashJoinExec({self.left_key} == {self.right_key}{cap})"
 
     def run(self, ctx):
         lb = self.left.run(ctx)
         rb = self.right.run(ctx)
-        joined, _ovf = O.join(lb, rb, self.left_key, self.right_key)
+        joined, ovf = O.join(
+            lb, rb, self.left_key, self.right_key, capacity=self.capacity
+        )
+        ctx.overflow = ctx.overflow or bool(ovf)
         return joined
 
 
@@ -177,6 +196,7 @@ class CrossJoinExec(ExecNode):
     left: ExecNode
     right: ExecNode
     right_alias: str
+    capacity: Optional[int] = None
 
     def children(self):
         return [self.left, self.right]
@@ -187,9 +207,39 @@ class CrossJoinExec(ExecNode):
     def run(self, ctx):
         lb = self.left.run(ctx)
         rb = self.right.run(ctx)
-        joined, _ovf = O.cross_join(lb, rb)
+        joined, ovf = O.cross_join(lb, rb, capacity=self.capacity)
+        ctx.overflow = ctx.overflow or bool(ovf)
         ctx.explain.append(f"cross join with {self.right_alias} (bounded)")
         return joined
+
+
+def _epoch_signature(ctx, node) -> tuple:
+    """Catalog epochs of every table/graph a subtree reads. Executor nodes
+    are deterministic functions of (catalog state, bound params), so this
+    signature plus the param values keys caches of their outputs."""
+    sig = []
+    stack = [node]
+    eng = ctx.engine
+    while stack:
+        n = stack.pop()
+        if isinstance(n, TableScanExec):
+            sig.append(("t", n.source, eng.table_epoch(n.source)))
+        elif isinstance(n, (VertexScanExec, EdgeScanExec)):
+            vb = eng.views[n.source]
+            sig.append(("t", vb.vertex_table, eng.table_epoch(vb.vertex_table)))
+            sig.append(("t", vb.edge_table, eng.table_epoch(vb.edge_table)))
+            sig.append(("g", n.source, eng.graph_epoch(n.source)))
+        elif isinstance(n, PathScanExec):
+            vb = eng.views[n.spec.graph]
+            sig.append(("t", vb.vertex_table, eng.table_epoch(vb.vertex_table)))
+            sig.append(("t", vb.edge_table, eng.table_epoch(vb.edge_table)))
+            sig.append(("g", n.spec.graph, eng.graph_epoch(n.spec.graph)))
+        stack.extend(n.children())
+    return tuple(sorted(sig))
+
+
+def _params_key(ctx) -> tuple:
+    return tuple(sorted(ctx.params.items()))
 
 
 # --------------------------------------------------------------------------
@@ -206,6 +256,57 @@ class PathScanExec(ExecNode):
     def label(self):
         return f"PathScanExec({format_pathspec(self.spec)})"
 
+    # -- compiled-mask access (epoch-keyed, cached on the plan) ------------
+    def _vmask(self, ctx, vb, preds, kind):
+        """Vertex-attr predicate mask via the plan's compiled-mask cache."""
+        vt = ctx.engine.tables[vb.vertex_table]
+        return ctx.runtime.mask(
+            ("path", self.spec.alias, "v", kind), preds,
+            table=vb.vertex_table,
+            epoch=ctx.engine.table_epoch(vb.vertex_table),
+            resolve=vt.col, base=vt.valid, colmap=vb.v_attrs,
+            params=ctx.params,
+        )
+
+    def _emask(self, ctx, vb, preds, kind):
+        et = ctx.engine.tables[vb.edge_table]
+        return ctx.runtime.mask(
+            ("path", self.spec.alias, "e", kind), preds,
+            table=vb.edge_table,
+            epoch=ctx.engine.table_epoch(vb.edge_table),
+            resolve=et.col, base=et.valid, colmap=vb.e_attrs,
+            params=ctx.params,
+        )
+
+    def _anchor_id(self, ctx, anchor):
+        """Anchor value for const/param anchors (param resolves at bind)."""
+        return anchor[1] if anchor[0] == "const" else ctx.param(anchor[1])
+
+    def _child_batch(self, ctx):
+        """Anchor child's batch, cached by the child subtree's epoch
+        signature (its output is deterministic in catalog state + params).
+        Overflow and explain lines observed while building are replayed on
+        cache hits, so cache warmth never changes what a query reports."""
+        if self.child is None:
+            return None
+        epoch = (_epoch_signature(ctx, self.child), _params_key(ctx))
+
+        def build():
+            saved, ctx.overflow = ctx.overflow, False
+            n0 = len(ctx.explain)
+            batch = self.child.run(ctx)
+            ovf, ctx.overflow = ctx.overflow, saved
+            lines = ctx.explain[n0:]
+            del ctx.explain[n0:]
+            return batch, ovf, lines
+
+        batch, ovf, lines = ctx.runtime.cached(
+            ("child", self.spec.alias), epoch, build
+        )
+        ctx.overflow = ctx.overflow or ovf
+        ctx.explain.extend(lines)
+        return batch
+
     # -- anchor / mask preparation (paper §6.2 pushdown) -------------------
     def _start_positions(self, ctx, vb, R):
         spec, view = self.spec, vb.view
@@ -215,9 +316,9 @@ class PathScanExec(ExecNode):
             pos, found = view.id_index.lookup(ids)
             pos = jnp.where(R.valid & found, pos, -1)
             return pos, "rel"
-        if spec.start_anchor and spec.start_anchor[0] == "const":
+        if spec.start_anchor and spec.start_anchor[0] in ("const", "param"):
             pos, found = view.id_index.lookup(
-                jnp.asarray([spec.start_anchor[1]], jnp.int32)
+                jnp.asarray([self._anchor_id(ctx, spec.start_anchor)], jnp.int32)
             )
             return jnp.where(found, pos, -1), "const"
         # §5.1.2: undefined start set = all vertices
@@ -228,12 +329,14 @@ class PathScanExec(ExecNode):
         spec, view = self.spec, vb.view
         if spec.end_anchor is None and not spec.end_attr_preds:
             return None, None
-        mask = ctx.engine._vertex_mask(vb, spec.end_attr_preds)
+        mask = self._vmask(ctx, vb, spec.end_attr_preds, "end_attr")
         targets = None
         if spec.end_anchor:
-            if spec.end_anchor[0] == "const":
+            if spec.end_anchor[0] in ("const", "param"):
                 pos, found = view.id_index.lookup(
-                    jnp.asarray([spec.end_anchor[1]], jnp.int32)
+                    jnp.asarray(
+                        [self._anchor_id(ctx, spec.end_anchor)], jnp.int32
+                    )
                 )
                 m2 = jnp.zeros((view.n_vertices,), jnp.bool_).at[pos].set(
                     found, mode="drop"
@@ -247,56 +350,81 @@ class PathScanExec(ExecNode):
         return mask, targets
 
     def _hop_masks(self, ctx, vb):
+        """Per-hop edge masks; each distinct predicate set compiles once and
+        its mask is cached by edge-table epoch. Hops with no positional
+        predicate share the single ``uniform`` mask object, which lets
+        ``run()`` skip re-ANDing identical masks on the hot path."""
         spec = self.spec
-        eng = ctx.engine
-        base = eng._edge_mask(vb, [])  # validity only
-        uniform = base
-        for lo, hi, pred in spec.hop_edge_preds:
-            if lo == 0 and hi is None:
-                uniform = uniform & eng._edge_mask(vb, [pred])
+        uniform_preds = [
+            pred for lo, hi, pred in spec.hop_edge_preds
+            if lo == 0 and hi is None
+        ]
+        uniform = self._emask(ctx, vb, uniform_preds, "uniform")
         masks = []
         for h in range(spec.max_len):
-            m = uniform
+            preds_h = []
             for lo, hi, pred in spec.hop_edge_preds:
                 if lo == 0 and hi is None:
                     continue
                 hi_eff = spec.max_len - 1 if hi is None else hi
                 if lo <= h <= hi_eff:
-                    m = m & eng._edge_mask(vb, [pred])
-            masks.append(m)
+                    preds_h.append(pred)
+            if preds_h:
+                masks.append(
+                    uniform & self._emask(ctx, vb, preds_h, ("hop", h))
+                )
+            else:
+                masks.append(uniform)
         return masks
 
     def _prepare(self, ctx, vb, R):
-        """Shared anchor/mask preparation for both run() and run_count()."""
-        spec = self.spec
-        eng = ctx.engine
-        view = vb.view
-        start_pos, start_kind = self._start_positions(ctx, vb, R)
-        smask = eng._vertex_mask(vb, spec.start_attr_preds)
-        sp_c = jnp.clip(start_pos, 0, view.n_vertices - 1)
-        start_pos = jnp.where(
-            (start_pos >= 0) & jnp.take(smask, sp_c), start_pos, -1
+        """Shared anchor/mask preparation for both run() and run_count().
+
+        The whole tuple is deterministic given the catalog epochs the scan
+        (and its anchor child) reads plus the bound parameters, so it is
+        cached on the plan runtime: the serving hot path re-resolves
+        anchors/masks only when something actually changed."""
+        def build():
+            spec = self.spec
+            view = vb.view
+            start_pos, start_kind = self._start_positions(ctx, vb, R)
+            smask = self._vmask(ctx, vb, spec.start_attr_preds, "start_attr")
+            sp_c = jnp.clip(start_pos, 0, view.n_vertices - 1)
+            sp = jnp.where(
+                (start_pos >= 0) & jnp.take(smask, sp_c), start_pos, -1
+            )
+            gvmask = self._vmask(ctx, vb, spec.global_vertex_preds, "global")
+            hop_masks = self._hop_masks(ctx, vb)
+            end_mask, targets = self._end_anchor_mask(ctx, vb, R)
+            return sp, start_kind, sp_c, gvmask, hop_masks, end_mask, targets
+
+        epoch = (
+            _epoch_signature(ctx, self),
+            R is None,
+            _params_key(ctx),
         )
-        gvmask = eng._vertex_mask(vb, spec.global_vertex_preds)
-        hop_masks = self._hop_masks(ctx, vb)
-        return start_pos, start_kind, sp_c, gvmask, hop_masks
+        return ctx.runtime.cached(("prep", self.spec.alias), epoch, build)
 
     # -- execution ---------------------------------------------------------
     def run(self, ctx) -> O.RelBatch:
         spec = self.spec
         eng = ctx.engine
-        R = self.child.run(ctx) if self.child is not None else None
+        R = self._child_batch(ctx)
         vb = eng.views[spec.graph]
         view = vb.view
         et = eng.tables[vb.edge_table]
 
-        start_pos, start_kind, sp_c, gvmask, hop_masks = self._prepare(ctx, vb, R)
-        end_mask, targets = self._end_anchor_mask(ctx, vb, R)
+        (start_pos, start_kind, sp_c, gvmask, hop_masks,
+         end_mask, targets) = self._prepare(ctx, vb, R)
         # only used by bfs/sssp paths; max_len == 0 (pure 0-hop self-reach)
-        # has no hop masks, so fall back to bare edge validity
-        uniform_mask = hop_masks[0] if hop_masks else eng._edge_mask(vb, [])
+        # has no hop masks, so fall back to bare edge validity. Hops that
+        # share the cached uniform mask object need no re-ANDing.
+        uniform_mask = (
+            hop_masks[0] if hop_masks else self._emask(ctx, vb, [], "validity")
+        )
         for m in hop_masks[1:]:
-            uniform_mask = uniform_mask & m
+            if m is not uniform_mask:
+                uniform_mask = uniform_mask & m
 
         if spec.physical in ("bfs", "sssp", "bfs_path"):
             backend = eng.traversal.resolve_backend(
@@ -422,8 +550,20 @@ class PathScanExec(ExecNode):
                     & (pbatch.col(f"{a}._end_pos") == tgt_of_origin)
                 )
 
-        # combine with the anchor child via the origin lane (§5.3)
+        # combine with the anchor child via the origin lane (§5.3). The
+        # bfs/sssp target branches emit one output lane per child row with
+        # origin == arange, so the gather is the identity there: merge the
+        # child's columns directly instead of re-gathering every column.
         if R is not None:
+            identity_origin = (
+                start_kind == "rel"
+                and spec.physical in ("bfs", "sssp", "bfs_path")
+                and targets is not None
+            )
+            if identity_origin:
+                cols = dict(pbatch.cols)
+                cols.update(R.cols)
+                return O.RelBatch(cols=cols, valid=pbatch.valid & R.valid)
             org = pbatch.col(f"{a}._origin")
             oc = jnp.clip(org, 0, R.capacity - 1)
             cols = dict(pbatch.cols)
@@ -442,7 +582,7 @@ class PathScanExec(ExecNode):
         materialization, returns (count, overflow)."""
         spec = self.spec
         vb = ctx.engine.views[spec.graph]
-        start_pos, _, _, gvmask, hop_masks = self._prepare(ctx, vb, None)
+        start_pos, _, _, gvmask, hop_masks, _, _ = self._prepare(ctx, vb, None)
         if spec.backend is not None:
             ctx.explain.append(
                 "traversal backend: request ignored (enumeration has a "
@@ -486,7 +626,10 @@ class PathScanExec(ExecNode):
         any_m = None
         if spec.any_edge_preds:
             any_m = jnp.stack(
-                [eng._edge_mask(vb, [p]) for p in spec.any_edge_preds]
+                [
+                    self._emask(ctx, vb, [p], ("any", i))
+                    for i, p in enumerate(spec.any_edge_preds)
+                ]
             )
         return eng.traversal.enumerate_paths(
             view, start_pos,
@@ -704,6 +847,8 @@ def eval_on_batch(ctx, e, batch: O.RelBatch, want_decode=False):
             return v
         if isinstance(node, X.Const):
             return jnp.asarray(node.value)
+        if isinstance(node, X.Param):
+            return jnp.asarray(ctx.param(node.name))
         if isinstance(node, X.Cmp):
             lv, rv = ev_enc(node.left, node.right)
             return X._CMPS[node.op](lv, rv)
@@ -730,12 +875,22 @@ def eval_on_batch(ctx, e, batch: O.RelBatch, want_decode=False):
             return out
         raise TypeError(type(node))
 
+    def _raw_value(n):
+        """Literal value of a Const/bound Param side, else None."""
+        if isinstance(n, X.Const):
+            return n.value
+        if isinstance(n, X.Param):
+            return ctx.param(n.name)
+        return None
+
     def ev_enc(l, r):
-        # encode string constants against the column on the other side
-        if isinstance(r, X.Const) and isinstance(r.value, str):
-            return ev(l), jnp.asarray(_enc_for(ctx, l, r.value))
-        if isinstance(l, X.Const) and isinstance(l.value, str):
-            return jnp.asarray(_enc_for(ctx, r, l.value)), ev(r)
+        # encode string constants / parameters against the other side
+        rv = _raw_value(r)
+        if isinstance(rv, str):
+            return ev(l), jnp.asarray(_enc_for(ctx, l, rv))
+        lv = _raw_value(l)
+        if isinstance(lv, str):
+            return jnp.asarray(_enc_for(ctx, r, lv)), ev(r)
         return ev(l), ev(r)
 
     out = ev(e)
@@ -747,9 +902,32 @@ def eval_on_batch(ctx, e, batch: O.RelBatch, want_decode=False):
 # --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
-def execute(plan, engine) -> QueryResult:
-    """Walk the physical tree; the root finalizer assembles the QueryResult."""
-    ctx = ExecContext(engine=engine, plan=plan, explain=list(plan.explain_lines()))
+def execute(plan, engine, params=None) -> QueryResult:
+    """Walk the physical tree; the root finalizer assembles the QueryResult.
+
+    This is the single execution entry point for ``GRFusion.run``,
+    ``PreparedPlan.execute`` and ``QueryServer.flush_plans``: the plan's
+    ``PlanRuntime`` (compiled predicate/mask cache with its epoch checks)
+    is created here on first use and reused on every subsequent execution
+    of the same plan object.
+    """
+    from repro.core.compiled import PlanRuntime
+
+    params = dict(params or {})
+    missing = [p for p in getattr(plan, "param_names", ()) if p not in params]
+    if missing:
+        raise ValueError(
+            f"unbound parameter(s) {missing}; call PreparedPlan.bind(...) "
+            "before executing"
+        )
+    rt = plan.runtime
+    if rt is None or rt.engine is not engine:
+        rt = PlanRuntime(engine)
+        plan.runtime = rt
+    ctx = ExecContext(
+        engine=engine, plan=plan, runtime=rt, params=params,
+        explain=list(plan.explain_lines()),
+    )
     root = plan.root
     if not hasattr(root, "finalize"):
         raise TypeError(f"plan root {type(root).__name__} is not a finalizer")

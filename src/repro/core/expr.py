@@ -90,6 +90,21 @@ class Const(Expr):
         return f"Const({self.value!r})"
 
 
+class Param(Expr):
+    """Named placeholder bound at execution time (``PreparedPlan.bind``).
+
+    Parameters let a plan compile once and re-bind constants — anchor ids,
+    predicate thresholds — without re-invoking the optimizer. The value is
+    dictionary-encoded at bind/evaluation time against the column it is
+    compared with, exactly like a ``Const``."""
+
+    def __init__(self, name: str):
+        self.name = name
+
+    def __repr__(self):
+        return f"Param({self.name!r})"
+
+
 class Cmp(Expr):
     def __init__(self, op: str, left: Expr, right: Expr):
         self.op, self.left, self.right = op, left, right
@@ -124,6 +139,10 @@ def lit(value) -> Const:
     return Const(value)
 
 
+def param(name: str) -> Param:
+    return Param(name)
+
+
 _CMPS = {
     "==": lambda a, b: a == b,
     "!=": lambda a, b: a != b,
@@ -134,11 +153,14 @@ _CMPS = {
 }
 
 
-def evaluate(expr: Expr, resolve: Resolver, encode=None):
+def evaluate(expr: Expr, resolve: Resolver, encode=None, params=None):
     """Compile/evaluate an expression to an array under ``resolve``.
 
     ``encode(column_name, python_value)`` maps constants (e.g. strings) to
-    their dictionary codes; identity by default.
+    their dictionary codes; identity by default. ``params`` supplies values
+    for ``Param`` placeholders (encoded like constants). This is the
+    interpreted reference path; the compile-once fast path lives in
+    ``repro.core.compiled`` and must stay bit-identical to it.
     """
     enc = encode or (lambda name, v: v)
 
@@ -147,6 +169,12 @@ def evaluate(expr: Expr, resolve: Resolver, encode=None):
             return resolve(e.name)
         if isinstance(e, Const):
             return jnp.asarray(enc(ctx_col, e.value))
+        if isinstance(e, Param):
+            if params is None or e.name not in params:
+                raise KeyError(
+                    f"unbound parameter {e.name!r}; bind it before execution"
+                )
+            return jnp.asarray(enc(ctx_col, params[e.name]))
         if isinstance(e, Cmp):
             cname = e.left.name if isinstance(e.left, Col) else (
                 e.right.name if isinstance(e.right, Col) else None
@@ -196,6 +224,26 @@ def columns_of(expr: Expr) -> set:
             walk(e.item)
 
     walk(expr)
+    return out
+
+
+def params_of(expr: Expr | None) -> set:
+    """Names of all ``Param`` placeholders referenced by ``expr``."""
+    out: set = set()
+
+    def walk(e):
+        if isinstance(e, Param):
+            out.add(e.name)
+        elif isinstance(e, (Cmp, Arith)):
+            walk(e.left), walk(e.right)
+        elif isinstance(e, BoolOp):
+            for a in e.args:
+                walk(a)
+        elif isinstance(e, In):
+            walk(e.item)
+
+    if expr is not None:
+        walk(expr)
     return out
 
 

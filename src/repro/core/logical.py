@@ -130,12 +130,18 @@ class HashJoin(LogicalOp):
     right: LogicalOp
     left_key: str
     right_key: str
+    # output capacity sized by the cost-based join-ordering rule from
+    # cardinality estimates; None keeps the executor default (left capacity)
+    capacity: Optional[int] = None
+    est_rows: Optional[float] = None
 
     def children(self):
         return [self.left, self.right]
 
     def label(self):
-        return f"HashJoin({self.left_key} == {self.right_key})"
+        cap = f", cap={self.capacity}" if self.capacity else ""
+        est = f", est={self.est_rows:.0f}" if self.est_rows is not None else ""
+        return f"HashJoin({self.left_key} == {self.right_key}{est}{cap})"
 
 
 @dataclass
@@ -143,12 +149,14 @@ class CrossJoin(LogicalOp):
     left: LogicalOp
     right: LogicalOp
     right_alias: str = ""
+    capacity: Optional[int] = None
 
     def children(self):
         return [self.left, self.right]
 
     def label(self):
-        return f"CrossJoin(+{self.right_alias}, bounded)"
+        cap = f", cap={self.capacity}" if self.capacity else ""
+        return f"CrossJoin(+{self.right_alias}, bounded{cap})"
 
 
 @dataclass
@@ -237,6 +245,44 @@ def pretty(node: LogicalOp, indent: int = 0) -> str:
     for c in node.children():
         lines.append(pretty(c, indent + 1))
     return "\n".join(lines)
+
+
+def _compact_label(n: LogicalOp) -> str:
+    """Short node tag for one-line tree snapshots (rule-trace diffs)."""
+    if isinstance(n, (TableScan, VertexScan, EdgeScan)):
+        f = f"+{len(n.filters)}f" if n.filters else ""
+        return f"{type(n).__name__}:{n.alias}{f}"
+    if isinstance(n, PathScan):
+        s = n.spec
+        bits = f"{n.alias}:{s.physical}[{s.min_len},{s.max_len}]"
+        if s.start_anchor:
+            bits += f" start={s.start_anchor[0]}"
+        if s.end_anchor:
+            bits += f" end={s.end_anchor[0]}"
+        if s.agg_attrs:
+            bits += f" agg{len(s.agg_attrs)}"
+        if s.count_only:
+            bits += " count_only"
+        return f"PathScan:{bits}"
+    if isinstance(n, HashJoin):
+        cap = f":cap{n.capacity}" if n.capacity else ""
+        return f"HashJoin:{n.left_key}=={n.right_key}{cap}"
+    if isinstance(n, CrossJoin):
+        return f"CrossJoin:+{n.right_alias}"
+    if isinstance(n, RelJoin):
+        return "RelJoin"
+    if isinstance(n, Filter):
+        return f"Filter:{len(n.predicates)}"
+    return type(n).__name__
+
+
+def compact(node: LogicalOp) -> str:
+    """One-line structural snapshot of a logical tree. ``RuleEvent`` stores
+    the before/after pair when a rule changes the tree, so ``explain`` can
+    show exactly what each rewrite did."""
+    kids = ",".join(compact(c) for c in node.children())
+    lab = _compact_label(node)
+    return f"{lab}({kids})" if kids else lab
 
 
 # --------------------------------------------------------------------------

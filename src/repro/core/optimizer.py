@@ -43,6 +43,11 @@ DEFAULT_MAX_LEN = L.DEFAULT_MAX_LEN
 class RuleEvent:
     rule: str
     message: str
+    # compact one-line tree snapshots around the rule that emitted this
+    # event (set by the driver only when the rule actually changed the
+    # tree); pretty() renders them as a before/after diff
+    before: Optional[str] = None
+    after: Optional[str] = None
 
     def __str__(self):
         return f"[{self.rule}] {self.message}"
@@ -58,6 +63,12 @@ class PhysicalPlan:
     join_conds: List[Tuple[str, str]]
     residuals: List[X.Expr]
     trace: List[RuleEvent] = dfield(default_factory=list)
+    # names of Param placeholders the plan references (PreparedPlan.bind
+    # validates against this set)
+    param_names: Tuple[str, ...] = ()
+    # lazily-created compiled-mask cache (repro.core.compiled.PlanRuntime);
+    # lives on the plan so PreparedPlan / QueryServer reuse warm masks
+    runtime: Any = None
 
     def explain_lines(self) -> List[str]:
         return [e.message for e in self.trace]
@@ -68,6 +79,10 @@ class PhysicalPlan:
         lines.append("applied rules:")
         for e in self.trace:
             lines.append(f"  rule {e.rule}: {e.message}")
+            if e.before is not None:
+                lines.append(f"    before: {e.before}")
+            if e.after is not None:
+                lines.append(f"    after:  {e.after}")
         return "\n".join(lines)
 
     def __str__(self):
@@ -127,9 +142,12 @@ class _Scratch:
 
 
 class _State:
-    def __init__(self, query: Q.Query, root: L.LogicalOp):
+    def __init__(self, query: Q.Query, root: L.LogicalOp, stats=None):
         self.query = query
         self.root = root
+        # stats provider (the owning GRFusion) for cost-based rules; None
+        # (planner-shim / standalone optimize) falls back to legacy greedy
+        self.stats = stats
         self.trace: List[RuleEvent] = []
         # collected during walk of the canonical tree
         self.scans: Dict[str, L.LogicalOp] = {}
@@ -254,6 +272,8 @@ def _classify_single_path(st: _State, cj, spec: L.PathSpec, residuals) -> bool:
             anchor = None
             if isinstance(r, X.Col):
                 anchor = ("col", r.name)
+            elif isinstance(r, X.Param):
+                anchor = ("param", r.name)
             elif isinstance(r, X.Const):
                 anchor = ("const", r.value)
             if anchor:
@@ -523,42 +543,198 @@ def rule_aggregate_pushdown(st: _State):
         )
 
 
+def _scan_source_table(st: _State, scan) -> Optional[str]:
+    """Backing relational table of a scan leaf (for catalog statistics)."""
+    if isinstance(scan, L.TableScan):
+        return scan.table
+    vb = getattr(st.stats, "views", {}).get(scan.graph)
+    if vb is None:
+        return None
+    return vb.vertex_table if isinstance(scan, L.VertexScan) else vb.edge_table
+
+
+def _filter_selectivity(tstats, f: X.Expr) -> float:
+    """Textbook selectivity heuristics against per-column distinct counts."""
+    if isinstance(f, X.Cmp):
+        c = f.left.name if isinstance(f.left, X.Col) else (
+            f.right.name if isinstance(f.right, X.Col) else None
+        )
+        if f.op == "==":
+            return tstats.selectivity(c) if c else 0.1
+        if f.op == "!=":
+            return 1.0 - (tstats.selectivity(c) if c else 0.1)
+        return 1.0 / 3.0  # range predicate
+    if isinstance(f, X.In):
+        c = f.item.name if isinstance(f.item, X.Col) else None
+        base = tstats.selectivity(c) if c else 0.1
+        return min(1.0, len(f.values) * base)
+    if isinstance(f, X.BoolOp):
+        subs = [_filter_selectivity(tstats, a) for a in f.args]
+        if f.op == "and":
+            out = 1.0
+            for s in subs:
+                out *= s
+            return out
+        if f.op == "or":
+            return min(1.0, sum(subs))
+        return max(0.0, 1.0 - subs[0])
+    return 0.5
+
+
+def _estimate_scan_rows(st: _State, scan) -> float:
+    """Pushed-filter-adjusted cardinality estimate for one scan leaf.
+
+    Vertex/edge scans take their base cardinality from the live graph-view
+    statistics (a vertex scan only emits topology-valid rows; an edge scan
+    emits live edge rows), filter selectivities from the backing table's
+    column statistics."""
+    table = _scan_source_table(st, scan)
+    if table is None:
+        return 1024.0
+    tstats = st.stats.table_stats(table)
+    rows = float(max(tstats.row_count, 1))
+    if isinstance(scan, (L.VertexScan, L.EdgeScan)):
+        gs = st.stats.graph_stats(scan.graph)
+        if isinstance(scan, L.VertexScan):
+            rows = float(max(gs.n_vertices, 1))
+        else:
+            # undirected views count both directions in n_edges; the scan
+            # emits one row per edge-table row
+            directed = st.stats.views[scan.graph].directed
+            rows = float(max(gs.n_edges if directed else gs.n_edges // 2, 1))
+    for f in getattr(scan, "filters", ()):
+        rows *= _filter_selectivity(tstats, f)
+    return max(rows, 1.0)
+
+
+def _key_distinct(st: _State, by_alias, key: str) -> int:
+    alias, _, cname = key.partition(".")
+    scan = by_alias.get(alias)
+    if scan is None:
+        return 10
+    table = _scan_source_table(st, scan)
+    if table is None:
+        return 10
+    return st.stats.table_stats(table).distinct_of(cname)
+
+
+def _pow2_at_least(n: float, lo: int = 16, hi: int = 1 << 20) -> int:
+    cap = lo
+    while cap < n and cap < hi:
+        cap <<= 1
+    return cap
+
+
 def rule_join_ordering(st: _State):
-    """Greedy equi-join chain; bounded cross-join fallback; leftover
-    conditions demoted to residual equality filters."""
+    """Cost-based equi-join ordering from catalog statistics (with the
+    legacy greedy FROM-order chain as the no-stats fallback).
+
+    With a stats provider, scans start from filter-adjusted cardinality
+    estimates; the build order is smallest-relation-first, each step picking
+    the equi-joinable relation minimizing ``|L|*|R| / max(d(L.k), d(R.k))``.
+    Join output capacities are sized from the estimate (never below the
+    legacy left-capacity default, so estimates can only widen a join, not
+    starve it). Bounded cross joins remain the connectivity fallback;
+    leftover conditions demote to residual equality filters.
+    """
     rj = st.reljoin
     if rj is None:
         return
     by_alias = {s.alias: s for s in rj.inputs}  # type: ignore[attr-defined]
     order = [s.alias for s in rj.inputs]  # type: ignore[attr-defined]
-    joined: L.LogicalOp = by_alias[order[0]]
-    joined_aliases = {order[0]}
-    remaining = set(order[1:])
     conds = list(st.join_conds)
-    while remaining:
-        progressed = False
-        for lk, rk in list(conds):
+
+    est: Optional[Dict[str, float]] = None
+    caps: Dict[str, int] = {}
+    if st.stats is not None:
+        est = {a: _estimate_scan_rows(st, by_alias[a]) for a in order}
+        for a in order:
+            table = _scan_source_table(st, by_alias[a])
+            caps[a] = (
+                st.stats.table_stats(table).capacity if table else 1024
+            )
+        if len(order) > 1:
+            st.note(
+                "join-ordering",
+                "scan cardinality estimates: "
+                + ", ".join(f"{a}~{est[a]:.0f}" for a in order),
+            )
+        start = min(order, key=lambda a: (est[a], order.index(a)))
+    else:
+        start = order[0]
+
+    joined: L.LogicalOp = by_alias[start]
+    joined_aliases = {start}
+    remaining = [a for a in order if a != start]
+    cur_rows = est[start] if est is not None else None
+    cur_cap = caps.get(start, 0)
+
+    def _candidates():
+        for lk, rk in conds:
             la, ra = lk.split(".")[0], rk.split(".")[0]
             if la in joined_aliases and ra in remaining:
-                joined = L.HashJoin(left=joined, right=by_alias[ra],
-                                    left_key=lk, right_key=rk)
-                joined_aliases.add(ra)
-                remaining.discard(ra)
-                conds.remove((lk, rk))
-                progressed = True
+                yield ra, lk, rk, (lk, rk)
             elif ra in joined_aliases and la in remaining:
-                joined = L.HashJoin(left=joined, right=by_alias[la],
-                                    left_key=rk, right_key=lk)
-                joined_aliases.add(la)
-                remaining.discard(la)
-                conds.remove((lk, rk))
-                progressed = True
-        if not progressed:
+                yield la, rk, lk, (lk, rk)
+
+    while remaining:
+        cands = list(_candidates())
+        if cands:
+            if est is not None:
+                def out_rows(c):
+                    a, jl, jr, _ = c
+                    d = max(
+                        _key_distinct(st, by_alias, jl),
+                        _key_distinct(st, by_alias, jr),
+                    )
+                    return cur_rows * est[a] / d
+                cands.sort(key=lambda c: (out_rows(c), order.index(c[0])))
+                a, jl, jr, cond = cands[0]
+                new_rows = out_rows(cands[0])
+                # size the output batch from the estimate (4x safety), but
+                # never below the legacy default of the left capacity
+                cap = max(_pow2_at_least(4.0 * new_rows), cur_cap)
+                joined = L.HashJoin(
+                    left=joined, right=by_alias[a], left_key=jl,
+                    right_key=jr, capacity=cap, est_rows=new_rows,
+                )
+                st.note(
+                    "join-ordering",
+                    f"hash join + {a} on {jl} == {jr} "
+                    f"(est {new_rows:.0f} row(s), capacity {cap})",
+                )
+                cur_rows, cur_cap = max(new_rows, 1.0), cap
+            else:
+                a, jl, jr, cond = cands[0]
+                joined = L.HashJoin(
+                    left=joined, right=by_alias[a], left_key=jl, right_key=jr
+                )
+            joined_aliases.add(a)
+            remaining.remove(a)
+            conds.remove(cond)
+            continue
+        # no usable equi condition: bounded cross join with the smallest
+        # remaining relation (FROM order when sizes are unknown)
+        if est is not None:
+            a = min(remaining, key=lambda x: (est[x], order.index(x)))
+            new_rows = cur_rows * est[a]
+            cap = max(_pow2_at_least(4.0 * new_rows), cur_cap, caps.get(a, 0))
+            joined = L.CrossJoin(
+                left=joined, right=by_alias[a], right_alias=a, capacity=cap
+            )
+            st.note(
+                "join-ordering",
+                f"cross join with {a} (bounded, est {new_rows:.0f} row(s), "
+                f"capacity {cap})",
+            )
+            cur_rows, cur_cap = max(new_rows, 1.0), cap
+        else:
             a = sorted(remaining)[0]
             joined = L.CrossJoin(left=joined, right=by_alias[a], right_alias=a)
             st.note("join-ordering", f"cross join with {a} (bounded)")
-            joined_aliases.add(a)
-            remaining.discard(a)
+        joined_aliases.add(a)
+        remaining.remove(a)
+
     for lk, rk in conds:
         st.residuals.append(X.Cmp("==", X.Col(lk), X.Col(rk)))
         st.note(
@@ -608,12 +784,38 @@ RULE_PIPELINE = (
 # --------------------------------------------------------------------------
 # driver
 # --------------------------------------------------------------------------
-def optimize(query: Q.Query, catalog=None) -> PhysicalPlan:
-    """builder -> logical tree -> rule pipeline -> physical executor tree."""
+def _collect_param_names(query: Q.Query) -> Tuple[str, ...]:
+    names = set(X.params_of(query.where_expr))
+    for e in query.select_list.values():
+        if isinstance(e, X.Expr):
+            names |= X.params_of(e)
+    for _, e in query.agg_select.values():
+        if isinstance(e, X.Expr):
+            names |= X.params_of(e)
+    return tuple(sorted(names))
+
+
+def optimize(query: Q.Query, catalog=None, *, stats=None) -> PhysicalPlan:
+    """builder -> logical tree -> rule pipeline -> physical executor tree.
+
+    ``stats`` is the owning engine (catalog-statistics provider) for
+    cost-based rules; None keeps every rule on its statistics-free path.
+    The driver snapshots the tree around each rule and attaches a compact
+    before/after diff to the rule's first trace event when it changed."""
     root = L.build_logical(query)
-    st = _State(query, root)
-    for _, rule in RULE_PIPELINE:
+    st = _State(query, root, stats=stats)
+    for name, rule in RULE_PIPELINE:
+        before = L.compact(st.root)
+        n0 = len(st.trace)
         rule(st)
+        after = L.compact(st.root)
+        if after != before:
+            if len(st.trace) > n0:
+                st.trace[n0].before, st.trace[n0].after = before, after
+            else:
+                st.trace.append(
+                    RuleEvent(name, "tree rewritten", before=before, after=after)
+                )
     phys = _lower(st.root)
     return PhysicalPlan(
         query=query,
@@ -624,6 +826,7 @@ def optimize(query: Q.Query, catalog=None) -> PhysicalPlan:
         join_conds=list(st.join_conds),
         residuals=list(st.residuals),
         trace=st.trace,
+        param_names=_collect_param_names(query),
     )
 
 
@@ -637,10 +840,14 @@ def _lower(node: L.LogicalOp) -> "E.ExecNode":
         return E.EdgeScanExec(node.alias, node.graph, node.filters)
     if isinstance(node, L.HashJoin):
         return E.HashJoinExec(
-            _lower(node.left), _lower(node.right), node.left_key, node.right_key
+            _lower(node.left), _lower(node.right), node.left_key,
+            node.right_key, node.capacity,
         )
     if isinstance(node, L.CrossJoin):
-        return E.CrossJoinExec(_lower(node.left), _lower(node.right), node.right_alias)
+        return E.CrossJoinExec(
+            _lower(node.left), _lower(node.right), node.right_alias,
+            node.capacity,
+        )
     if isinstance(node, L.PathScan):
         child = _lower(node.child) if node.child is not None else None
         return E.PathScanExec(node.spec, child)

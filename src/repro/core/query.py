@@ -24,7 +24,7 @@ from dataclasses import dataclass, field as dfield
 from typing import Any, Dict, List, Optional
 
 from repro.core import expr as X
-from repro.core.expr import Col, col  # re-export
+from repro.core.expr import Col, Param, col, param  # re-export
 
 ANY = "ANY"
 STAR = "*"

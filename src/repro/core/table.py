@@ -14,12 +14,38 @@ mask, so all programs compile once per capacity.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass
 from typing import Dict, Mapping
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.struct import pytree, field, static_field
+
+
+@dataclass(frozen=True)
+class TableStats:
+    """Catalog statistics for one table snapshot (keyed by table epoch).
+
+    ``distinct`` holds exact distinct counts over live rows per 1-D column
+    (exact because tables are in-memory and stats recompute only on epoch
+    change); the optimizer's cost-based join-ordering rule reads them as
+    equi-join selectivity denominators.
+    """
+
+    name: str
+    capacity: int
+    row_count: int
+    distinct: Dict[str, int]
+
+    def distinct_of(self, column: str, default: int = 10) -> int:
+        return max(self.distinct.get(column, default), 1)
+
+    def selectivity(self, column: str) -> float:
+        """Estimated fraction of rows matching an equality on ``column``."""
+        if self.row_count <= 0:
+            return 1.0
+        return 1.0 / self.distinct_of(column, default=max(self.row_count, 1))
 
 
 def _pad_to(arr: jnp.ndarray, capacity: int):
@@ -133,6 +159,26 @@ class Table:
         cols = dict(self.columns)
         cols[name] = jnp.asarray(values)
         return self.replace(columns=cols, colnames=tuple(sorted(cols)))
+
+    # ----------------------------------------------------------------- stats
+    def compute_stats(self) -> TableStats:
+        """Host-side statistics pass over live rows (planning-time only).
+
+        Engines cache the result per table epoch (``GRFusion.table_stats``);
+        this method itself always recomputes.
+        """
+        mask = np.asarray(self.valid)
+        n = int(mask.sum())
+        distinct: Dict[str, int] = {}
+        for k, v in self.columns.items():
+            arr = np.asarray(v)
+            if arr.ndim != 1:
+                continue
+            distinct[k] = int(np.unique(arr[mask]).size)
+        return TableStats(
+            name=self.name, capacity=self.capacity, row_count=n,
+            distinct=distinct,
+        )
 
     # ----------------------------------------------------------------- numpy
     def to_numpy(self) -> Dict[str, np.ndarray]:

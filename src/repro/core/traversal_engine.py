@@ -69,6 +69,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import traversal as T
+from repro.core.compiled import EpochRegistry
 from repro.core.graphview import GraphView
 from repro.kernels.frontier.ops import bfs_pallas, pack_edges_by_dst
 
@@ -189,6 +190,7 @@ class TraversalEngine:
         pack_cache_capacity: int = 16,
         lane_width: int = 32,
         max_lanes: int = 1024,
+        epochs: Optional[EpochRegistry] = None,
     ):
         if default_backend != "auto" and default_backend not in BACKENDS:
             raise ValueError(f"unknown backend {default_backend!r}")
@@ -206,7 +208,10 @@ class TraversalEngine:
         self._stats = collections.Counter()
         self._packs: "collections.OrderedDict" = collections.OrderedDict()
         self._pack_cap = pack_cache_capacity
-        self._epochs: Dict[str, int] = {}
+        # shared with the owning GRFusion: one registry answers both "did
+        # the topology change?" (packing cache) and "did a table change?"
+        # (compiled predicate-mask cache in core/compiled.py)
+        self.epochs = epochs if epochs is not None else EpochRegistry()
         self._fp_cache: "collections.OrderedDict" = collections.OrderedDict()
         self._pending: List[Tuple[GraphView, Optional[str], PendingQuery]] = []
         self._pending_w: List[
@@ -221,18 +226,18 @@ class TraversalEngine:
     # ------------------------------------------------------- topology epochs
     def register_view(self, name: str):
         """Start epoch tracking for a named graph (owning-engine path)."""
-        self._epochs.setdefault(name, 0)
+        self.epochs.ensure(name)
 
     def bump_epoch(self, name: str):
         """Topology changed (compaction / delta insert): invalidate packs."""
-        self._epochs[name] = self._epochs.get(name, 0) + 1
+        self.epochs.bump(name)
         stale = [k for k in self._packs if k[0][0] == name]
         for k in stale:
             del self._packs[k]
 
     def topology_key(self, view: GraphView, graph: Optional[str] = None):
-        if graph is not None and graph in self._epochs:
-            return (graph, self._epochs[graph])
+        if graph is not None and self.epochs.known(graph):
+            return (graph, self.epochs.get(graph))
         return self._fingerprint(view)
 
     def _fingerprint(self, view: GraphView):
@@ -280,6 +285,21 @@ class TraversalEngine:
             self._packs.popitem(last=False)
         self._stats["pack_builds"] += 1
         return pack
+
+    def _block_for(self, view: GraphView) -> int:
+        """Effective COO block size for one view: the configured block,
+        shrunk to the next power of two covering the actual edge stream.
+        ``_blocked_coo`` pads the stream to a whole number of blocks, so a
+        small graph under a large block sweeps mostly padding — at the
+        benchmark quick sizes that alone was ~2x per-query overhead on the
+        planned path versus a raw engine sized to the graph. Blocking does
+        not affect results, only shapes (each (nb, block) pair jit-caches
+        its own trace)."""
+        n = view.n_slots + view.delta_capacity
+        b = 1 << 10
+        while b < n and b < self.block_size:
+            b <<= 1
+        return b
 
     # ------------------------------------------------------- backend policy
     def resolve_backend(
@@ -334,7 +354,7 @@ class TraversalEngine:
         if b == "xla_coo":
             return _bfs_xla(
                 view, source_pos, edge_mask_by_row, vertex_mask,
-                target_pos, max_hops=max_hops, block_size=self.block_size,
+                target_pos, max_hops=max_hops, block_size=self._block_for(view),
             )
         if b == "pallas_frontier":
             ps, pe, ldst = self.get_pack(view, graph)
@@ -420,7 +440,7 @@ class TraversalEngine:
         if b == "xla_coo":
             return _sssp_xla(
                 view, source_pos, weight_by_row, edge_mask_by_row,
-                vertex_mask, max_iters=max_iters, block_size=self.block_size,
+                vertex_mask, max_iters=max_iters, block_size=self._block_for(view),
             )
         if b == "pallas_frontier":
             dist = self._sssp_packed_dist(
@@ -436,7 +456,7 @@ class TraversalEngine:
             )
         parent = T.sssp_parents(
             view, dist, source_pos, weight_by_row,
-            edge_mask_by_row, block_size=self.block_size,
+            edge_mask_by_row, block_size=self._block_for(view),
         )
         return dist, parent
 
@@ -505,7 +525,7 @@ class TraversalEngine:
     def reconstruct_paths(self, view, parent_slot, target_pos, *, max_len=32):
         return T.reconstruct_paths(
             view, parent_slot, target_pos,
-            max_len=max_len, block_size=self.block_size,
+            max_len=max_len, block_size=self._block_for(view),
         )
 
     def enumerate_paths(self, view, start_pos, **kwargs):

@@ -110,6 +110,14 @@ class QueryServer:
     parameterized queries skip re-planning entirely and still see live
     catalog state (delta inserts, tombstones) because the tree resolves
     views and masks at execution time.
+
+    There is exactly one plan-cache code path: ``PreparedPlan.execute``
+    (shared with ``GRFusion.run``/``prepare``) owns the compiled-mask
+    runtime and its epoch checks (``repro.core.compiled.PlanRuntime``);
+    this server adds only queueing and error isolation on top. Re-bind
+    parameters with ``plan.bind(...)`` between submissions — no
+    re-planning, and cached masks survive across bind calls whose values
+    don't feed them.
     """
 
     def __init__(
@@ -156,12 +164,16 @@ class QueryServer:
         is drained up front and every plan runs even if an earlier one
         fails: each entry in the returned list is either the plan's
         QueryResult or the exception its execution raised, so one bad plan
-        can neither wedge the queue nor discard its neighbors' results."""
+        can neither wedge the queue nor discard its neighbors' results.
+        Epoch checks and compiled-mask reuse happen inside
+        ``PreparedPlan.execute`` — the same path ``GRFusion`` uses — so a
+        plan submitted N times evaluates its masks at most once per
+        catalog change, not once per submission."""
         plans, self.pending_plans = self.pending_plans, []
         out = []
         for p in plans:
             try:
-                out.append(p.run())
+                out.append(p.execute())
             except Exception as e:  # noqa: BLE001 - reported to the caller
                 out.append(e)
         return out

@@ -1,0 +1,330 @@
+"""Compiled query runtime tests: epoch-keyed mask compilation, PreparedPlan
+parameter binding, catalog statistics, cost-based join ordering, and
+rule-trace before/after diffs."""
+import numpy as np
+import pytest
+
+from repro.core import executor as EX
+from repro.core.compiled import PlanRuntime
+from repro.core.engine import GRFusion
+from repro.core.query import Query, P, col, param
+
+
+@pytest.fixture
+def social():
+    eng = GRFusion()
+    eng.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "fName": np.array(["Edy", "Jones", "Bill", "Ann", "Cara"]),
+        "dob": np.array([19710925, 19801121, 19760201, 19900101, 19850505]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=8)
+    eng.create_table("Relationships", {
+        "relId": np.array([1, 2, 3, 4]),
+        "uId1": np.array([1, 2, 3, 4]),
+        "uId2": np.array([3, 3, 4, 5]),
+        "startDate": np.array([20090110, 20081231, 20100101, 19990101]),
+    }, capacity=16)
+    eng.create_graph_view(
+        "SocialNetwork", vertexes="Users", edges="Relationships",
+        v_id="uId", e_src="uId1", e_dst="uId2",
+        v_attrs={"lstName": "fName", "Job": "Job"},
+        e_attrs={"sDate": "startDate"},
+        directed=False,
+    )
+    return eng
+
+
+# ------------------------------------------------------- parameter binding
+def test_bind_roundtrip_matches_fresh_plans(social):
+    PS = P("PS")
+    prepared = social.prepare(
+        Query().from_paths("SocialNetwork", "PS")
+        .where((PS.start.id == param("src")) & (PS.end.id == param("dst")))
+        .select(hops=col("PS.length"))
+    ).bind(src=1, dst=5)
+    assert prepared.plan.specs["PS"].physical == "bfs"
+
+    def fresh(s, d):
+        return social.run(
+            Query().from_paths("SocialNetwork", "PS")
+            .where((PS.start.id == s) & (PS.end.id == d))
+            .select(hops=col("PS.length"))
+        )
+
+    r1 = prepared.execute()
+    f1 = fresh(1, 5)
+    assert r1.count == f1.count == 1
+    assert int(r1.columns["hops"][0]) == int(f1.columns["hops"][0]) == 3
+
+    # rebind without re-planning: same rows as a fresh plan for the new ids
+    rebound = prepared.bind(src=2, dst=4)
+    r2 = rebound.execute()
+    f2 = fresh(2, 4)
+    assert int(r2.columns["hops"][0]) == int(f2.columns["hops"][0]) == 2
+    # bind returns a new handle sharing plan+runtime: the original binding
+    # is untouched (no aliasing between differently-bound handles)
+    assert rebound.plan is prepared.plan
+    assert prepared.params == {"src": 1, "dst": 5}
+    assert int(prepared.execute().columns["hops"][0]) == 3
+
+
+def test_bind_param_in_pushed_scan_filter_with_string_encoding(social):
+    PS = P("PS")
+    prepared = social.prepare(
+        Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+        .where((col("U.Job") == param("job"))
+               & (PS.start.id == col("U.uId")) & (PS.length == 1))
+        .select(uid=col("U.uId"))
+    )
+    lawyers = prepared.bind(job="Lawyer").execute()
+    assert sorted(set(int(x) for x in lawyers.columns["uid"])) == [1, 3]
+    engs = prepared.bind(job="Eng").execute()
+    assert sorted(set(int(x) for x in engs.columns["uid"])) == [4, 5]
+
+
+def test_bind_rejects_unknown_and_execute_requires_bound(social):
+    PS = P("PS")
+    prepared = social.prepare(
+        Query().from_paths("SocialNetwork", "PS")
+        .where((PS.start.id == param("src")) & (PS.length == 1))
+        .select(end=PS.end.id)
+    )
+    with pytest.raises(KeyError):
+        prepared.bind(nope=3)
+    with pytest.raises(ValueError):
+        prepared.execute()  # src unbound
+    assert prepared.bind(src=1).execute().count > 0
+
+
+# ----------------------------------------------------- epoch invalidation
+def test_epoch_invalidation_recompiles_masks_exactly_once(social):
+    PS = P("PS")
+    prepared = social.prepare(
+        Query().from_paths("SocialNetwork", "PS")
+        .where((PS.start.id == 1) & (PS.length <= 2)
+               & (PS.edges[0:"*"].attr("sDate") > 19990000))
+        .select(end=PS.end.id)
+    )
+    r0 = prepared.execute()
+    rt = prepared.runtime
+    compiled0 = rt.stats["predicates_compiled"]
+    builds0 = rt.stats["mask_builds"]
+    assert builds0 > 0
+
+    # steady state: re-execution reuses every mask, compiles nothing
+    prepared.execute()
+    assert rt.stats["predicates_compiled"] == compiled0
+    assert rt.stats["mask_builds"] == builds0
+    # steady state is served from the caches (anchor/prep values hit
+    # before the individual masks are even consulted)
+    assert rt.stats["mask_hits"] + rt.stats["value_hits"] > 0
+
+    # edge insert bumps only the edge table epoch: exactly the one
+    # edge-predicate mask recompiles (vertex masks stay cached), once
+    social.insert("Relationships", {
+        "relId": np.array([9]), "uId1": np.array([1]), "uId2": np.array([5]),
+        "startDate": np.array([20240101]),
+    })
+    r1 = prepared.execute()
+    builds1 = rt.stats["mask_builds"]
+    assert builds1 == builds0 + 1
+    prepared.execute()
+    assert rt.stats["mask_builds"] == builds1  # recompiled exactly once
+    assert sorted(set(int(x) for x in r1.columns["end"])) == sorted(
+        set(int(x) for x in r0.columns["end"]) | {5}
+    )
+
+    # tombstone on the vertex table: both vertex masks recompile, once,
+    # and the dead vertex disappears from results
+    social.delete_where("Users", col("uId") == 5)
+    r2 = prepared.execute()
+    builds2 = rt.stats["mask_builds"]
+    assert builds2 == builds1 + 2
+    prepared.execute()
+    assert rt.stats["mask_builds"] == builds2
+    assert 5 not in set(int(x) for x in r2.columns["end"])
+    assert rt.stats["predicates_compiled"] == compiled0  # never re-lowered
+
+
+def test_query_server_shares_the_plan_cache_path(social):
+    from repro.serve.engine import QueryServer
+
+    srv = QueryServer(social, "SocialNetwork")
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == param("src")) & (PS.length == 1))
+         .select(end=PS.end.id))
+    prepared = srv.prepare(q).bind(src=1)
+    srv.submit_plan(prepared)
+    srv.submit_plan(prepared)
+    out = srv.flush_plans()
+    assert len(out) == 2 and all(r.count > 0 for r in out)
+    rt = prepared.runtime
+    assert isinstance(rt, PlanRuntime)
+    # second submission was served entirely from warm caches
+    assert rt.stats["mask_hits"] + rt.stats["value_hits"] > 0
+    # a second flush reuses the SAME runtime object (one cache code path)
+    srv.submit_plan(prepared)
+    srv.flush_plans()
+    assert prepared.runtime is rt
+
+    # differently-bound handles queued in one flush must not alias: each
+    # submission keeps its own binding (bind returns a new handle)
+    srv.submit_plan(prepared.bind(src=1))
+    srv.submit_plan(prepared.bind(src=3))
+    a, b = srv.flush_plans()
+    ends_1 = sorted(set(int(x) for x in a.columns["end"]))
+    ends_3 = sorted(set(int(x) for x in b.columns["end"]))
+    assert ends_1 == [3]
+    assert ends_3 == [1, 2, 4]
+
+
+# ------------------------------------------- compiled vs interpreted masks
+@pytest.mark.differential
+def test_compiled_masks_bit_identical_across_backends(social):
+    import jax.numpy as jnp  # noqa: F401
+
+    vb = social.views["SocialNetwork"]
+    edge_preds = [col("sDate") > 20000101]
+    vertex_preds = [col("Job") == "Lawyer"]
+    interp_e = social._edge_mask(vb, edge_preds)
+    interp_v = social._vertex_mask(vb, vertex_preds)
+    rt = PlanRuntime(social)
+    comp_e = rt.mask(
+        ("t", "e"), edge_preds, table=vb.edge_table,
+        epoch=social.table_epoch(vb.edge_table),
+        resolve=social.tables[vb.edge_table].col,
+        base=social.tables[vb.edge_table].valid, colmap=vb.e_attrs,
+    )
+    comp_v = rt.mask(
+        ("t", "v"), vertex_preds, table=vb.vertex_table,
+        epoch=social.table_epoch(vb.vertex_table),
+        resolve=social.tables[vb.vertex_table].col,
+        base=social.tables[vb.vertex_table].valid, colmap=vb.v_attrs,
+    )
+    assert np.array_equal(np.asarray(interp_e), np.asarray(comp_e))
+    assert np.array_equal(np.asarray(interp_v), np.asarray(comp_v))
+
+    # the full query produces identical rows on every traversal backend
+    PS = P("PS")
+    rows_by_backend = {}
+    for b in ("xla_coo", "pallas_frontier", "reference"):
+        r = social.run(
+            Query().from_paths("SocialNetwork", "PS")
+            .where((PS.start.id == 1) & (PS.end.id == 4)
+                   & (PS.edges[0:"*"].attr("sDate") > 20000101))
+            .select(hops=col("PS.length"))
+            .traversal_backend(b)
+        )
+        rows_by_backend[b] = (r.count, tuple(int(x) for x in r.columns["hops"]))
+    vals = set(rows_by_backend.values())
+    assert len(vals) == 1, rows_by_backend
+
+
+# --------------------------------------------- statistics + join ordering
+def test_table_stats_epoch_cached(social):
+    s1 = social.table_stats("Users")
+    assert s1.row_count == 5
+    assert s1.distinct["uId"] == 5
+    assert social.table_stats("Users") is s1  # cached while epoch unchanged
+    social.insert("Users", {
+        "uId": np.array([6]), "fName": np.array(["Zed"]),
+        "dob": np.array([19990101]), "Job": np.array(["Eng"]),
+    })
+    s2 = social.table_stats("Users")
+    assert s2 is not s1 and s2.row_count == 6
+    g = social.graph_stats("SocialNetwork")
+    assert g.n_vertices == 6 and g.n_edges == 8  # undirected: both directions
+
+
+def test_cost_based_join_ordering_smallest_first_and_capacity():
+    eng = GRFusion()
+    rng = np.random.default_rng(0)
+    eng.create_table("Big", {
+        "bid": np.arange(64), "k": rng.integers(0, 8, 64),
+    }, capacity=64)
+    eng.create_table("Small", {
+        "sid": np.arange(3), "k": np.array([0, 1, 2]),
+    }, capacity=8)
+    eng.create_table("Mid", {
+        "mid": np.arange(16), "s": np.arange(16) % 3,
+    }, capacity=16)
+    q = (Query().from_table("Big", "B").from_table("Small", "S")
+         .from_table("Mid", "M")
+         .where((col("B.k") == col("S.k")) & (col("S.sid") == col("M.s")))
+         .select(b=col("B.bid"), m=col("M.mid")))
+    plan = eng.plan(q)
+    # innermost (first-built) relation is the smallest one
+    node = plan.root
+    while node.children():
+        node = node.children()[0]
+    assert isinstance(node, EX.TableScanExec) and node.alias == "S"
+    joins = []
+    stack = [plan.root]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, EX.HashJoinExec):
+            joins.append(n)
+        stack.extend(n.children())
+    assert len(joins) == 2
+    assert all(j.capacity is not None and j.capacity >= 64 for j in joins)
+    lines = plan.explain_lines()
+    assert any("scan cardinality estimates" in e for e in lines)
+    assert any("hash join" in e and "capacity" in e for e in lines)
+    # and the plan still computes the right answer
+    r = eng.run(q)
+    # every Big row with k in {0,1,2} joins Small once, then Mid rows with
+    # s == sid: 16 Mid rows over 3 groups
+    k = np.asarray(eng.tables["Big"].columns["k"])[:64]
+    expect = sum(
+        int((np.arange(16) % 3 == kk).sum()) for kk in k if kk in (0, 1, 2)
+    )
+    assert r.count == expect
+
+
+def test_join_capacity_widens_beyond_left_capacity():
+    """Many-to-many joins used to truncate at left.capacity; the cost rule
+    must widen the output batch so no matches drop."""
+    eng = GRFusion()
+    eng.create_table("L", {"k": np.zeros(8, np.int64), "lid": np.arange(8)},
+                     capacity=8)
+    eng.create_table("R", {"k": np.zeros(8, np.int64), "rid": np.arange(8)},
+                     capacity=8)
+    q = (Query().from_table("L", "L").from_table("R", "R")
+         .where(col("L.k") == col("R.k"))
+         .select(lid=col("L.lid"), rid=col("R.rid")))
+    r = eng.run(q)
+    assert r.count == 64 and not r.overflow
+
+
+# ------------------------------------------------------- rule-trace diffs
+def test_rule_events_carry_before_after_snapshots(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where((col("U.Job") == "Lawyer") & (PS.start.id == col("U.uId"))
+                & (PS.length == 2))
+         .select(lname=PS.end.attr("lstName")))
+    plan = social.explain(q)
+    diffs = [e for e in plan.trace if e.before is not None]
+    assert diffs, "tree-changing rules must record before/after snapshots"
+    by_rule = {e.rule for e in diffs}
+    assert "classify-predicates" in by_rule  # filters pushed, anchors set
+    assert "path-length-inference" in by_rule  # [1,6] -> [2,2] is visible
+    e = next(e for e in diffs if e.rule == "path-length-inference")
+    assert "[1,6]" in e.before and "[2,2]" in e.after
+    s = plan.pretty()
+    assert "before:" in s and "after:" in s
+
+    # the enum -> bfs physical flip shows up as a diff on a reachability plan
+    PS2 = P("PS")
+    plan2 = social.explain(
+        Query().from_paths("SocialNetwork", "PS")
+        .where((PS2.start.id == 1) & (PS2.end.id == 5))
+        .select(hops=col("PS.length"))
+    )
+    e2 = next(
+        e for e in plan2.trace
+        if e.rule == "physical-pathscan" and e.before is not None
+    )
+    assert "enum" in e2.before and "bfs" in e2.after
