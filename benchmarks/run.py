@@ -57,6 +57,7 @@ def main() -> None:
         fig9_selectivity,
         fig10_triangles,
         fig11_sssp,
+        fig12_pathjoin,
         table1_construction,
     )
 
@@ -65,6 +66,7 @@ def main() -> None:
         ("fig9", fig9_selectivity),
         ("fig10", fig10_triangles),
         ("fig11", fig11_sssp),
+        ("fig12", fig12_pathjoin),
         ("table1", table1_construction),
     ]
     print("name,us_per_call,derived")

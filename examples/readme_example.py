@@ -1,0 +1,113 @@
+"""The README's worked example, executable — `scripts/ci.sh docs` runs it.
+
+Keep this file and the "Worked example" section of README.md in sync: the
+CI docs stage exists precisely so the documented API can never drift from
+the code. Every printed claim is also asserted.
+
+    PYTHONPATH=src python examples/readme_example.py
+"""
+import numpy as np
+
+from repro.core.engine import GRFusion
+from repro.core.query import Query, P, col, param
+
+
+def main():
+    eng = GRFusion()
+
+    # -- relational sources (paper Fig. 3) --------------------------------
+    eng.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "fName": np.array(["Edy", "Jones", "Bill", "Ann", "Cara"]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=16)
+    # capacity reserves slots for online inserts (tables are fixed-width
+    # device buffers; see docs/architecture.md)
+    eng.create_table("Relationships", {
+        "relId": np.array([1, 2, 3, 4]),
+        "uId1": np.array([1, 2, 3, 4]),
+        "uId2": np.array([3, 3, 4, 5]),
+        "startDate": np.array([20090110, 20081231, 20100101, 19990101]),
+    }, capacity=16)
+
+    # -- CREATE UNDIRECTED GRAPH VIEW ... (paper Listing 1) ---------------
+    eng.create_graph_view(
+        "SocialNetwork", vertexes="Users", edges="Relationships",
+        v_id="uId", e_src="uId1", e_dst="uId2",
+        e_attrs={"sDate": "startDate"},
+        directed=False,
+    )
+
+    # -- run: friends-of-friends of lawyers (paper Listing 2) -------------
+    PS = P("PS")
+    fof = (Query()
+           .from_table("Users", "U")
+           .from_paths("SocialNetwork", "PS")
+           .where((col("U.Job") == "Lawyer")
+                  & (PS.start.id == col("U.uId"))
+                  & (PS.length == 2)
+                  & (PS.edges[0:"*"].attr("sDate") > 20000101))
+           .select(lawyer=col("U.fName"), fof=PS.end.id))
+    r = eng.run(fof)
+    rows = sorted((str(a), int(b))
+                  for a, b in zip(r.columns["lawyer"], r.columns["fof"]))
+    print("friends-of-friends:", rows)
+    # Edy(1) reaches 2 and 4 via 3; Bill(3)'s 2-hop paths all need the
+    # 1999 edge 4-5, which the sDate filter prunes
+    assert rows == [("Edy", 2), ("Edy", 4)], rows
+
+    # -- explain: the typed plan, no execution ----------------------------
+    plan = eng.explain(fof)
+    text = plan.pretty()
+    print("\nEXPLAIN:")
+    print(text)
+    assert "PathScanExec" in text and "TableScanExec" in text
+    assert "rule path-length-inference" in text
+
+    # -- PathJoin: two PATHS sources joining on endpoint ids --------------
+    # Paths from Edy (1) and from Jones (2) that END at the same vertex —
+    # an end-only cross reference no traversal can seed; the optimizer
+    # plans a hash join of the two path sets' end-vertex lanes instead.
+    P1, P2 = P("P1"), P("P2")
+    meet = (Query()
+            .from_paths("SocialNetwork", "P1")
+            .from_paths("SocialNetwork", "P2")
+            .where((P1.start.id == 1) & (P1.length == 1)
+                   & (P2.start.id == 2) & (P2.length == 1)
+                   & (P2.end.id == P1.end.id))
+            .select(meet=P1.end.id))
+    mplan = eng.explain(meet)
+    print("\nPathJoin EXPLAIN:")
+    print(mplan.pretty())
+    assert "PathJoinExec" in mplan.pretty()
+    assert any(e.rule == "path-join" for e in mplan.trace)
+    m = eng.run(meet)
+    meets = sorted(int(x) for x in m.columns["meet"])
+    print("meeting vertices:", meets)
+    assert meets == [3], meets  # 1-3 and 2-3 meet at vertex 3
+
+    # -- prepare + bind: plan once, re-bind parameters, re-execute --------
+    reach = (Query()
+             .from_paths("SocialNetwork", "PS")
+             .where((PS.start.id == param("src")) & (PS.length <= 2))
+             .select(end=PS.end.id))
+    prepared = eng.prepare(reach)
+    ends_from_1 = sorted(set(map(int, prepared.bind(src=1).execute().columns["end"])))
+    ends_from_5 = sorted(set(map(int, prepared.bind(src=5).execute().columns["end"])))
+    print("\nreachable<=2 from 1:", ends_from_1, " from 5:", ends_from_5)
+    assert ends_from_1 == [2, 3, 4] and ends_from_5 == [3, 4]
+
+    # prepared plans see live updates (delta insert, no re-planning)
+    eng.insert("Relationships", {
+        "relId": np.array([99]), "uId1": np.array([5]), "uId2": np.array([1]),
+        "startDate": np.array([20230101]),
+    })
+    ends_after = sorted(set(map(int, prepared.bind(src=5).execute().columns["end"])))
+    print("after edge 5-1 insert, from 5:", ends_after)
+    assert 1 in ends_after
+
+    print("\nreadme example OK")
+
+
+if __name__ == "__main__":
+    main()

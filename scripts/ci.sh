@@ -11,6 +11,9 @@
 #                 BENCH_plan_overhead.json (planned-vs-raw fig8/fig9 ratios)
 #                 at the repo root and FAILS if the worst ratio regresses
 #                 above the stored threshold (REPRO_PLAN_OVERHEAD_MAX, 1.3)
+#   docs          executes the README's worked example
+#                 (examples/readme_example.py, asserted output) so the
+#                 documented API can never drift from the code
 #
 # The full suite including slow markers is:  python -m pytest -q
 set -euo pipefail
@@ -18,7 +21,7 @@ cd "$(dirname "$0")/.."
 
 STAGES=("$@")
 if [ ${#STAGES[@]} -eq 0 ]; then
-  STAGES=(collect tier1 differential bench)
+  STAGES=(collect tier1 differential bench docs)
 fi
 
 declare -a TIMINGS=()
@@ -50,6 +53,11 @@ for stage in "${STAGES[@]}"; do
       run_stage bench env REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
       echo "-- plan overhead record --"
       cat BENCH_plan_overhead.json
+      ;;
+    docs)
+      # the README's worked example, extracted verbatim and asserted —
+      # documentation drift fails CI
+      run_stage docs env PYTHONPATH=src python examples/readme_example.py
       ;;
     *)
       echo "unknown stage: ${stage}" >&2

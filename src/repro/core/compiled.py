@@ -262,9 +262,13 @@ class PlanRuntime:
 
     def cached(self, key, epoch, build: Callable[[], Any]):
         """Generic epoch-keyed value cache for deterministic plan state
-        (anchor positions, child scan batches): ``build()`` re-runs only
-        when ``epoch`` — typically a tuple of catalog epochs plus bound
-        parameter values — differs from the stored one."""
+        (anchor positions, child scan batches, PathJoin joined batches):
+        ``build()`` re-runs only when ``epoch`` — typically a tuple of
+        catalog epochs plus bound parameter values — differs from the
+        stored one. Callers that observe side channels while building
+        (overflow flags, explain lines) must capture them in the cached
+        value and replay on hits, so cache warmth never changes what a
+        query reports."""
         ent = self._values.get(key)
         if ent is not None and ent[0] == epoch:
             self.stats["value_hits"] += 1

@@ -11,13 +11,21 @@ operators compose in one tree:
                                                   dispatches bfs / bfs_path /
                                                   sssp / enum through the
                                                   TraversalEngine (§6.3)
+  PathJoinExec                                    hash join of two PATHS
+                                                  sources on endpoint vertex
+                                                  ids (end-only / const-start
+                                                  composition)
+  PathDisjointExec                                cross-path vertex
+                                                  disjointness (globally
+                                                  simple paths)
   ResidualFilterExec / SortExec / LimitExec       post-combination shaping
   ProjectExec / AggregateExec                     root finalizers -> QueryResult
 
-PathScans stack: a second PATHS source whose anchor references the first
-one's output columns executes above it, its output rows gathering the lower
-plan's columns through the origin lane (§5.3) — the pre-IR engine's
-single-PATHS restriction is gone.
+PATHS sources compose two ways: a scan start-anchored on a column of the
+plan below *stacks* above it, its output rows gathering the lower plan's
+columns through the origin lane (§5.3); anything else joins like a
+relation through PathJoinExec — there is no structural asymmetry left
+between graph and relational sources in the plan IR.
 """
 from __future__ import annotations
 
@@ -242,6 +250,29 @@ def _params_key(ctx) -> tuple:
     return tuple(sorted(ctx.params.items()))
 
 
+def _cached_observed(ctx, key, epoch, build):
+    """Epoch-keyed value caching for nodes that observe side channels
+    while building — the overflow flag and explain lines. Both are
+    captured alongside the value and replayed on cache hits, so cache
+    warmth never changes what a query reports. Every caching exec node
+    (PathScan anchor children, PathJoin joined batches) must go through
+    this single implementation of that contract."""
+
+    def build_observed():
+        saved, ctx.overflow = ctx.overflow, False
+        n0 = len(ctx.explain)
+        value = build()
+        ovf, ctx.overflow = ctx.overflow, saved
+        lines = ctx.explain[n0:]
+        del ctx.explain[n0:]
+        return value, ovf, lines
+
+    value, ovf, lines = ctx.runtime.cached(key, epoch, build_observed)
+    ctx.overflow = ctx.overflow or ovf
+    ctx.explain.extend(lines)
+    return value
+
+
 # --------------------------------------------------------------------------
 # PathScan — the graph operator inside the relational tree
 # --------------------------------------------------------------------------
@@ -284,28 +315,15 @@ class PathScanExec(ExecNode):
 
     def _child_batch(self, ctx):
         """Anchor child's batch, cached by the child subtree's epoch
-        signature (its output is deterministic in catalog state + params).
-        Overflow and explain lines observed while building are replayed on
-        cache hits, so cache warmth never changes what a query reports."""
+        signature (its output is deterministic in catalog state + params)
+        with overflow/explain capture-and-replay (``_cached_observed``)."""
         if self.child is None:
             return None
         epoch = (_epoch_signature(ctx, self.child), _params_key(ctx))
-
-        def build():
-            saved, ctx.overflow = ctx.overflow, False
-            n0 = len(ctx.explain)
-            batch = self.child.run(ctx)
-            ovf, ctx.overflow = ctx.overflow, saved
-            lines = ctx.explain[n0:]
-            del ctx.explain[n0:]
-            return batch, ovf, lines
-
-        batch, ovf, lines = ctx.runtime.cached(
-            ("child", self.spec.alias), epoch, build
+        return _cached_observed(
+            ctx, ("child", self.spec.alias), epoch,
+            lambda: self.child.run(ctx),
         )
-        ctx.overflow = ctx.overflow or ovf
-        ctx.explain.extend(lines)
-        return batch
 
     # -- anchor / mask preparation (paper §6.2 pushdown) -------------------
     def _start_positions(self, ctx, vb, R):
@@ -320,7 +338,18 @@ class PathScanExec(ExecNode):
             pos, found = view.id_index.lookup(
                 jnp.asarray([self._anchor_id(ctx, spec.start_anchor)], jnp.int32)
             )
-            return jnp.where(found, pos, -1), "const"
+            pos = jnp.where(found, pos, -1)
+            # per-lane const start + COLUMN end anchors have mismatched
+            # widths ([1] vs [child rows]); broadcast the const start to
+            # one lane per child row so both anchors align lane-for-lane
+            # (origin == arange, the same contract as a column start)
+            if (
+                R is not None
+                and spec.end_anchor
+                and spec.end_anchor[0] == "col"
+            ):
+                return jnp.broadcast_to(pos, (R.capacity,)), "rel"
+            return pos, "const"
         # §5.1.2: undefined start set = all vertices
         return jnp.arange(view.n_vertices, dtype=jnp.int32), "all"
 
@@ -644,6 +673,136 @@ class PathScanExec(ExecNode):
             result_capacity=eng.result_capacity,
             count_only=count_only,
         )
+
+
+# --------------------------------------------------------------------------
+# PathJoin — two PATHS sources joining like relations (lifts the
+# stacked-PATHS restrictions)
+# --------------------------------------------------------------------------
+@dataclass
+class PathJoinExec(ExecNode):
+    """Hash join of two path-producing subtrees on endpoint vertex ids.
+
+    The seeded stack (PathScan over PathScan) requires the upper path to
+    be start-anchored on a column of the plan below; this node is the
+    symmetric alternative for the cases that cannot seed (end-only and
+    const-start cross references): both sides execute independently and
+    their output batches join on the ``{alias}.{which}vertexid`` lanes
+    named by ``on`` — the same sort + binary-search + fanout-expansion
+    join relational inputs use, so a path set is just another relation.
+
+    ``build`` picks the sorted (build) side from the optimizer's
+    traversal-cardinality estimates, and ``capacity`` sizes the output
+    batch from the join estimate (never below the probe side's capacity,
+    so estimates can only widen the join; overflow is detected and
+    reported on the QueryResult). The whole joined batch is cached on the
+    plan's ``PlanRuntime`` keyed by the subtree's catalog-epoch signature
+    plus bound params — a warm prepared plan replays the join output
+    without recompiling or even re-running the traversals, and replays
+    the overflow/explain observations so cache warmth never changes what
+    a query reports."""
+
+    left: ExecNode
+    right: ExecNode
+    # [((left_alias, which), (right_alias, which)), ...]; first pair is
+    # the hash key, the rest post-join equality filters
+    on: List[tuple] = dfield(default_factory=list)
+    capacity: Optional[int] = None
+    build: str = "right"
+
+    def children(self):
+        return [self.left, self.right]
+
+    def label(self):
+        conds = " and ".join(
+            f"{la}.{lw} == {ra}.{rw}" for (la, lw), (ra, rw) in self.on
+        )
+        cap = f", cap={self.capacity}" if self.capacity else ""
+        return f"PathJoinExec({conds}, build={self.build}{cap})"
+
+    @staticmethod
+    def _key_col(alias: str, which: str) -> str:
+        return f"{alias}.{which}vertexid"
+
+    def run(self, ctx) -> O.RelBatch:
+        epoch = (_epoch_signature(ctx, self), _params_key(ctx))
+        key = ("pathjoin",) + tuple(
+            (la, lw, ra, rw) for (la, lw), (ra, rw) in self.on
+        )
+        return _cached_observed(ctx, key, epoch, lambda: self._join(ctx))
+
+    def _join(self, ctx) -> O.RelBatch:
+        lb = self.left.run(ctx)
+        rb = self.right.run(ctx)
+        (la, lw), (ra, rw) = self.on[0]
+        lkey, rkey = self._key_col(la, lw), self._key_col(ra, rw)
+        # estimates may widen the join output, never starve it below the
+        # probe side's width (the PR 3 overflow contract)
+        if self.build == "left":
+            cap = max(self.capacity or 0, rb.capacity)
+            joined, ovf = O.join(rb, lb, rkey, lkey, capacity=cap)
+        else:
+            cap = max(self.capacity or 0, lb.capacity)
+            joined, ovf = O.join(lb, rb, lkey, rkey, capacity=cap)
+        valid = joined.valid
+        for (la2, lw2), (ra2, rw2) in self.on[1:]:
+            valid = valid & (
+                joined.col(self._key_col(la2, lw2))
+                == joined.col(self._key_col(ra2, rw2))
+            )
+        ctx.overflow = ctx.overflow or bool(ovf)
+        ctx.explain.append(
+            f"path join: {lkey} == {rkey} (build={self.build})"
+        )
+        return joined.replace(valid=valid)
+
+
+@dataclass
+class PathDisjointExec(ExecNode):
+    """Cross-path vertex-disjointness filter (globally simple paths).
+
+    For each alias pair ``(a, b, allowed)`` the combined batch row
+    survives only if the two paths' materialized vertex lists share
+    exactly ``allowed`` vertices — the junction endpoints that the
+    composition's equalities entitle them to — and nothing else. Vertex
+    positions map to external ids per path (each path may traverse a
+    different graph view), padding lanes (-1) never match."""
+
+    child: ExecNode
+    pairs: List[tuple] = dfield(default_factory=list)
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        parts = ", ".join(f"{a}&{b} (allow {n})" for a, b, n in self.pairs)
+        return f"PathDisjointExec({parts})"
+
+    def _vert_ids(self, ctx, batch, alias):
+        col = f"{alias}._verts"
+        if col not in batch.cols:
+            raise NotImplementedError(
+                f"globally simple paths need materialized vertices for "
+                f"'{alias}' (physical "
+                f"{ctx.plan.specs[alias].physical!r} does not produce them)"
+            )
+        verts = batch.col(col)
+        view = ctx.engine.views[ctx.plan.specs[alias].graph].view
+        ids = jnp.take(view.v_ids, jnp.clip(verts, 0, view.n_vertices - 1))
+        return jnp.where(verts >= 0, ids, -1)
+
+    def run(self, ctx) -> O.RelBatch:
+        batch = self.child.run(ctx)
+        valid = batch.valid
+        for a, b, allowed in self.pairs:
+            ia = self._vert_ids(ctx, batch, a)
+            ib = self._vert_ids(ctx, batch, b)
+            hit = (ia[:, :, None] == ib[:, None, :]) & (
+                (ia >= 0)[:, :, None] & (ib >= 0)[:, None, :]
+            )
+            shared = jnp.sum(hit.astype(jnp.int32), axis=(1, 2))
+            valid = valid & (shared == allowed)
+        return batch.replace(valid=valid)
 
 
 # --------------------------------------------------------------------------

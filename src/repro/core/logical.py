@@ -25,7 +25,15 @@ DEFAULT_MAX_LEN = 6
 
 @dataclass
 class PathSpec:
-    """Constraints on one PATHS FROM-item, filled in by optimizer rules."""
+    """Constraints on one PATHS FROM-item, filled in by optimizer rules.
+
+    ``classify-predicates`` buckets WHERE conjuncts into anchors and
+    pushed predicate lists, ``path-length-inference`` (§6.1) resolves the
+    ``min_len``/``max_len`` window, and ``physical-pathscan`` (§6.3) picks
+    ``physical``. Anchors are ``('col', name) | ('const', v) |
+    ('param', name)`` tuples: a column start anchor seeds traversal lanes
+    from the anchor child's rows, const/param anchors resolve through the
+    view's id index at execution/bind time."""
 
     alias: str
     graph: str
@@ -78,6 +86,10 @@ class LogicalOp:
 
 @dataclass
 class TableScan(LogicalOp):
+    """Leaf scan of one relational table. ``filters`` holds single-table
+    WHERE conjuncts pushed down by ``classify-predicates`` (§6.2); they
+    compile to one fused mask program at execution time."""
+
     alias: str
     table: str
     filters: List[X.Expr] = dfield(default_factory=list)
@@ -89,6 +101,10 @@ class TableScan(LogicalOp):
 
 @dataclass
 class VertexScan(LogicalOp):
+    """Graph operator: vertices as extended tuples (§5.1.1) — the backing
+    vertex table's attributes plus topology-derived ``fanin``/``fanout``
+    and the vertex position, with tombstoned vertices masked out."""
+
     alias: str
     graph: str
     filters: List[X.Expr] = dfield(default_factory=list)
@@ -100,6 +116,10 @@ class VertexScan(LogicalOp):
 
 @dataclass
 class EdgeScan(LogicalOp):
+    """Graph operator: live edges of one graph view as rows of the backing
+    edge table (one row per stored edge; undirected views store one row
+    for both directions)."""
+
     alias: str
     graph: str
     filters: List[X.Expr] = dfield(default_factory=list)
@@ -126,6 +146,10 @@ class RelJoin(LogicalOp):
 
 @dataclass
 class HashJoin(LogicalOp):
+    """Binary equi-join produced by the ``join-ordering`` rule. Executes
+    as sort + vectorized binary search + fanout expansion (the TPU-native
+    hash-join replacement in ``operators.join``)."""
+
     left: LogicalOp
     right: LogicalOp
     left_key: str
@@ -146,6 +170,10 @@ class HashJoin(LogicalOp):
 
 @dataclass
 class CrossJoin(LogicalOp):
+    """Bounded cartesian product — the connectivity fallback when no
+    equi-join condition links a relation into the join tree (paper
+    Listing 3's ``Proteins Pr1, Proteins Pr2`` reachability form)."""
+
     left: LogicalOp
     right: LogicalOp
     right_alias: str = ""
@@ -157,6 +185,74 @@ class CrossJoin(LogicalOp):
     def label(self):
         cap = f", cap={self.capacity}" if self.capacity else ""
         return f"CrossJoin(+{self.right_alias}, bounded{cap})"
+
+
+@dataclass
+class PathJoin(LogicalOp):
+    """Hash join of two PATHS sources on endpoint vertex ids (§5.3, §6).
+
+    A stacked ``PathScan`` composes by *seeding*: the upper traversal's
+    lanes grow from the lower plan's output rows, which requires the upper
+    path to be start-anchored on a column of the plan below. ``PathJoin``
+    is the symmetric alternative: both sides plan and execute
+    independently, and their output batches combine like relations — a
+    hash join on the origin/endpoint vertex-id lanes named by ``on``.
+    This is what lifts the end-only and const-start stacked-PATHS
+    restrictions: an endpoint equality that cannot seed a traversal can
+    always join two traversals' outputs.
+
+    ``on`` holds one or more endpoint pairs ``((left_alias, which),
+    (right_alias, which))`` with ``which`` in ``{'start', 'end'}``; the
+    first pair is the hash key, the rest become post-join equality
+    filters. ``build`` names the side the executor sorts/builds
+    (``'left' | 'right'``), chosen by the optimizer from graph-statistics
+    traversal-cardinality estimates, which also size ``capacity`` (the
+    output batch width; overflow is detected and reported, never silently
+    truncated)."""
+
+    left: LogicalOp
+    right: LogicalOp
+    on: List[Tuple[Tuple[str, str], Tuple[str, str]]] = dfield(default_factory=list)
+    capacity: Optional[int] = None
+    est_rows: Optional[float] = None
+    build: str = "right"
+
+    def children(self):
+        return [self.left, self.right]
+
+    def label(self):
+        conds = " and ".join(
+            f"{la}.{lw} == {ra}.{rw}" for (la, lw), (ra, rw) in self.on
+        )
+        cap = f", cap={self.capacity}" if self.capacity else ""
+        est = f", est={self.est_rows:.0f}" if self.est_rows is not None else ""
+        return f"PathJoin({conds}, build={self.build}{est}{cap})"
+
+
+@dataclass
+class PathDisjoint(LogicalOp):
+    """Cross-path vertex-disjointness filter (globally simple paths).
+
+    Each PATHS source enumerates *internally* simple paths, but nothing
+    stops two composed sources from revisiting each other's vertices
+    across the composition boundary (stacked or ``PathJoin``-ed alike).
+    When the query asks for globally simple paths
+    (``Query.distinct_vertices()``), the ``distinct-vertices`` rewrite
+    injects this node above the composed path fragment. ``pairs`` carries
+    ``(alias_a, alias_b, allowed_overlap)`` per alias pair: the number of
+    junction vertices the two paths legitimately share (one per endpoint
+    equality linking them — the meeting point of the concatenated walk);
+    any additional shared vertex invalidates the row."""
+
+    child: LogicalOp
+    pairs: List[Tuple[str, str, int]] = dfield(default_factory=list)
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        parts = ", ".join(f"{a}&{b} (allow {n})" for a, b, n in self.pairs)
+        return f"PathDisjoint({parts})"
 
 
 @dataclass
@@ -179,6 +275,11 @@ class PathScan(LogicalOp):
 
 @dataclass
 class Filter(LogicalOp):
+    """Residual WHERE conjuncts. ``build_logical`` starts with every
+    conjunct here; ``classify-predicates`` drains the pushable ones into
+    scans/``PathSpec`` buckets and leaves cross-source residuals that must
+    see the combined batch."""
+
     child: LogicalOp
     predicates: List[X.Expr] = dfield(default_factory=list)
 
@@ -191,6 +292,10 @@ class Filter(LogicalOp):
 
 @dataclass
 class Project(LogicalOp):
+    """Root finalizer for non-aggregate queries: evaluates the SELECT list
+    against the combined batch and compacts valid rows into a
+    ``QueryResult`` (dictionary-encoded columns decode here)."""
+
     child: LogicalOp
     select_list: Dict[str, Any] = dfield(default_factory=dict)
 
@@ -204,6 +309,10 @@ class Project(LogicalOp):
 
 @dataclass
 class Aggregate(LogicalOp):
+    """Root finalizer for aggregate queries (COUNT/SUM/MIN/MAX over the
+    combined batch). COUNT(*)-only plans over a bare enumeration may be
+    fused into the traversal by ``aggregate-pushdown`` (§6.3)."""
+
     child: LogicalOp
     agg_select: Dict[str, tuple] = dfield(default_factory=dict)
 
@@ -217,6 +326,9 @@ class Aggregate(LogicalOp):
 
 @dataclass
 class Sort(LogicalOp):
+    """ORDER BY one key; invalid rows sort last so ``Limit`` above only
+    ever keeps valid rows."""
+
     child: LogicalOp
     key: str = ""
     descending: bool = False
@@ -230,6 +342,9 @@ class Sort(LogicalOp):
 
 @dataclass
 class Limit(LogicalOp):
+    """Keep the first ``n`` valid rows (rank over the validity mask — no
+    data movement; the batch stays fixed-capacity)."""
+
     child: LogicalOp
     n: int = 0
 
@@ -267,6 +382,14 @@ def _compact_label(n: LogicalOp) -> str:
     if isinstance(n, HashJoin):
         cap = f":cap{n.capacity}" if n.capacity else ""
         return f"HashJoin:{n.left_key}=={n.right_key}{cap}"
+    if isinstance(n, PathJoin):
+        conds = "&".join(
+            f"{la}.{lw}=={ra}.{rw}" for (la, lw), (ra, rw) in n.on
+        )
+        cap = f":cap{n.capacity}" if n.capacity else ""
+        return f"PathJoin:{conds}:build={n.build}{cap}"
+    if isinstance(n, PathDisjoint):
+        return f"PathDisjoint:{len(n.pairs)}"
     if isinstance(n, CrossJoin):
         return f"CrossJoin:+{n.right_alias}"
     if isinstance(n, RelJoin):

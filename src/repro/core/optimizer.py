@@ -7,12 +7,18 @@ rules, each of which appends structured events to the plan's trace:
   classify-predicates      WHERE conjuncts -> pushed scan filters, equi-join
                            conditions, per-path constraint buckets, residuals
   path-ordering            stack PathScans so column anchors referencing
-                           another PATHS source execute above their producer
-                           (lifts the old single-PATHS restriction)
+                           another PATHS source execute above their producer;
+                           paths that cannot seed (end-only / const-start
+                           cross refs) are pulled out for path-join
+  path-join                hash-join independently-planned PATHS sources on
+                           endpoint vertex ids, costed by graph statistics
+                           (lifts the stacked-PATHS restrictions)
   path-length-inference    §6.1 explicit Length predicates + implicit indexed
                            minima bound the traversal loop statically
   select-path-aggregates   SELECT-only aggregates ride in the path buffer
   physical-pathscan        §6.3 logical PathScan -> {enum, bfs, bfs_path, sssp}
+  distinct-vertices        globally simple paths: cross-path vertex-
+                           disjointness filter above the composition
   aggregate-pushdown       COUNT(*)-only plans fuse the count into traversal
   join-ordering            greedy equi-join chain with bounded cross-join
                            fallback; leftover conditions become residuals
@@ -156,6 +162,14 @@ class _State:
         self.filter_node: Optional[L.Filter] = None
         self.residuals: List[X.Expr] = []
         self.join_conds: List[Tuple[str, str]] = []
+        # cross-path endpoint equalities that could NOT seed a traversal
+        # (end-only refs, already-anchored starts); consumed by the
+        # path-join rule as hash-join conditions between PATHS sources.
+        # Each entry is ((alias, which), (alias, which)).
+        self.path_join_conds: List[Tuple[Tuple[str, str], Tuple[str, str]]] = []
+        # paths pulled out of the seeded stack by path-ordering, planned
+        # independently and attached back via PathJoin nodes
+        self.joined_paths: List[L.PathScan] = []
         self.scratch: Dict[str, _Scratch] = {}
         self._index(root)
         # _index walks top-down, but the PathScan stack is built bottom-up in
@@ -190,7 +204,17 @@ class _State:
 # rules — each is a named function st: _State -> None
 # --------------------------------------------------------------------------
 def rule_classify_predicates(st: _State):
-    """Split WHERE conjuncts across the model boundary (paper §5.3/§6.2)."""
+    """Split WHERE conjuncts across the model boundary (paper §5.3/§6.2).
+
+    Each conjunct is routed to the cheapest operator that can evaluate it:
+    single-table predicates push into their scan's filter list, two-column
+    equalities become equi-join conditions for ``join-ordering``,
+    path-indexed predicates (anchors, per-hop edge masks, vertex masks,
+    length bounds, path aggregates) absorb into the owning ``PathSpec``
+    so the traversal kernels evaluate them as pushed-down masks (§6.2),
+    and cross-path endpoint equalities either seed a stacked traversal or
+    become path-join conditions. Whatever cannot be pushed stays a
+    residual filter over the combined batch."""
     conjuncts = list(st.filter_node.predicates) if st.filter_node else []
     residuals: List[X.Expr] = []
     n_pushed = 0
@@ -337,8 +361,12 @@ def _classify_single_path(st: _State, cj, spec: L.PathSpec, residuals) -> bool:
 
 
 def _classify_cross_path(st: _State, cj, path_order: List[str]) -> bool:
-    """PS2.start.id == PS1.end.id — anchor the later PATHS source on the
-    earlier one's output vertex-id column (the cross-model sibling join)."""
+    """PS2.start.id == PS1.end.id — either anchor the consumer PATHS source
+    on the producer's output vertex-id column (the seeded cross-model
+    sibling join) or, when no traversal can be seeded from the equality
+    (end-only references, a start that is already const/param-anchored),
+    record it as a path-join condition for the ``path-join`` rule's hash
+    join on endpoint vertex ids."""
     if not (
         isinstance(cj, X.Cmp)
         and cj.op == "=="
@@ -354,9 +382,7 @@ def _classify_cross_path(st: _State, cj, path_order: List[str]) -> bool:
     # producer's output rows, so the consumer is the side referenced at
     # .start — regardless of FROM order (rule_path_ordering restacks the
     # producer below it). When both sides are .start the later FROM item
-    # consumes; an end/end reference cannot align origin lanes and stays a
-    # residual (the stacked-paths validation below rejects it if the
-    # consumer ends up unseeded).
+    # consumes.
     if l.which != "start" and r.which == "start":
         l, r = r, l
     elif l.which == "start" and r.which == "start":
@@ -364,21 +390,44 @@ def _classify_cross_path(st: _State, cj, path_order: List[str]) -> bool:
             l, r = r, l
     spec = st.spec(l.alias)
     anchor = ("col", f"{r.alias}.{r.which}vertexid")
-    if l.which != "start" or spec.start_anchor is not None:
-        return False
-    spec.start_anchor = anchor
+    if l.which == "start" and spec.start_anchor is None:
+        spec.start_anchor = anchor
+        st.note(
+            "classify-predicates",
+            f"cross-path anchor: {l.alias}.{l.which} <- "
+            f"{r.alias}.{r.which}vertexid",
+        )
+        return True
+    # end-only reference, or the start lane is already taken by a
+    # const/param anchor: the equality cannot seed lanes, but it CAN join
+    # two independently-executed traversals on their endpoint id columns
+    st.path_join_conds.append(((l.alias, l.which), (r.alias, r.which)))
     st.note(
         "classify-predicates",
-        f"cross-path anchor: {l.alias}.{l.which} <- {r.alias}.{r.which}vertexid",
+        f"cross-path endpoint equality {l.alias}.{l.which} == "
+        f"{r.alias}.{r.which} -> path-join condition",
     )
     return True
 
 
 def rule_path_ordering(st: _State):
-    """Topologically order stacked PathScans by column-anchor dependencies."""
+    """Order composed PATHS sources into a seeded stack plus joined leaves.
+
+    Stacked PathScans compose by *seeding* (§5.3): a scan start-anchored
+    on a column of the plan below it executes above that plan, growing one
+    traversal lane per producer row, so the dependency graph of column
+    anchors is topologically ordered here (cyclic anchor dependencies
+    cannot be seeded and raise). A path that is NOT column-start-anchored
+    cannot align origin lanes with a producer — historically a
+    ``NotImplementedError``; now, if an endpoint equality links it to the
+    rest of the composition, it is pulled out of the stack, planned as an
+    independent subtree, and handed to the ``path-join`` rule. Only fully
+    unrelated composition (no anchor, no endpoint equality — a cartesian
+    product of path sets) still raises."""
     if len(st.paths) < 2:
         return
     path_aliases = {p.alias for p in st.paths}
+    join_linked = {a for cond in st.path_join_conds for (a, _w) in cond}
 
     def deps(p: L.PathScan) -> set:
         out = set()
@@ -405,38 +454,311 @@ def rule_path_ordering(st: _State):
                 "cyclic PATHS anchor dependencies: "
                 + ", ".join(p.alias for p in pending)
             )
-    if [p.alias for p in ordered] != [p.alias for p in st.paths]:
+    # a stacked PathScan's output rows gather its child's columns through
+    # the origin lane, which is only aligned when the scan is seeded from a
+    # column of that child — anything else would silently pair unrelated
+    # rows. The stack keeps one bottom plus every column-start-anchored
+    # path; the rest execute independently and hash-join on endpoint ids
+    # (path-join rule) when an endpoint equality links them in.
+    #
+    # Bottom selection: a "loose" path (no column start anchor) with no
+    # endpoint equality MUST seed the stack (it cannot join). Otherwise
+    # the stack only needs a loose bottom when no column-anchored path
+    # grounds it already (a col anchor on a relational column, or on
+    # another grounded path, carries the stack by itself — a loose path
+    # above/below such a stack would pair unrelated origin lanes). When a
+    # loose bottom IS needed and statistics exist, the cheapest loose
+    # traversal seeds the stack so plan cost does not depend on FROM
+    # order — the expensive side becomes the probe of a hash join instead
+    # of an all-vertices seeded enumeration.
+    loose = [
+        p for p in ordered
+        if not (p.spec.start_anchor and p.spec.start_anchor[0] == "col")
+    ]
+    loose_aliases = {p.alias for p in loose}
+
+    def _dep_alias(p):
+        a = p.spec.start_anchor[1].split(".")[0]
+        return a if a in path_aliases else None  # None: relational column
+
+    grounded: set = set()
+    col_deps: set = set()
+    for p in ordered:
+        if p in loose:
+            continue
+        a = _dep_alias(p)
+        if a is None or a in grounded:
+            grounded.add(p.alias)
+        elif a in loose_aliases:
+            col_deps.add(a)  # a loose path other paths want to stack on
+
+    bottom = None
+    must = [p for p in loose if p.alias not in join_linked]
+    if must:
+        bottom = must[0]
+    elif loose and not grounded:
+        if st.stats is not None:
+            # prefer a loose path the column-anchored ones depend on,
+            # then the cheapest traversal
+            bottom = min(
+                loose,
+                key=lambda p: (
+                    p.alias not in col_deps,
+                    _estimate_path_rows(st, p),
+                    ordered.index(p),
+                ),
+            )
+            if bottom is not ordered[0]:
+                st.note(
+                    "path-ordering",
+                    f"stack bottom {bottom.alias} chosen by cost "
+                    f"(~{_estimate_path_rows(st, bottom):.0f} row(s))",
+                )
+        else:
+            bottom = next(
+                (p for p in loose if p.alias in col_deps), loose[0]
+            )
+    stacked = [bottom] if bottom is not None else []
+    joined: List[L.PathScan] = []
+    joined_aliases: set = set()
+    for p in ordered:
+        if p is bottom:
+            continue
+        sa = p.spec.start_anchor
+        if sa and sa[0] == "col":
+            a = sa[1].split(".")[0]
+            if a in joined_aliases:
+                # the anchor column lives on the join side of the plan, so
+                # it cannot flow up the seeded stack: demote the anchor to
+                # a path-join condition (start joins the referenced lane)
+                _, _, cname = sa[1].partition(".")
+                which = "end" if cname.startswith("end") else "start"
+                st.path_join_conds.append(((p.alias, "start"), (a, which)))
+                p.spec.start_anchor = None
+                st.note(
+                    "path-ordering",
+                    f"{p.alias}: start anchor on joined source {a} demoted "
+                    "to path-join condition",
+                )
+                joined.append(p)
+                joined_aliases.add(p.alias)
+            else:
+                stacked.append(p)
+        elif p.alias in join_linked:
+            joined.append(p)
+            joined_aliases.add(p.alias)
+        else:
+            raise NotImplementedError(
+                f"stacked PATHS source '{p.alias}' must be start-anchored "
+                "on a column of the plan below it (e.g. "
+                f"{p.alias}.start.id == OTHER.end.id) or linked to another "
+                "PATHS source by an endpoint equality (path join); fully "
+                "unrelated composition is not supported"
+            )
+    if [p.alias for p in stacked] != [
+        p.alias for p in st.paths if p not in joined
+    ]:
         st.note(
             "path-ordering",
-            "PathScan stack reordered: " + " -> ".join(p.alias for p in ordered),
+            "PathScan stack reordered: " + " -> ".join(p.alias for p in stacked),
+        )
+    if joined:
+        st.note(
+            "path-ordering",
+            "planned independently for path join: "
+            + ", ".join(p.alias for p in joined),
         )
     # rebuild the stack bottom-up over the relational fragment (the builder
     # stacks FROM-order with paths[0] at the bottom, so its child is the
     # relational fragment or None)
     node: Optional[L.LogicalOp] = st.paths[0].child
-    for p in ordered:
+    for p in stacked:
         p.child = node
         node = p
+    for p in joined:
+        p.child = None
     if st.filter_node is not None:
         st.filter_node.child = node
-    st.paths = ordered
-    # a stacked PathScan's output rows gather its child's columns through
-    # the origin lane, which is only aligned when the scan is seeded from a
-    # column of that child — anything else would silently pair unrelated
-    # rows, so reject it here
-    for p in st.paths[1:]:
-        sa = p.spec.start_anchor
-        if not (sa and sa[0] == "col"):
-            raise NotImplementedError(
-                f"stacked PATHS source '{p.alias}' must be start-anchored "
-                "on a column of the plan below it (e.g. "
-                f"{p.alias}.start.id == OTHER.end.id); end-only or "
-                "unanchored composition is not supported yet"
+    st.paths = stacked + joined
+    st.joined_paths = joined
+
+
+def _estimate_path_rows(st: _State, p: L.PathScan, n_sources=None) -> float:
+    """Traversal-cardinality estimate for one PathScan from live graph
+    statistics: ``n_sources * sum(F^len)`` over the (scratch-refined)
+    length window, with F the view's average fan-out. Const/param anchors
+    contribute one source lane, an unanchored start every vertex."""
+    spec = p.spec
+    gs = st.stats.graph_stats(spec.graph)
+    F = max(float(gs.avg_fan_out), 1.0)
+    sc = st.scratch.get(spec.alias)
+    lo = sc.len_lo if sc and sc.len_lo is not None else max(spec.min_len, 1)
+    hi = sc.len_hi if sc and sc.len_hi is not None else spec.max_len
+    hi = max(min(hi, spec.max_len), lo)
+    if n_sources is None:
+        sa = spec.start_anchor
+        if sa is None:
+            n_sources = float(max(gs.n_vertices, 1))
+        elif sa[0] in ("const", "param"):
+            n_sources = 1.0
+        else:
+            n_sources = 32.0  # column anchor of unknown producer width
+    total = 0.0
+    for ln in range(lo, hi + 1):
+        total += F ** ln
+        if total > float(1 << 20):
+            break
+    return min(max(n_sources * total, 1.0), float(1 << 20))
+
+
+def _estimate_tree_rows(st: _State, node) -> float:
+    """Output-cardinality estimate of an already-ordered plan fragment
+    (seeded path stacks over relational fragments, prior PathJoins)."""
+    if isinstance(node, L.PathScan):
+        n_src = None
+        if node.child is not None:
+            sa = node.spec.start_anchor
+            if sa and sa[0] == "col":
+                n_src = _estimate_tree_rows(st, node.child)
+        return _estimate_path_rows(st, node, n_sources=n_src)
+    if isinstance(node, L.PathJoin):
+        return float(node.est_rows) if node.est_rows else 1024.0
+    if isinstance(node, (L.TableScan, L.VertexScan, L.EdgeScan)):
+        return _estimate_scan_rows(st, node)
+    if isinstance(node, L.RelJoin):
+        out = 1.0
+        for c in node.inputs:
+            out = min(out * _estimate_tree_rows(st, c), float(1 << 20))
+        return out
+    kids = node.children()
+    return _estimate_tree_rows(st, kids[0]) if kids else 1024.0
+
+
+def rule_path_join(st: _State):
+    """Attach independently-planned PATHS sources via endpoint hash joins.
+
+    This is the operator that lifts the stacked-PATHS restrictions (and
+    the last structural asymmetry between graph and relational sources in
+    the plan IR): an endpoint equality that cannot *seed* a traversal —
+    ``P2.end.id == P1.end.id`` (end-only), or ``P2.start.id == P1.end.id``
+    when P2's start lane is already const/param-anchored — becomes a
+    ``PathJoin`` node that hash-joins the two traversal outputs' endpoint
+    vertex-id lanes, exactly as relational inputs join (in the spirit of
+    the converged relational-graph cost framework of Lou et al.). With a
+    statistics provider, both sides are costed via ``graph_stats``
+    traversal-cardinality estimates: the smaller side becomes the build
+    (sorted) side and the join output capacity is sized from the estimate
+    (overflow is detected and reported, never silent). Equalities whose
+    two sides already combine inside one seeded stack demote to residual
+    filters instead."""
+    if not st.path_join_conds and not st.joined_paths:
+        return
+    joined_aliases = {p.alias for p in st.joined_paths}
+    placed = {p.alias for p in st.paths} - joined_aliases
+    conds = list(st.path_join_conds)
+
+    def demote(cond):
+        (la, lw), (ra, rw) = cond
+        e = X.Cmp(
+            "==",
+            Q.PathVertexAttr(la, lw, "id"),
+            Q.PathVertexAttr(ra, rw, "id"),
+        )
+        st.residuals.append(e)
+        st.note(
+            "path-join",
+            f"endpoint equality {la}.{lw} == {ra}.{rw} combines inside one "
+            "seeded stack -> residual filter",
+        )
+
+    # both sides seeded in the same stack: the equality filters rows that
+    # already share origin lanes; no join node needed
+    for cond in list(conds):
+        (la, _lw), (ra, _rw) = cond
+        if la in placed and ra in placed:
+            conds.remove(cond)
+            demote(cond)
+
+    node = st.filter_node.child  # top of the seeded stack
+    pending = list(st.joined_paths)
+    while pending:
+        progressed = False
+        for p in list(pending):
+            mine = [
+                c for c in conds
+                if (c[0][0] == p.alias and c[1][0] in placed)
+                or (c[1][0] == p.alias and c[0][0] in placed)
+            ]
+            if not mine:
+                continue
+            # normalize each pair to ((tree side), (joined-path side));
+            # the first pair is the hash key, the rest post-join filters
+            on = []
+            for c in mine:
+                (a0, w0), (a1, w1) = c
+                on.append(((a1, w1), (a0, w0)) if a0 == p.alias else c)
+                conds.remove(c)
+            est_rows = cap = None
+            build = "right"
+            if st.stats is not None:
+                l_est = _estimate_tree_rows(st, node)
+                r_est = _estimate_path_rows(st, p)
+                (la, _), (ra, _) = on[0]
+                d = max(
+                    st.stats.graph_stats(st.spec(la).graph).n_vertices,
+                    st.stats.graph_stats(st.spec(ra).graph).n_vertices,
+                    1,
+                )
+                est_rows = max(l_est * r_est / d, 1.0)
+                cap = _pow2_at_least(4.0 * est_rows)
+                build = "left" if l_est < r_est else "right"
+                st.note(
+                    "path-join",
+                    f"path join + {p.alias} on "
+                    + " and ".join(
+                        f"{a}.{w} == {b}.{v}" for (a, w), (b, v) in on
+                    )
+                    + f" (left~{l_est:.0f} x right~{r_est:.0f}, est "
+                    f"{est_rows:.0f} row(s), build={build}, capacity {cap})",
+                )
+            else:
+                st.note(
+                    "path-join",
+                    f"path join + {p.alias} on "
+                    + " and ".join(
+                        f"{a}.{w} == {b}.{v}" for (a, w), (b, v) in on
+                    ),
+                )
+            node = L.PathJoin(
+                left=node, right=p, on=on, capacity=cap,
+                est_rows=est_rows, build=build,
             )
+            placed.add(p.alias)
+            pending.remove(p)
+            progressed = True
+        if not progressed:
+            raise NotImplementedError(
+                "PATHS source(s) "
+                + ", ".join(p.alias for p in pending)
+                + " have no endpoint equality linking them to the rest of "
+                "the composition; an unrelated cartesian product of path "
+                "sets is not supported"
+            )
+    for cond in conds:  # defensive: equalities left after every attach
+        demote(cond)
+    st.filter_node.child = node
 
 
 def rule_path_length_inference(st: _State):
-    """§6.1: bound each traversal loop statically; clamp contradictions."""
+    """§6.1: bound each traversal loop statically; clamp contradictions.
+
+    Explicit ``PS.Length`` predicates collapse to a ``[min_len, max_len]``
+    window, and positionally-indexed edge predicates imply minima
+    (``Edges[5..*]`` forces position 5 to exist, so length >= 6). The
+    static window sizes the unrolled expansion loop and its buffers
+    instead of a dynamic fixpoint; contradictory bounds clamp max up to
+    min (producing an empty traversal) rather than erroring, matching
+    relational predicate semantics."""
     multi = len(st.paths) > 1
     for p in st.paths:
         spec, sc = p.spec, st.scratch[p.alias]
@@ -466,7 +788,14 @@ def rule_path_length_inference(st: _State):
 
 
 def rule_select_path_aggregates(st: _State):
-    """Aggregates appearing only in SELECT still ride in the path buffer."""
+    """Aggregates appearing only in SELECT still ride in the path buffer.
+
+    ``classify-predicates`` registers per-path aggregates (``sum(PS.Edges
+    .w)``) that appear in WHERE; this rule walks the SELECT list so an
+    aggregate that is merely *projected* is also accumulated hop-by-hop in
+    the traversal's aggregate lanes (§4) instead of re-deriving it from
+    materialized edge lists afterwards. ``PathString`` projections flag
+    the spec so the witness path is materialized."""
     q = st.query
     for e in list(q.select_list.values()) + [
         v[1] for v in q.agg_select.values() if v[1] is not None
@@ -485,7 +814,16 @@ def rule_select_path_aggregates(st: _State):
 
 
 def rule_physical_pathscan(st: _State):
-    """§6.3: choose the physical traversal operator per PathScan."""
+    """§6.3: choose the physical traversal operator per PathScan.
+
+    The logical PathScan lowers to one of four physical forms: ``sssp``
+    when a SHORTESTPATH weight hint is present; ``bfs`` (frontier
+    reachability, no path materialization) for the both-ends-anchored
+    pattern with no per-path state; ``bfs_path`` (unit-weight SSSP with
+    parent pointers) when that pattern also projects the witness path;
+    and ``enum`` (bounded simple-path enumeration) for everything that
+    needs per-path rows — aggregates, positional edge predicates, loops.
+    Enumeration requires at least one hop, so a zero minimum clamps up."""
     multi = len(st.paths) > 1
     for p in st.paths:
         spec = p.spec
@@ -521,9 +859,74 @@ def rule_physical_pathscan(st: _State):
         st.note("physical-pathscan", f"{tag}physical PathScan: {spec.physical}")
 
 
+def rule_distinct_vertices(st: _State):
+    """Globally simple paths across composed PATHS sources.
+
+    Each PATHS source enumerates *internally* simple paths, but stacked or
+    path-joined sources may revisit each other's vertices across the
+    composition boundary (the concatenated walk ``1-3-1`` is two perfectly
+    simple 1-hop paths). When the query asks for globally simple paths
+    (``Query.distinct_vertices()``), this rewrite injects a
+    ``PathDisjoint`` filter above the composed path fragment: a row
+    survives only if every pair of its paths shares exactly the junction
+    vertices that endpoint equalities entitle them to (one per equality)
+    and nothing else. Plain-``bfs`` reachability scans do not materialize
+    their vertex lists, so any involved one is rewritten to enumeration
+    first."""
+    q = st.query
+    if not getattr(q, "global_simple", False) or len(st.paths) < 2:
+        return
+    for p in st.paths:
+        if p.spec.physical == "bfs":
+            p.spec.physical = "enum"
+            if p.spec.min_len < 1:
+                p.spec.min_len = 1
+                p.spec.max_len = max(p.spec.max_len, 1)
+            st.note(
+                "distinct-vertices",
+                f"{p.alias}: bfs -> enum (globally simple paths need "
+                "materialized vertex lists)",
+            )
+    # allowed overlap per alias pair = number of endpoint equalities
+    # linking the two (seeding cross-path anchors + path-join conditions):
+    # those junction vertices are one shared vertex of the concatenated
+    # walk, not a revisit
+    aliases = [p.alias for p in st.paths]
+    alias_set = set(aliases)
+    links: Dict[frozenset, int] = {}
+    for p in st.paths:
+        for anchor in (p.spec.start_anchor, p.spec.end_anchor):
+            if anchor and anchor[0] == "col":
+                a, _, cname = anchor[1].partition(".")
+                if a in alias_set and a != p.alias and cname.endswith("vertexid"):
+                    k = frozenset((p.alias, a))
+                    links[k] = links.get(k, 0) + 1
+    for (la, _lw), (ra, _rw) in st.path_join_conds:
+        k = frozenset((la, ra))
+        links[k] = links.get(k, 0) + 1
+    pairs = []
+    for i in range(len(aliases)):
+        for j in range(i + 1, len(aliases)):
+            k = frozenset((aliases[i], aliases[j]))
+            pairs.append((aliases[i], aliases[j], links.get(k, 0)))
+    st.filter_node.child = L.PathDisjoint(
+        child=st.filter_node.child, pairs=pairs
+    )
+    st.note(
+        "distinct-vertices",
+        "cross-path vertex-disjointness filter injected: "
+        + ", ".join(f"{a}&{b} (allow {n})" for a, b, n in pairs),
+    )
+
+
 def rule_aggregate_pushdown(st: _State):
-    """COUNT(*)-only plans over a bare enumeration fuse the count into the
-    traversal (no PathSet materialization)."""
+    """COUNT(*)-only plans fuse the count into the traversal (§6.3).
+
+    When the whole query is ``SELECT COUNT(*)`` over one unfiltered path
+    enumeration (no relational scans, no residuals, no end constraints),
+    the executor never materializes a PathSet: the traversal's emit step
+    counts matches in-register (``count_only``), so counting queries run
+    at kernel speed regardless of how many paths exist."""
     q = st.query
     if (
         len(st.paths) == 1
@@ -759,6 +1162,14 @@ def _replace_child(node: L.LogicalOp, old: L.LogicalOp, new: L.LogicalOp):
 
 
 def rule_traversal_backend(st: _State):
+    """Record per-query traversal-backend pins in the plan trace.
+
+    A query may request a specific TraversalEngine backend (``xla_coo``,
+    ``pallas_frontier``, ``reference``); the pin is carried on the spec
+    and *resolved* at execution time against live view statistics (the
+    auto density policy), because the right backend depends on state the
+    optimizer should not freeze — frontier width, edge count, packing
+    cache warmth. The rule only notes the request so EXPLAIN shows it."""
     multi = len(st.paths) > 1
     for p in st.paths:
         if p.spec.backend is not None:
@@ -772,9 +1183,11 @@ def rule_traversal_backend(st: _State):
 RULE_PIPELINE = (
     ("classify-predicates", rule_classify_predicates),
     ("path-ordering", rule_path_ordering),
+    ("path-join", rule_path_join),
     ("path-length-inference", rule_path_length_inference),
     ("select-path-aggregates", rule_select_path_aggregates),
     ("physical-pathscan", rule_physical_pathscan),
+    ("distinct-vertices", rule_distinct_vertices),
     ("aggregate-pushdown", rule_aggregate_pushdown),
     ("join-ordering", rule_join_ordering),
     ("traversal-backend", rule_traversal_backend),
@@ -851,6 +1264,13 @@ def _lower(node: L.LogicalOp) -> "E.ExecNode":
     if isinstance(node, L.PathScan):
         child = _lower(node.child) if node.child is not None else None
         return E.PathScanExec(node.spec, child)
+    if isinstance(node, L.PathJoin):
+        return E.PathJoinExec(
+            _lower(node.left), _lower(node.right), on=list(node.on),
+            capacity=node.capacity, build=node.build,
+        )
+    if isinstance(node, L.PathDisjoint):
+        return E.PathDisjointExec(_lower(node.child), list(node.pairs))
     if isinstance(node, L.Filter):
         child = _lower(node.child)
         if not node.predicates:

@@ -52,8 +52,12 @@ def plan_query(query: Q.Query, catalog) -> Plan:
     paths_items = [f for f in query.froms if f.kind == "paths"]
     if len(paths_items) > 1:
         raise NotImplementedError(
-            "the flat Plan shape holds a single PathSpec; use GRFusion.plan "
-            "for multi-PATHS operator trees"
+            "the flat Plan summary holds a single PathSpec and cannot "
+            "represent multi-PATHS operator trees (stacked PathScans / "
+            "PathJoin). Use GRFusion.explain(query) for the typed plan, "
+            "GRFusion.prepare(query) to plan once and re-execute, or "
+            "GRFusion.run(query) to execute directly — see README.md and "
+            "docs/architecture.md"
         )
     phys = optimize(query, catalog)
     spec = next(iter(phys.specs.values())) if phys.specs else None

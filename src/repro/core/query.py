@@ -177,6 +177,7 @@ class Query:
     bf_hint: Optional[str] = None  # 'bfs' | 'dfs' traversal hint (paper §6.3)
     max_path_len: Optional[int] = None  # engine default applies when unset
     backend: Optional[str] = None  # TraversalEngine backend; None = default
+    global_simple: bool = False  # DISTINCT VERTEXES across composed PATHS
 
     def from_table(self, name, alias=None):
         self.froms.append(FromItem("table", name, alias or name))
@@ -229,6 +230,18 @@ class Query:
 
     def hint_max_length(self, n: int):
         self.max_path_len = n
+        return self
+
+    def distinct_vertices(self):
+        """Request *globally* simple paths: each PATHS source enumerates
+        internally simple paths, but composed sources (stacked or
+        path-joined) may revisit each other's vertices across the
+        composition boundary. This flag makes the optimizer's
+        ``distinct-vertices`` rewrite inject a cross-path
+        vertex-disjointness filter above the composition, so the
+        concatenated walk visits every vertex at most once (junction
+        vertices shared by an endpoint equality excepted)."""
+        self.global_simple = True
         return self
 
     def traversal_backend(self, name: str):

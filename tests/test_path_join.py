@@ -1,0 +1,605 @@
+"""Path–path hash join (PathJoin) — the lifted stacked-PATHS cases.
+
+Every result here is checked against a numpy/python brute force: enumerate
+all simple paths of the bounded length window per PATHS source, join the
+enumerations on the queried endpoint equality, and compare row sets. The
+lifted cases are exactly the ones the optimizer used to reject with
+NotImplementedError (ROADMAP "Open items"):
+
+  * end-only cross references   (P2.end.id == P1.end.id)
+  * const-start upper paths     (P2.start.id == c AND P2.start.id == P1.end.id)
+  * mismatched per-lane anchor widths (const start + column end anchors)
+  * cross-path simplicity       (Query.distinct_vertices() globally simple)
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import executor as EX
+from repro.core.engine import GRFusion
+from repro.core.query import Query, P, col, param
+
+BACKENDS = ("xla_coo", "pallas_frontier", "reference")
+
+# undirected edge list of the fixture graph (1-3, 2-3, 3-4, 4-5)
+EDGES = [(1, 3), (2, 3), (3, 4), (4, 5)]
+VERTS = [1, 2, 3, 4, 5]
+
+
+@pytest.fixture
+def social():
+    eng = GRFusion()
+    eng.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "fName": np.array(["Edy", "Jones", "Bill", "Ann", "Cara"]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=8)
+    eng.create_table("Relationships", {
+        "relId": np.array([1, 2, 3, 4]),
+        "uId1": np.array([e[0] for e in EDGES]),
+        "uId2": np.array([e[1] for e in EDGES]),
+        "startDate": np.array([20090110, 20081231, 20100101, 19990101]),
+    }, capacity=16)
+    eng.create_graph_view(
+        "SocialNetwork", vertexes="Users", edges="Relationships",
+        v_id="uId", e_src="uId1", e_dst="uId2",
+        e_attrs={"sDate": "startDate"},
+        directed=False,
+    )
+    return eng
+
+
+# ------------------------------------------------------------ brute force
+def _adj():
+    adj = {v: set() for v in VERTS}
+    for a, b in EDGES:
+        adj[a].add(b)
+        adj[b].add(a)
+    return adj
+
+
+def brute_paths(lo, hi, start=None):
+    """All simple paths as vertex-id tuples with lo <= hops <= hi."""
+    adj = _adj()
+    out = []
+    starts = [start] if start is not None else VERTS
+    stack = [(s,) for s in starts]
+    while stack:
+        p = stack.pop()
+        if lo <= len(p) - 1 <= hi and len(p) > 1:
+            out.append(p)
+        if len(p) - 1 < hi:
+            for n in adj[p[-1]]:
+                if n not in p:
+                    stack.append(p + (n,))
+    return out
+
+
+def brute_join(lhs, rhs, lkey, rkey, *, distinct_allow=None):
+    """Nested-loop join of two path enumerations on endpoint equality.
+
+    ``lkey``/``rkey`` pick the endpoint: 0 = start vertex, -1 = end
+    vertex. ``distinct_allow`` (int) keeps only pairs sharing exactly
+    that many vertices — the brute-force form of the globally-simple
+    ``distinct-vertices`` filter."""
+    out = []
+    for a, b in itertools.product(lhs, rhs):
+        if a[lkey] != b[rkey]:
+            continue
+        if distinct_allow is not None and len(set(a) & set(b)) != distinct_allow:
+            continue
+        out.append((a, b))
+    return out
+
+
+def brute_dist(src):
+    """BFS hop distances from ``src`` (unreachable = None)."""
+    adj = _adj()
+    dist = {src: 0}
+    frontier = [src]
+    while frontier:
+        nxt = []
+        for v in frontier:
+            for n in adj[v]:
+                if n not in dist:
+                    dist[n] = dist[v] + 1
+                    nxt.append(n)
+        frontier = nxt
+    return dist
+
+
+def _plan_has(plan, node_type):
+    stack = [plan.root]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, node_type):
+            return True
+        stack.extend(n.children())
+    return False
+
+
+# ------------------------------------------------------- end-only cross ref
+def test_end_only_cross_ref_matches_brute_force(social):
+    """P2.end.id == P1.end.id — neither side can seed the other; the plan
+    hash-joins the two enumerations on their end-vertex lanes."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.end.id == P1.end.id) & (P2.length == 1))
+         .select(p1_end=P1.end.id, p2_start=P2.start.id))
+    plan = social.explain(q)
+    assert _plan_has(plan, EX.PathJoinExec)
+    assert any(e.rule == "path-join" for e in plan.trace)
+
+    expected = sorted(
+        (a[-1], b[0])
+        for a, b in brute_join(
+            brute_paths(1, 1, start=1), brute_paths(1, 1), -1, -1
+        )
+    )
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b))
+        for a, b in zip(r.columns["p1_end"], r.columns["p2_start"])
+    )
+    assert got == expected and expected  # non-vacuous
+
+
+def test_end_only_longer_windows_match_brute_force(social):
+    """Same join with a [1,2] window on both sides — many-row case."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 2) & (P1.length <= 2)
+                & (P2.end.id == P1.end.id) & (P2.length <= 2))
+         .select(p1_end=P1.end.id, p2_start=P2.start.id, p2_len=P2.length))
+    expected = sorted(
+        (a[-1], b[0], len(b) - 1)
+        for a, b in brute_join(
+            brute_paths(1, 2, start=2), brute_paths(1, 2), -1, -1
+        )
+    )
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b), int(c))
+        for a, b, c in zip(
+            r.columns["p1_end"], r.columns["p2_start"], r.columns["p2_len"]
+        )
+    )
+    assert got == expected and len(expected) > 5
+
+
+# -------------------------------------------------- const-start upper path
+def test_const_start_upper_path_matches_brute_force(social):
+    """P2 carries a const start anchor AND a cross-path start equality:
+    the anchor seeds P2's traversal, the equality joins it to P1."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.start.id == 3)
+                & (P2.start.id == P1.end.id) & (P2.length == 1))
+         .select(mid=P1.end.id, end=P2.end.id))
+    plan = social.explain(q)
+    assert _plan_has(plan, EX.PathJoinExec)
+    assert plan.specs["P2"].start_anchor == ("const", 3)
+
+    expected = sorted(
+        (b[0], b[-1])
+        for a, b in brute_join(
+            brute_paths(1, 1, start=1), brute_paths(1, 1, start=3), -1, 0
+        )
+    )
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b)) for a, b in zip(r.columns["mid"], r.columns["end"])
+    )
+    assert got == expected and expected
+
+    # contradicting const start (4 != P1's only end 3) matches nothing
+    q_empty = (Query()
+               .from_paths("SocialNetwork", "P1")
+               .from_paths("SocialNetwork", "P2")
+               .where((P1.start.id == 1) & (P1.length == 1)
+                      & (P2.start.id == 4)
+                      & (P2.start.id == P1.end.id) & (P2.length == 1))
+               .select(end=P2.end.id))
+    assert social.run(q_empty).count == 0
+
+
+def test_path_join_above_relational_fragment(social):
+    """The seeded stack below the join may itself sit on relational scans;
+    the joined batch carries the relational columns through."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_table("Users", "U")
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((col("U.Job") == "Lawyer")
+                & (P1.start.id == col("U.uId")) & (P1.length == 1)
+                & (P2.end.id == P1.end.id) & (P2.length == 1))
+         .select(lawyer=col("U.fName"), p2_start=P2.start.id))
+    lawyers = {1: "Edy", 3: "Bill"}
+    expected = sorted(
+        (lawyers[a[0]], b[0])
+        for u in lawyers
+        for a, b in brute_join(
+            brute_paths(1, 1, start=u), brute_paths(1, 1), -1, -1
+        )
+    )
+    r = social.run(q)
+    got = sorted(
+        (str(a), int(b))
+        for a, b in zip(r.columns["lawyer"], r.columns["p2_start"])
+    )
+    assert got == expected and len(expected) > 3
+
+
+# ------------------------------------- mismatched per-lane anchor widths
+def test_const_start_with_column_end_anchors(social):
+    """BFS PathScan with a [1]-wide const start and [S]-wide column end
+    anchors used to assume both anchors came from the same child batch;
+    the start lane now broadcasts to one lane per child row."""
+    PS = P("PS")
+    q = (Query()
+         .from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where((col("U.uId") > 1)
+                & (PS.start.id == 1) & (PS.end.id == col("U.uId"))
+                & (PS.length <= 4))
+         .select(dst=col("U.uId"), hops=col("PS.length")))
+    plan = social.explain(q)
+    assert plan.specs["PS"].physical == "bfs"
+    dist = brute_dist(1)
+    expected = sorted((v, dist[v]) for v in VERTS if v > 1 and v in dist)
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b)) for a, b in zip(r.columns["dst"], r.columns["hops"])
+    )
+    assert got == expected
+
+
+def test_const_start_column_end_bit_identical_across_backends(social):
+    PS = P("PS")
+    results = []
+    for b in BACKENDS:
+        q = (Query()
+             .from_table("Users", "U").from_paths("SocialNetwork", "PS")
+             .where((PS.start.id == 2) & (PS.end.id == col("U.uId"))
+                    & (PS.length <= 4))
+             .select(dst=col("U.uId"), hops=col("PS.length"))
+             .traversal_backend(b))
+        r = social.run(q)
+        results.append(sorted(
+            (int(a), int(h))
+            for a, h in zip(r.columns["dst"], r.columns["hops"])
+        ))
+    assert results[0] == results[1] == results[2]
+    dist = brute_dist(2)
+    # default min_len is 1, so the 0-hop self distance is excluded
+    assert results[0] == sorted(
+        (v, d) for v, d in dist.items() if 1 <= d <= 4
+    )
+
+
+def test_lifted_queries_bit_identical_across_backends(social):
+    """The lifted join cases must agree bit-for-bit whichever traversal
+    backend executes the seeded side."""
+    P1, P2 = P("P1"), P("P2")
+    results = []
+    for b in BACKENDS:
+        q = (Query()
+             .from_paths("SocialNetwork", "P1")
+             .from_paths("SocialNetwork", "P2")
+             .where((P1.start.id == 1) & (P1.length <= 2)
+                    & (P2.end.id == P1.end.id) & (P2.length == 1))
+             .select(p1_end=P1.end.id, p2_start=P2.start.id)
+             .traversal_backend(b))
+        r = social.run(q)
+        results.append(sorted(
+            (int(a), int(c))
+            for a, c in zip(r.columns["p1_end"], r.columns["p2_start"])
+        ))
+    assert results[0] == results[1] == results[2] and results[0]
+
+
+# ------------------------------------------------------ distinct-vertices
+def test_distinct_vertices_on_stacked_composition(social):
+    """Stacked PATHS revisit vertices across the join boundary (1-3-1);
+    distinct_vertices() filters the concatenated walk down to globally
+    simple ones, matching a single 2-hop enumeration."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.start.id == P1.end.id) & (P2.length == 1))
+         .distinct_vertices()
+         .select(end=P2.end.id))
+    plan = social.explain(q)
+    assert _plan_has(plan, EX.PathDisjointExec)
+    assert any(e.rule == "distinct-vertices" for e in plan.trace)
+    expected = sorted(
+        b[-1]
+        for a, b in brute_join(
+            brute_paths(1, 1, start=1), brute_paths(1, 1), -1, 0,
+            distinct_allow=1,
+        )
+    )
+    r = social.run(q)
+    assert sorted(int(x) for x in r.columns["end"]) == expected
+    # cross-check: globally simple 1+1 stitching == simple 2-hop enumeration
+    assert expected == sorted(p[-1] for p in brute_paths(2, 2, start=1))
+    # and WITHOUT the flag the revisit row (1-3-1) is admitted
+    q_loose = (Query()
+               .from_paths("SocialNetwork", "P1")
+               .from_paths("SocialNetwork", "P2")
+               .where((P1.start.id == 1) & (P1.length == 1)
+                      & (P2.start.id == P1.end.id) & (P2.length == 1))
+               .select(end=P2.end.id))
+    assert social.run(q_loose).count == len(expected) + 1
+
+
+def test_distinct_vertices_on_path_join(social):
+    """Globally simple filtering above a PathJoin: the junction endpoint
+    is the only vertex the two paths may share."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 1) & (P1.length == 2)
+                & (P2.end.id == P1.end.id) & (P2.length == 1))
+         .distinct_vertices()
+         .select(p2_start=P2.start.id, p2_end=P2.end.id))
+    plan = social.explain(q)
+    assert _plan_has(plan, EX.PathJoinExec)
+    assert _plan_has(plan, EX.PathDisjointExec)
+    expected = sorted(
+        (b[0], b[-1])
+        for a, b in brute_join(
+            brute_paths(2, 2, start=1), brute_paths(1, 1), -1, -1,
+            distinct_allow=1,
+        )
+    )
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b))
+        for a, b in zip(r.columns["p2_start"], r.columns["p2_end"])
+    )
+    assert got == expected and expected
+
+
+def test_distinct_vertices_rewrites_bfs_to_enum(social):
+    """A both-ends-anchored path would pick plain bfs, which materializes
+    no vertex list; under distinct_vertices() it must fall back to
+    enumeration and still answer correctly."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 2) & (P1.end.id == 4) & (P1.length <= 3)
+                & (P2.start.id == P1.end.id) & (P2.length == 1))
+         .distinct_vertices()
+         .select(p1_len=P1.length, end=P2.end.id))
+    plan = social.explain(q)
+    assert plan.specs["P1"].physical == "enum"
+    assert any(
+        "bfs -> enum" in e.message for e in plan.trace
+        if e.rule == "distinct-vertices"
+    )
+    lhs = [p for p in brute_paths(1, 3, start=2) if p[-1] == 4]
+    expected = sorted(
+        (len(a) - 1, b[-1])
+        for a, b in brute_join(lhs, brute_paths(1, 1), -1, 0,
+                               distinct_allow=1)
+    )
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b))
+        for a, b in zip(r.columns["p1_len"], r.columns["end"])
+    )
+    assert got == expected and expected
+
+
+# ------------------------------------------- prepared plans + parameters
+def test_warm_path_join_plan_recompiles_nothing(social):
+    """Second execution of a prepared PathJoin plan must be all cache
+    hits: no predicate compiles, no mask builds, no value rebuilds."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.end.id == P1.end.id) & (P2.length == 1))
+         .select(s=P2.start.id))
+    prepared = social.prepare(q)
+    r1 = prepared.execute()
+    before = dict(prepared.runtime.stats)
+    r2 = prepared.execute()
+    after = dict(prepared.runtime.stats)
+    delta = {
+        k: after.get(k, 0) - before.get(k, 0)
+        for k in set(before) | set(after)
+        if after.get(k, 0) != before.get(k, 0)
+    }
+    assert delta and all(k.endswith("hits") for k in delta), delta
+    assert sorted(map(int, r1.columns["s"])) == sorted(map(int, r2.columns["s"]))
+
+
+def test_path_join_sees_live_updates(social):
+    """The joined-batch cache is epoch-keyed: an online edge insert must
+    invalidate it and surface new join rows."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.end.id == P1.end.id) & (P2.length == 1))
+         .select(s=P2.start.id))
+    prepared = social.prepare(q)
+    base = sorted(int(x) for x in prepared.execute().columns["s"])
+    assert base == [1, 2, 4]
+    social.insert("Relationships", {
+        "relId": np.array([99]), "uId1": np.array([5]), "uId2": np.array([3]),
+        "startDate": np.array([20230101]),
+    })
+    assert sorted(int(x) for x in prepared.execute().columns["s"]) == [1, 2, 4, 5]
+
+
+def test_param_bound_path_join(social):
+    """Param anchors re-bind without re-planning, and each binding keys
+    its own joined-batch cache entry."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == param("src")) & (P1.length == 1)
+                & (P2.end.id == P1.end.id) & (P2.length == 1))
+         .select(s=P2.start.id))
+    prepared = social.prepare(q)
+    for src in (1, 4):
+        expected = sorted(
+            b[0]
+            for a, b in brute_join(
+                brute_paths(1, 1, start=src), brute_paths(1, 1), -1, -1
+            )
+        )
+        r = prepared.bind(src=src).execute()
+        assert sorted(int(x) for x in r.columns["s"]) == expected
+
+
+def test_three_paths_col_anchor_on_join_linked_source(social):
+    """P3 column-anchored on P2 while P2 is end-linked to P1: the planner
+    keeps P3 seeded by making P2 the stack bottom and joining P1 (review
+    fix: this shape used to KeyError at execution after a clean
+    explain())."""
+    P1, P2, P3 = P("P1"), P("P2"), P("P3")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .from_paths("SocialNetwork", "P3")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.start.id == 2)
+                & (P2.end.id == P1.end.id) & (P2.length == 1)
+                & (P3.start.id == P2.end.id) & (P3.length == 1))
+         .select(p2_end=P2.end.id, p3_end=P3.end.id))
+    plan = social.explain(q)
+    assert _plan_has(plan, EX.PathJoinExec)
+    p1 = brute_paths(1, 1, start=1)
+    p2 = brute_paths(1, 1, start=2)
+    p3 = brute_paths(1, 1)
+    expected = sorted(
+        (b[-1], c[-1])
+        for a, b in brute_join(p1, p2, -1, -1)
+        for c in p3 if c[0] == b[-1]
+    )
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b))
+        for a, b in zip(r.columns["p2_end"], r.columns["p3_end"])
+    )
+    assert got == expected and expected
+
+
+def test_col_anchor_on_joined_source_demotes_to_join_cond(social):
+    """Two seeded-dependent pairs can share only one stack bottom: the
+    column anchor whose producer ends up on the join side demotes to a
+    second path-join condition instead of KeyErroring at execution."""
+    P1, P2, P3, P4 = P("P1"), P("P2"), P("P3"), P("P4")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .from_paths("SocialNetwork", "P3")
+         .from_paths("SocialNetwork", "P4")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.start.id == 2) & (P2.length == 1)
+                & (P2.end.id == P1.end.id)
+                & (P3.start.id == P1.end.id) & (P3.length == 1)
+                & (P4.start.id == P2.end.id) & (P4.length == 1))
+         .select(p3_end=P3.end.id, p4_end=P4.end.id))
+    plan = social.explain(q)
+    assert any(
+        "demoted to path-join condition" in e.message
+        for e in plan.trace if e.rule == "path-ordering"
+    )
+    p1 = brute_paths(1, 1, start=1)
+    p2 = brute_paths(1, 1, start=2)
+    others = brute_paths(1, 1)
+    expected = sorted(
+        (c[-1], d[-1])
+        for a, b in brute_join(p1, p2, -1, -1)
+        for c in others if c[0] == a[-1]
+        for d in others if d[0] == b[-1]
+    )
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b))
+        for a, b in zip(r.columns["p3_end"], r.columns["p4_end"])
+    )
+    assert got == expected and expected
+
+
+def test_stack_bottom_chosen_by_cost_not_from_order(social):
+    """With statistics, the cheap const-anchored path seeds the stack even
+    when the expensive unanchored path comes first in FROM order (review
+    fix: plan shape used to follow FROM order, enumerating all vertices
+    on the seeded side)."""
+    PA, PB = P("PA"), P("PB")
+    q = (Query()
+         .from_paths("SocialNetwork", "PA")   # unanchored: all vertices
+         .from_paths("SocialNetwork", "PB")   # const start: 1 source
+         .where((PB.start.id == 1) & (PB.length == 1)
+                & (PA.end.id == PB.end.id) & (PA.length == 1))
+         .select(s=PA.start.id))
+    plan = social.explain(q)
+    pj = [n for n in _walk_nodes(plan.root) if isinstance(n, EX.PathJoinExec)]
+    assert pj and "PB" in pj[0].left.label()  # PB seeds, PA joins
+    assert any(
+        "stack bottom PB chosen by cost" in e.message
+        for e in plan.trace if e.rule == "path-ordering"
+    )
+    expected = sorted(
+        b[0]
+        for a, b in brute_join(
+            brute_paths(1, 1, start=1), brute_paths(1, 1), -1, -1
+        )
+    )
+    r = social.run(q)
+    assert sorted(int(x) for x in r.columns["s"]) == expected
+
+
+def _walk_nodes(root):
+    stack = [root]
+    while stack:
+        n = stack.pop()
+        yield n
+        stack.extend(n.children())
+
+
+def test_mixed_window_join_matches_brute_force(social):
+    """Start/end-mixed equality with asymmetric windows: P2.start joined
+    against P1.end where P1 enumerates [1,2] hops from a const start."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query()
+         .from_paths("SocialNetwork", "P1")
+         .from_paths("SocialNetwork", "P2")
+         .where((P1.start.id == 2) & (P1.length <= 2)
+                & (P2.start.id == 1)
+                & (P2.start.id == P1.end.id) & (P2.length <= 2))
+         .select(p1_end=P1.end.id, p2_end=P2.end.id))
+    expected = sorted(
+        (a[-1], b[-1])
+        for a, b in brute_join(
+            brute_paths(1, 2, start=2), brute_paths(1, 2, start=1), -1, 0
+        )
+    )
+    r = social.run(q)
+    got = sorted(
+        (int(a), int(b))
+        for a, b in zip(r.columns["p1_end"], r.columns["p2_end"])
+    )
+    assert got == expected and expected

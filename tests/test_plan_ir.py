@@ -276,29 +276,66 @@ def test_conflicting_anchor_stays_residual(social):
     assert social.run(q1).count > 0
 
 
-def test_stacked_paths_require_column_start_anchor(social):
-    """Misalignable stacked compositions raise instead of silently pairing
-    unrelated rows through the origin lane."""
+def test_stacked_paths_without_column_start_anchor_path_join(social):
+    """Misalignable stacked compositions (end-only cross refs, const-start
+    upper paths) used to raise NotImplementedError; they now plan as a
+    PathJoin — a hash join of the two traversal outputs' endpoint vertex-id
+    lanes. Deep result coverage lives in tests/test_path_join.py."""
     P1, P2 = P("P1"), P("P2")
-    # end-only cross-path reference: cannot seed P2's lanes from P1
+    # end-only cross-path reference: cannot seed P2's lanes from P1, so
+    # the equality joins the two path sets on their end ids
     q_end = (Query()
              .from_paths("SocialNetwork", "P1")
              .from_paths("SocialNetwork", "P2")
              .where((P1.start.id == 1) & (P1.length == 1)
                     & (P2.end.id == P1.end.id) & (P2.length == 1))
              .select(s=P2.start.id))
-    with pytest.raises(NotImplementedError):
-        social.explain(q_end)
-    # const-start stacked path: origin lanes cannot align with the child
+    plan = social.explain(q_end)
+    assert any(isinstance(n, EX.PathJoinExec) for n in _walk(plan.root))
+    assert any(e.rule == "path-join" for e in plan.trace)
+    r = social.run(q_end)
+    # P1 ends at 3; 1-hop paths ending at 3 start at {1, 2, 4}
+    assert sorted(int(x) for x in r.columns["s"]) == [1, 2, 4]
+    # const-start upper path: its start lane is already taken by the
+    # const anchor, so the cross ref joins P2.start against P1.end
     q_const = (Query()
+               .from_paths("SocialNetwork", "P1")
+               .from_paths("SocialNetwork", "P2")
+               .where((P1.start.id == 1) & (P1.length == 1)
+                      & (P2.start.id == 3)
+                      & (P2.start.id == P1.end.id) & (P2.length == 1))
+               .select(mid=P1.end.id, end=P2.end.id))
+    r2 = social.run(q_const)
+    got = sorted((int(m), int(e)) for m, e in
+                 zip(r2.columns["mid"], r2.columns["end"]))
+    assert got == [(3, 1), (3, 2), (3, 4)]
+    # a const start that contradicts the join key matches nothing
+    q_empty = (Query()
                .from_paths("SocialNetwork", "P1")
                .from_paths("SocialNetwork", "P2")
                .where((P1.start.id == 1) & (P1.length == 1)
                       & (P2.start.id == 4)
                       & (P2.start.id == P1.end.id) & (P2.length == 1))
-               .select(mid=P1.end.id, end=P2.end.id))
+               .select(end=P2.end.id))
+    assert social.run(q_empty).count == 0
+    # fully unrelated composition (no anchor, no endpoint equality) is
+    # still rejected: a cartesian product of path sets
+    q_unrelated = (Query()
+                   .from_paths("SocialNetwork", "P1")
+                   .from_paths("SocialNetwork", "P2")
+                   .where((P1.start.id == 1) & (P1.length == 1)
+                          & (P2.length == 1))
+                   .select(s=P2.start.id))
     with pytest.raises(NotImplementedError):
-        social.explain(q_const)
+        social.explain(q_unrelated)
+
+
+def _walk(root):
+    stack = [root]
+    while stack:
+        n = stack.pop()
+        yield n
+        stack.extend(n.children())
 
 
 def test_const_end_anchor_missing_id_yields_no_rows(social):
