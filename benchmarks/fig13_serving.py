@@ -1,0 +1,206 @@
+"""Fig 13 (extension): continuous-batching serving-loop latency.
+
+Closed-loop discrete-event benchmark for ``repro.serve.loop.QueryLoop``:
+a fixed-QPS arrival process drives a parameterized 2-hop neighborhood
+query (one structural shape, bind values rotating over the four
+highest-degree sources) through the loop's admission path — shared
+shape-keyed plan cache, deadline-based adaptive flush, per-ticket bind.
+
+Time is hybrid: arrivals and flush deadlines live on a **virtual
+microsecond clock** (deterministic spacing at the offered QPS, no
+sleeping), while each ``pump()`` runs with the clock in real-time mode so
+measured execution cost advances the same timeline. Queueing delay,
+deadline waits, and service time therefore land in one latency
+distribution; ``Ticket.latency_us`` is read straight off the tickets.
+
+Reported rows:
+
+  * ``serving_cold/first_flush`` — first ticket end-to-end (plan build +
+    predicate compile + deadline wait): the admission-miss worst case;
+  * ``serving_warm/qps=Q`` — steady-state p50 (``us`` column) and p99
+    (``derived``) after a warm-up phase, measured over ``n_req`` arrivals;
+  * ``direct_warm`` — one warm ``bind().execute()`` with no loop, the
+    service-time floor;
+  * ``serving_ratio`` — p99 / (flush_deadline + direct): the stored-
+    threshold gate quantity. A deadline-flushed request ideally waits one
+    deadline then pays one service; the ratio is machine-normalized, so
+    the gate catches loop-scheduling regressions rather than host speed.
+
+The module also records ``RECORD`` (consumed by ``benchmarks.run`` into
+``BENCH_serving.json``), including ``warm_cache_hits_only``: during the
+measured phase the shared plan's ``PlanRuntime.stats`` must move only on
+``*_hits`` counters and the plan cache must report zero new builds — the
+paper-level acceptance that warm steady-state serving re-plans and
+re-compiles nothing.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core.engine import GRFusion
+from repro.core.query import P, Query, param
+from repro.serve.loop import QueryLoop
+
+from .common import time_call
+
+#: last run's serving record, consumed by benchmarks.run for the JSON gate
+RECORD = None
+
+
+class SimClock:
+    """Virtual microsecond clock with a real-time passthrough window.
+
+    Between events the benchmark sets the time explicitly
+    (``advance_to``); around ``pump()`` it calls ``start``/``stop`` so
+    wall time spent executing accrues onto the virtual timeline and into
+    every ticket's ``done_us``.
+    """
+
+    def __init__(self):
+        self.sim = 0.0
+        self._anchor = None
+
+    def __call__(self) -> float:
+        if self._anchor is None:
+            return self.sim
+        return self.sim + (time.perf_counter() - self._anchor) * 1e6
+
+    def advance_to(self, t_us: float) -> None:
+        self.sim = max(self.sim, t_us)
+
+    def start(self) -> None:
+        self._anchor = time.perf_counter()
+
+    def stop(self) -> None:
+        self.sim = self()
+        self._anchor = None
+
+
+def _neighborhood_query():
+    PS = P("PS")
+    return (
+        Query()
+        .from_paths("G", "PS")
+        .where((PS.start.id == param("src")) & (PS.length <= 2))
+        .select(e=PS.end.id)
+    )
+
+
+def _offered_load(loop, clk, query, srcs, n_req: int, interval_us: float):
+    """Inject n_req arrivals at fixed spacing; pump at flush instants."""
+
+    def service():
+        clk.start()
+        try:
+            loop.pump()
+        finally:
+            clk.stop()
+
+    tickets = []
+    base = clk.sim
+    for i in range(n_req):
+        arrival = base + i * interval_us
+        while True:
+            due = loop.next_due()
+            if due is None or due > arrival:
+                break
+            clk.advance_to(due)
+            service()
+        clk.advance_to(arrival)
+        tickets.append(loop.submit(query, src=srcs[i % len(srcs)]))
+        if loop.pending >= loop.lane_width:
+            service()
+    while loop.pending:
+        due = loop.next_due()
+        if due is not None:
+            clk.advance_to(due)
+        service()
+    return tickets
+
+
+def run(quick: bool = False):
+    global RECORD
+    V, E = (2_000, 8_000) if quick else (10_000, 40_000)
+    n_warm = 20 if quick else 40
+    n_req = 60 if quick else 200
+    qps = 100
+    lane, deadline_us = 8, 2_000.0
+
+    from repro.data.synthetic import graph_tables, random_graph
+
+    g = random_graph(V, E, kind="powerlaw", seed=11)
+    vd, ed = graph_tables(g)
+    eng = GRFusion()
+    eng.create_table("V", vd)
+    eng.create_table("E", ed)
+    eng.create_graph_view(
+        "G", vertexes="V", edges="E", v_id="vid", e_src="src", e_dst="dst"
+    )
+    deg = np.bincount(np.asarray(ed["src"]), minlength=V)
+    srcs = [int(x) for x in np.argsort(-deg)[:4]]
+
+    clk = SimClock()
+    loop = QueryLoop(
+        eng, lane_width=lane, flush_deadline_us=deadline_us, clock=clk
+    )
+    interval_us = 1e6 / qps
+
+    # cold phase: the first flush pays plan build + predicate compile
+    cold = _offered_load(loop, clk, _neighborhood_query(), srcs,
+                         n_warm, interval_us)
+    assert all(t.status == "done" for t in cold)
+    cold_first_us = cold[0].latency_us
+
+    # steady state: snapshot the shared plan's runtime stats, then measure
+    prepared = eng.plan_cache.get_or_prepare(
+        eng.query_shape(_neighborhood_query()),
+        lambda: (_ for _ in ()).throw(
+            AssertionError("warm shape must already be cached")
+        ),
+    )
+    rt_before = dict(prepared.runtime.stats)
+    plan_builds = eng.plan_cache.stats["plan_builds"]
+    warm = _offered_load(loop, clk, _neighborhood_query(), srcs,
+                         n_req, interval_us)
+    assert all(t.status == "done" for t in warm)
+    delta = {
+        k: v - rt_before.get(k, 0)
+        for k, v in prepared.runtime.stats.items()
+        if v != rt_before.get(k, 0)
+    }
+    hits_only = (
+        bool(delta)
+        and all(k.endswith("hits") for k in delta)
+        and eng.plan_cache.stats["plan_builds"] == plan_builds
+    )
+
+    lat = np.array([t.latency_us for t in warm])
+    p50, p99 = (float(np.percentile(lat, q)) for q in (50, 99))
+    direct_us = time_call(
+        lambda: prepared.bind(src=srcs[0]).execute().count
+    )
+    ratio = p99 / (deadline_us + direct_us)
+
+    RECORD = {
+        "qps": qps,
+        "n_requests": n_req,
+        "lane_width": lane,
+        "flush_deadline_us": deadline_us,
+        "p50_us": round(p50, 1),
+        "p99_us": round(p99, 1),
+        "direct_us": round(direct_us, 1),
+        "cold_first_us": round(cold_first_us, 1),
+        "ratio": round(ratio, 4),
+        "warm_cache_hits_only": hits_only,
+        "quick": quick,
+    }
+    return [
+        ("fig13/serving_cold/first_flush", cold_first_us,
+         "plan+compile+deadline"),
+        (f"fig13/serving_warm/qps={qps}", p50, f"p99={p99:.1f}us"),
+        ("fig13/direct_warm", direct_us, "bind+execute, no loop"),
+        ("fig13/serving_ratio", 0.0,
+         f"p99/(deadline+direct)={ratio:.3f} hits_only={hits_only}"),
+    ]

@@ -14,6 +14,15 @@ plans add at most ``REPRO_PLAN_OVERHEAD_MAX`` (default 1.3x, the stored
 threshold) on top of the raw kernels at S=32 lanes; the bench stage FAILS
 when the worst ratio regresses above the threshold, so the perf
 trajectory accumulates and is enforced from this PR on.
+
+The fig13 module additionally publishes a **serving record**
+(``BENCH_serving.json``): warm p50/p99 latency of the continuous-batching
+``QueryLoop`` at a fixed offered QPS, gated two ways — the
+machine-normalized ratio ``p99 / (flush_deadline + direct_execute)`` must
+stay under ``REPRO_SERVING_P99_MAX`` (default 3.0, the stored threshold),
+and the warm steady state must have executed purely from caches
+(``warm_cache_hits_only``: PlanRuntime moved only on ``*_hits`` counters,
+zero new plan builds).
 """
 from __future__ import annotations
 
@@ -27,6 +36,9 @@ from .common import emit
 
 PLAN_OVERHEAD_THRESHOLD = 1.3  # stored threshold: planned vs raw, S=32 lanes
 PLAN_OVERHEAD_PATH = "BENCH_plan_overhead.json"
+
+SERVING_THRESHOLD = 3.0  # stored threshold: p99 / (deadline + direct exec)
+SERVING_PATH = "BENCH_serving.json"
 
 
 def plan_overhead_record(rows, threshold: float, quick: bool) -> dict:
@@ -58,6 +70,7 @@ def main() -> None:
         fig10_triangles,
         fig11_sssp,
         fig12_pathjoin,
+        fig13_serving,
         table1_construction,
     )
 
@@ -67,6 +80,7 @@ def main() -> None:
         ("fig10", fig10_triangles),
         ("fig11", fig11_sssp),
         ("fig12", fig12_pathjoin),
+        ("fig13", fig13_serving),
         ("table1", table1_construction),
     ]
     print("name,us_per_call,derived")
@@ -101,6 +115,36 @@ def main() -> None:
                 f"plan_overhead/REGRESSION,0.0,max ratio "
                 f"{record['max_ratio']:.2f}x exceeds stored threshold "
                 f"{threshold:.2f}x",
+                flush=True,
+            )
+            failures += 1
+
+    srv_threshold = float(
+        os.environ.get("REPRO_SERVING_P99_MAX", SERVING_THRESHOLD)
+    )
+    srv = getattr(fig13_serving, "RECORD", None)
+    if srv is not None:
+        srv = dict(srv, threshold=srv_threshold)
+        srv_path = os.environ.get("REPRO_BENCH_SERVING_JSON", SERVING_PATH)
+        with open(srv_path, "w") as f:
+            json.dump(srv, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(
+            f"serving/p99,0.0,ratio={srv['ratio']:.2f}x "
+            f"(threshold {srv_threshold:.2f}x) -> {srv_path}",
+            flush=True,
+        )
+        if srv["ratio"] > srv_threshold:
+            print(
+                f"serving/REGRESSION,0.0,p99 ratio {srv['ratio']:.2f}x "
+                f"exceeds stored threshold {srv_threshold:.2f}x",
+                flush=True,
+            )
+            failures += 1
+        if not srv["warm_cache_hits_only"]:
+            print(
+                "serving/REGRESSION,0.0,warm steady state re-planned or "
+                "re-built instead of hitting caches",
                 flush=True,
             )
             failures += 1

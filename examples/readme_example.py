@@ -106,6 +106,21 @@ def main():
     print("after edge 5-1 insert, from 5:", ends_after)
     assert 1 in ends_after
 
+    # -- serving loop: continuous batching over one shared engine ---------
+    # requests bucket by structural plan shape (bind values excluded); each
+    # shape plans once into the engine-wide cache, each ticket re-binds.
+    # Buckets flush when a lane fills or a deadline expires; results are
+    # identical to running the query directly.
+    loop = eng.serving_loop(lane_width=8, flush_deadline_us=1000.0)
+    t1 = loop.submit(reach, src=1)
+    t5 = loop.submit(reach, src=5)
+    loop.drain()
+    served = sorted(set(map(int, t1.result.columns["end"])))
+    print("served reachable<=2 from 1:", served)
+    assert t1.status == t5.status == "done"
+    direct = sorted(set(map(int, prepared.bind(src=1).execute().columns["end"])))
+    assert served == direct, (served, direct)
+
     print("\nreadme example OK")
 
 

@@ -9,8 +9,11 @@
 #   differential  cross-backend traversal equivalence suite (-m differential)
 #   bench         quick-size benchmark smoke (REPRO_BENCH_QUICK=1); writes
 #                 BENCH_plan_overhead.json (planned-vs-raw fig8/fig9 ratios)
-#                 at the repo root and FAILS if the worst ratio regresses
-#                 above the stored threshold (REPRO_PLAN_OVERHEAD_MAX, 1.3)
+#                 and BENCH_serving.json (fig13 QueryLoop warm p50/p99 at
+#                 fixed QPS) at the repo root and FAILS if either regresses
+#                 past its stored threshold (REPRO_PLAN_OVERHEAD_MAX, 1.3;
+#                 REPRO_SERVING_P99_MAX, 3.0) or the warm serving steady
+#                 state stops running purely from caches
 #   docs          executes the README's worked example
 #                 (examples/readme_example.py, asserted output) so the
 #                 documented API can never drift from the code
@@ -53,6 +56,8 @@ for stage in "${STAGES[@]}"; do
       run_stage bench env REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
       echo "-- plan overhead record --"
       cat BENCH_plan_overhead.json
+      echo "-- serving record --"
+      cat BENCH_serving.json
       ;;
     docs)
       # the README's worked example, extracted verbatim and asserted —

@@ -42,7 +42,10 @@ import jax.numpy as jnp
 
 from repro.core import expr as X
 
-__all__ = ["EpochRegistry", "CompiledPredicate", "PlanRuntime"]
+__all__ = [
+    "EpochRegistry", "CompiledPredicate", "PlanRuntime",
+    "query_shape_key", "PreparedPlanCache",
+]
 
 
 class EpochRegistry:
@@ -107,6 +110,81 @@ def structural_key(e: X.Expr):
             tuple((type(v).__name__, repr(v)) for v in e.values),
         )
     return ("other", type(e).__name__, repr(e))
+
+
+def query_shape_key(query, *, default_max_path_len: Optional[int] = None):
+    """Hashable structural identity of a ``Query`` (its *plan shape*).
+
+    Two queries share a shape key exactly when the rule pipeline would
+    produce the same physical plan for both: FROM items, the WHERE tree by
+    ``structural_key`` (so ``Param`` placeholders key by name regardless
+    of binding — the serving loop plans one shape and ``bind``s per
+    request), the select/aggregate lists, and every planner-visible knob
+    (limit, order, hints, backend, distinct-vertices). Constants are part
+    of the shape by design: the supported way to vary a value across
+    requests without a re-plan is a ``Param``.
+
+    ``default_max_path_len`` normalizes an unset ``max_path_len`` the way
+    ``GRFusion.plan`` would, so a query keyed before planning matches the
+    same query keyed after."""
+    max_len = query.max_path_len
+    if max_len is None and any(f.kind == "paths" for f in query.froms):
+        max_len = default_max_path_len
+    return (
+        tuple((f.kind, f.name, f.alias) for f in query.froms),
+        structural_key(query.where_expr)
+        if query.where_expr is not None else None,
+        tuple(
+            (name, structural_key(e) if isinstance(e, X.Expr) else repr(e))
+            for name, e in query.select_list.items()
+        ),
+        tuple(
+            (name, op, structural_key(e) if isinstance(e, X.Expr) else None)
+            for name, (op, e) in query.agg_select.items()
+        ),
+        query.limit_n,
+        query.order_key,
+        query.sp_hint,
+        query.bf_hint,
+        max_len,
+        query.backend,
+        query.global_simple,
+    )
+
+
+class PreparedPlanCache:
+    """Cross-client prepared-plan cache keyed by structural query shape.
+
+    One instance hangs off the engine (``GRFusion.plan_cache``) and is
+    shared by every admission surface — the serving loop's buckets, the
+    ``QueryServer`` manual-flush path, and ``prepare_cached`` callers —
+    so N clients submitting the same parameterized shape pay the rule
+    pipeline once, engine-wide. Entries are whole ``PreparedPlan``
+    handles (plan + lazily-created ``PlanRuntime``), so a cache hit also
+    inherits every warm compiled mask. LRU-bounded; ``stats`` counts
+    hits / builds so tests can assert the second client re-planned
+    nothing."""
+
+    def __init__(self, capacity: int = 128):
+        self.capacity = capacity
+        self.stats = collections.Counter()
+        self._plans: "collections.OrderedDict" = collections.OrderedDict()
+
+    def __len__(self):
+        return len(self._plans)
+
+    def get_or_prepare(self, key, prepare: Callable[[], Any]):
+        ent = self._plans.get(key)
+        if ent is not None:
+            self._plans.move_to_end(key)
+            self.stats["plan_hits"] += 1
+            return ent
+        ent = prepare()
+        self._plans[key] = ent
+        self.stats["plan_builds"] += 1
+        while len(self._plans) > self.capacity:
+            self._plans.popitem(last=False)
+        return ent
 
 
 class CompiledPredicate:
@@ -249,32 +327,41 @@ class PlanRuntime:
     execution); ``PreparedPlan`` keeps the plan object alive, so the
     serving hot path re-executes against warm masks. Cache keys are the
     call-site-stable ``key`` plus ``(epoch, encoded-param-values)``; a
-    mismatch on either re-runs the compiled program against the live
-    column views (one fused XLA call), never the interpreter.
-    """
+    mismatch on both re-runs the compiled program against the live
+    column views (one fused XLA call), never the interpreter. Each call
+    site retains its last ``VARIANTS_PER_SITE`` (epoch, binding)
+    variants — the continuous-batching loop rotates a working set of
+    bind values through ONE shared plan, and a single-entry cache would
+    rebuild on every alternation instead of hitting."""
+
+    VARIANTS_PER_SITE = 8
 
     def __init__(self, engine):
         self.engine = engine
         self.stats = collections.Counter()
         self._compiled: Dict[Any, CompiledPredicate] = {}
-        self._masks: Dict[Any, Tuple[Any, Tuple, jnp.ndarray]] = {}
-        self._values: Dict[Any, Tuple[Any, Any]] = {}
+        self._masks: Dict[Any, list] = {}   # key -> [(epoch, pvals, mask)]
+        self._values: Dict[Any, list] = {}  # key -> [(epoch, value)]
 
     def cached(self, key, epoch, build: Callable[[], Any]):
         """Generic epoch-keyed value cache for deterministic plan state
         (anchor positions, child scan batches, PathJoin joined batches):
         ``build()`` re-runs only when ``epoch`` — typically a tuple of
-        catalog epochs plus bound parameter values — differs from the
-        stored one. Callers that observe side channels while building
-        (overflow flags, explain lines) must capture them in the cached
-        value and replay on hits, so cache warmth never changes what a
-        query reports."""
-        ent = self._values.get(key)
-        if ent is not None and ent[0] == epoch:
-            self.stats["value_hits"] += 1
-            return ent[1]
+        catalog epochs plus bound parameter values — matches none of the
+        call site's retained variants. Callers that observe side channels
+        while building (overflow flags, explain lines) must capture them
+        in the cached value and replay on hits, so cache warmth never
+        changes what a query reports."""
+        slots = self._values.setdefault(key, [])
+        for i, (ep, v) in enumerate(slots):
+            if ep == epoch:
+                if i:
+                    slots.insert(0, slots.pop(i))
+                self.stats["value_hits"] += 1
+                return v
         v = build()
-        self._values[key] = (epoch, v)
+        slots.insert(0, (epoch, v))
+        del slots[self.VARIANTS_PER_SITE:]
         self.stats["value_builds"] += 1
         return v
 
@@ -314,11 +401,15 @@ class PlanRuntime:
         cp = self.predicate(key, exprs, table=table, colmap=colmap)
         enc = lambda c, v: self.engine.encode_value(table, c, v)
         pvals = cp.param_values(params or {}, enc)
-        ent = self._masks.get(key)
-        if ent is not None and ent[0] == epoch and ent[1] == pvals:
-            self.stats["mask_hits"] += 1
-            return ent[2]
+        slots = self._masks.setdefault(key, [])
+        for i, (ep, pv, m) in enumerate(slots):
+            if ep == epoch and pv == pvals:
+                if i:
+                    slots.insert(0, slots.pop(i))
+                self.stats["mask_hits"] += 1
+                return m
         m = cp.evaluate(base, resolve, enc, pvals)
-        self._masks[key] = (epoch, pvals, m)
+        slots.insert(0, (epoch, pvals, m))
+        del slots[self.VARIANTS_PER_SITE:]
         self.stats["mask_builds"] += 1
         return m

@@ -25,7 +25,9 @@ from repro.core import executor as EX
 from repro.core import expr as X
 from repro.core import optimizer as OPT
 from repro.core import query as Q
-from repro.core.compiled import EpochRegistry, table_key
+from repro.core.compiled import (
+    EpochRegistry, PreparedPlanCache, query_shape_key, table_key,
+)
 from repro.core.executor import QueryResult  # re-export (public result type)
 from repro.core.graphview import GraphView, build_graph_view
 from repro.core.logical import DEFAULT_MAX_LEN
@@ -150,6 +152,11 @@ class GRFusion:
         self.predicate_cache: "collections.OrderedDict" = (
             collections.OrderedDict()
         )
+        # engine-wide prepared-plan cache keyed by structural query shape;
+        # shared by the serving loop and the QueryServer admission path so
+        # concurrent clients plan each shape once and bind() per request
+        self.plan_cache = PreparedPlanCache()
+        self._serving_loop = None
 
     # ------------------------------------------------------------- catalog
     def create_table(self, name: str, data: Mapping[str, np.ndarray], capacity=None) -> Table:
@@ -398,6 +405,39 @@ class GRFusion:
     def prepare(self, query: Q.Query) -> PreparedPlan:
         """Plan once, execute many (parameterized / repeated serving)."""
         return PreparedPlan(engine=self, plan=self.plan(query))
+
+    def query_shape(self, query: Q.Query):
+        """Structural plan-shape key of ``query`` (the plan-cache key)."""
+        return query_shape_key(
+            query, default_max_path_len=self.default_max_path_len
+        )
+
+    def prepare_cached(self, query: Q.Query) -> PreparedPlan:
+        """``prepare`` through the engine-wide shape-keyed plan cache:
+        structurally identical queries (same shape, any ``Param``
+        bindings) share one plan and its warm compiled runtime across
+        every client of this engine."""
+        return self.plan_cache.get_or_prepare(
+            self.query_shape(query), lambda: self.prepare(query)
+        )
+
+    def serving_loop(self, **kwargs):
+        """The engine's continuous-batching admission loop
+        (``repro.serve.loop.QueryLoop``), created on first use; keyword
+        arguments configure the first creation (lane_width,
+        flush_deadline_us, max_pending, clock) and are rejected on later
+        calls so two callers cannot silently race on configuration.
+        ``loop.submit(query, **params)`` is the serving entry point."""
+        from repro.serve.loop import QueryLoop
+
+        if self._serving_loop is None:
+            self._serving_loop = QueryLoop(self, **kwargs)
+        elif kwargs:
+            raise RuntimeError(
+                "serving loop already configured; construct QueryLoop "
+                "directly for a second independently-configured loop"
+            )
+        return self._serving_loop
 
     def path_string(self, result: QueryResult, verts_col: str, i: int = 0) -> str:
         v = np.asarray(result.columns[verts_col])[i]

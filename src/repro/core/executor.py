@@ -763,10 +763,14 @@ class PathDisjointExec(ExecNode):
 
     For each alias pair ``(a, b, allowed)`` the combined batch row
     survives only if the two paths' materialized vertex lists share
-    exactly ``allowed`` vertices — the junction endpoints that the
-    composition's equalities entitle them to — and nothing else. Vertex
-    positions map to external ids per path (each path may traverse a
-    different graph view), padding lanes (-1) never match."""
+    exactly ``allowed`` *distinct* vertices — the junction endpoints that
+    the composition's equalities entitle them to — and nothing else.
+    Counting distinct shared values (not occurrence pairs) matters for
+    ``close_loop`` paths: a loop legitimately repeats exactly its junction
+    vertex (start == end), which is still ONE shared vertex of the
+    composition, not two. Vertex positions map to external ids per path
+    (each path may traverse a different graph view), padding lanes (-1)
+    never match."""
 
     child: ExecNode
     pairs: List[tuple] = dfield(default_factory=list)
@@ -797,10 +801,21 @@ class PathDisjointExec(ExecNode):
         for a, b, allowed in self.pairs:
             ia = self._vert_ids(ctx, batch, a)
             ib = self._vert_ids(ctx, batch, b)
-            hit = (ia[:, :, None] == ib[:, None, :]) & (
-                (ia >= 0)[:, :, None] & (ib >= 0)[:, None, :]
+            # first occurrence of each vertex value within a's lane, so a
+            # value repeated inside one path (close_loop junction) counts
+            # once: shared = |values(a) & values(b)|, not occurrence pairs
+            earlier = jnp.tril(
+                jnp.ones((ia.shape[1], ia.shape[1]), jnp.bool_), k=-1
             )
-            shared = jnp.sum(hit.astype(jnp.int32), axis=(1, 2))
+            dup = jnp.any(
+                (ia[:, :, None] == ia[:, None, :]) & earlier[None], axis=2
+            )
+            first = (ia >= 0) & ~dup
+            in_b = jnp.any(
+                (ia[:, :, None] == ib[:, None, :]) & (ib >= 0)[:, None, :],
+                axis=2,
+            )
+            shared = jnp.sum((first & in_b).astype(jnp.int32), axis=1)
             valid = valid & (shared == allowed)
         return batch.replace(valid=valid)
 

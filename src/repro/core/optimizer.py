@@ -449,11 +449,57 @@ def rule_path_ordering(st: _State):
                 placed.add(p.alias)
                 pending.remove(p)
                 progressed = True
-        if not progressed:
+        if progressed:
+            continue
+        # Cyclic column-anchor dependencies: seeding needs a DAG (each
+        # stacked scan grows lanes from its producer's output rows), so
+        # one cycle member's start anchor is demoted to a path-join
+        # condition — the cycle's remaining anchors then seed a stack and
+        # the demoted equality joins (or filters) it back in. Every
+        # orientation is costed: the demoted member loses its seed and
+        # enumerates from all vertices, so the member whose unanchored
+        # enumeration is cheapest breaks the cycle (FROM order breaks
+        # ties and is the no-statistics fallback).
+        cyc = [
+            p for p in pending
+            if p.spec.start_anchor and p.spec.start_anchor[0] == "col"
+            and p.spec.start_anchor[1].split(".")[0]
+            in {q.alias for q in pending}
+        ]
+        if not cyc:
             raise NotImplementedError(
                 "cyclic PATHS anchor dependencies: "
                 + ", ".join(p.alias for p in pending)
             )
+        if st.stats is not None:
+            costs = {}
+            for p in cyc:
+                n_v = float(
+                    max(st.stats.graph_stats(p.spec.graph).n_vertices, 1)
+                )
+                costs[p.alias] = _estimate_path_rows(st, p, n_sources=n_v)
+            victim = min(
+                cyc, key=lambda p: (costs[p.alias], st.paths.index(p))
+            )
+            costed = ", ".join(
+                f"{a}~{c:.0f}" for a, c in sorted(costs.items())
+            )
+        else:
+            victim = cyc[0]
+            costed = "no statistics; FROM order"
+        sa = victim.spec.start_anchor
+        ref, _, cname = sa[1].partition(".")
+        which = "end" if cname.startswith("end") else "start"
+        st.path_join_conds.append(((victim.alias, "start"), (ref, which)))
+        victim.spec.start_anchor = None
+        join_linked.update((victim.alias, ref))
+        st.note(
+            "path-ordering",
+            "cyclic PATHS anchor dependencies ("
+            + ", ".join(p.alias for p in pending)
+            + f"): costed orientations {costed}; {victim.alias}.start "
+            f"anchor on {ref}.{which} demoted to path-join condition",
+        )
     # a stacked PathScan's output rows gather its child's columns through
     # the origin lane, which is only aligned when the scan is seeded from a
     # column of that child — anything else would silently pair unrelated
@@ -583,11 +629,16 @@ def rule_path_ordering(st: _State):
     st.joined_paths = joined
 
 
-def _estimate_path_rows(st: _State, p: L.PathScan, n_sources=None) -> float:
+def _estimate_path_rows(
+    st: _State, p: L.PathScan, n_sources=None, _seen=frozenset()
+) -> float:
     """Traversal-cardinality estimate for one PathScan from live graph
     statistics: ``n_sources * sum(F^len)`` over the (scratch-refined)
     length window, with F the view's average fan-out. Const/param anchors
-    contribute one source lane, an unanchored start every vertex."""
+    contribute one source lane, an unanchored start every vertex, and a
+    column anchor one lane per estimated producer row (the referenced
+    PATHS source's own estimate, or the referenced scan's filter-adjusted
+    cardinality — never a fixed guess for a resolvable producer)."""
     spec = p.spec
     gs = st.stats.graph_stats(spec.graph)
     F = max(float(gs.avg_fan_out), 1.0)
@@ -602,13 +653,33 @@ def _estimate_path_rows(st: _State, p: L.PathScan, n_sources=None) -> float:
         elif sa[0] in ("const", "param"):
             n_sources = 1.0
         else:
-            n_sources = 32.0  # column anchor of unknown producer width
+            n_sources = _estimate_anchor_sources(st, p, _seen | {p.alias})
     total = 0.0
     for ln in range(lo, hi + 1):
         total += F ** ln
         if total > float(1 << 20):
             break
     return min(max(n_sources * total, 1.0), float(1 << 20))
+
+
+def _estimate_anchor_sources(st: _State, p: L.PathScan, seen) -> float:
+    """Estimated producer width behind a column start anchor.
+
+    A seeded scan grows one traversal lane per producer row, so its source
+    count is the producer's cardinality: another PATHS source's traversal
+    estimate, or a relational scan's filter-adjusted row estimate. Only an
+    unresolvable reference — or an anchor cycle, where no member has a
+    finite producer width until one anchor is demoted — falls back to a
+    fixed guess."""
+    alias = p.spec.start_anchor[1].split(".")[0]
+    if alias not in seen:
+        for q in st.paths:
+            if q.alias == alias:
+                return _estimate_path_rows(st, q, _seen=seen)
+        scan = st.scans.get(alias)
+        if scan is not None:
+            return _estimate_scan_rows(st, scan)
+    return 32.0  # unresolvable producer (anchor cycle / unknown alias)
 
 
 def _estimate_tree_rows(st: _State, node) -> float:

@@ -69,6 +69,9 @@ class PathVertexSliceAttr(PathExpr):
     def __init__(self, alias, lo, hi, attr):
         self.alias, self.lo, self.hi, self.attr = alias, lo, hi, attr
 
+    def __repr__(self):
+        return f"{self.alias}.Vertexes[{self.lo}..{self.hi}].{self.attr}"
+
 
 class PathAgg(PathExpr):
     """sum(PS.Edges.attr) — aggregates over the edges of each path (§4)."""
@@ -83,6 +86,9 @@ class PathAgg(PathExpr):
 class PathString(PathExpr):
     def __init__(self, alias):
         self.alias = alias
+
+    def __repr__(self):
+        return f"{self.alias}.PathString"
 
 
 class _EdgeIndexer:

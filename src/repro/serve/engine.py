@@ -138,18 +138,23 @@ class QueryServer:
 
     # -- pre-optimized plan admission -------------------------------------
     def prepare(self, query):
-        """Run the rule pipeline once; returns a ``PreparedPlan``."""
-        return self.engine.prepare(query)
+        """Run the rule pipeline once — through the engine-wide
+        shape-keyed plan cache (``GRFusion.plan_cache``), so this server,
+        the continuous-batching ``QueryLoop``, and direct
+        ``prepare_cached`` callers all share one plan (and its warm
+        compiled runtime) per structural query shape."""
+        return self.engine.prepare_cached(query)
 
     def submit_plan(self, plan_or_query):
-        """Enqueue a PreparedPlan (a bare Query is planned on admission)."""
+        """Enqueue a PreparedPlan (a bare Query is planned on admission,
+        through the shared shape-keyed plan cache)."""
         from repro.core.engine import PreparedPlan
         from repro.core.query import Query
 
         if isinstance(plan_or_query, PreparedPlan):
             prepared = plan_or_query
         elif isinstance(plan_or_query, Query):
-            prepared = self.engine.prepare(plan_or_query)
+            prepared = self.engine.prepare_cached(plan_or_query)
         else:
             raise TypeError(
                 "submit_plan takes a PreparedPlan or a Query, got "

@@ -1,0 +1,222 @@
+"""Continuous-batching admission loop for graph-relational serving.
+
+``QueryServer`` batches well but the caller must drive ``flush_plans()``
+by hand; ``QueryLoop`` closes that gap the way ``LMServer`` does for
+decode slots: the loop owns a shared engine and drives itself. Requests
+enqueue into per-structure buckets keyed by *plan shape*
+(``repro.core.compiled.query_shape_key``) — each shape is planned at most
+once through the engine-wide cross-client ``PreparedPlanCache`` and every
+request only ``bind()``s its parameters onto the shared handle, so the
+steady-state hot path touches warm compiled masks and re-plans nothing.
+
+Control plane, in the order the paper's serving story needs them:
+
+  * **adaptive flush** — a bucket becomes *ready* when it holds
+    ``lane_width`` tickets (a full lane: flush now, latency is already
+    paid) or when ``flush_deadline_us`` has elapsed since its oldest
+    ticket (a cold shape must not wait forever for a lane to fill);
+  * **bounded-queue backpressure** — admission rejects (status
+    ``rejected`` with a ``retry_after_us`` hint) once ``max_pending``
+    tickets are queued, rather than growing the queue without bound and
+    converting overload into unbounded latency;
+  * **round-robin fairness** — each ``pump()`` services ready buckets
+    starting *after* the last-served shape and takes at most
+    ``lane_width`` tickets per bucket per rotation, so one hot
+    tenant/shape cannot starve cold shapes out of the loop.
+
+The clock is injectable (microseconds) so tests and the closed-loop
+benchmark drive deadlines deterministically; the default reads
+``time.monotonic``.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from dataclasses import dataclass, field as dfield
+from typing import Any, Callable, Dict, List, Optional
+
+__all__ = ["Ticket", "QueryLoop"]
+
+
+def _monotonic_us() -> float:
+    return time.monotonic() * 1e6
+
+
+@dataclass
+class Ticket:
+    """One admitted (or rejected) request.
+
+    ``status`` walks ``queued -> done | failed``; admission overload
+    short-circuits to ``rejected`` (never enqueued — retry after
+    ``retry_after_us``). ``result`` holds the QueryResult for ``done``
+    tickets, ``error`` the execution exception for ``failed`` ones —
+    one bad bind can neither wedge its bucket nor discard neighbors."""
+
+    tid: int
+    shape: Any
+    params: Dict[str, Any] = dfield(default_factory=dict)
+    status: str = "queued"
+    result: Any = None
+    error: Optional[Exception] = None
+    retry_after_us: Optional[float] = None
+    submitted_us: float = 0.0
+    done_us: Optional[float] = None
+
+    @property
+    def latency_us(self) -> Optional[float]:
+        if self.done_us is None:
+            return None
+        return self.done_us - self.submitted_us
+
+
+class QueryLoop:
+    """Self-driving admission loop over one shared ``GRFusion`` engine."""
+
+    def __init__(
+        self,
+        engine,
+        *,
+        lane_width: int = 16,
+        flush_deadline_us: float = 2000.0,
+        max_pending: int = 1024,
+        clock: Optional[Callable[[], float]] = None,
+    ):
+        self.engine = engine
+        self.lane_width = int(lane_width)
+        self.flush_deadline_us = float(flush_deadline_us)
+        self.max_pending = int(max_pending)
+        self.clock = clock or _monotonic_us
+        # shared cross-client plan cache (one plan per structural shape,
+        # engine-wide — NOT per loop, so QueryServer admissions and direct
+        # prepare_cached callers warm the same entries)
+        self.plans = engine.plan_cache
+        self._prepared: Dict[Any, Any] = {}  # shape -> PreparedPlan
+        self._buckets: "collections.OrderedDict[Any, List[Ticket]]" = (
+            collections.OrderedDict()
+        )
+        self._deadline: Dict[Any, float] = {}  # shape -> oldest-ticket due
+        self._rr: List[Any] = []  # shape service order (rotates)
+        self._rr_next = 0
+        self.pending = 0
+        self._next_tid = 0
+        self.stats = collections.Counter()
+
+    # ------------------------------------------------------------ admission
+    def submit(self, query, **params) -> Ticket:
+        """Admit one request: shape-key the query, plan on first sight of
+        the shape (shared cache), enqueue a ticket carrying only the
+        parameter bindings. Over ``max_pending`` the ticket comes back
+        ``rejected`` with a retry hint instead of growing the queue."""
+        now = self.clock()
+        tid = self._next_tid
+        self._next_tid += 1
+        shape = self.engine.query_shape(query)
+        if self.pending >= self.max_pending:
+            self.stats["rejected"] += 1
+            return Ticket(
+                tid=tid, shape=shape, params=dict(params),
+                status="rejected", submitted_us=now,
+                retry_after_us=self._retry_after(now),
+            )
+        prepared = self.plans.get_or_prepare(
+            shape, lambda: self.engine.prepare(query)
+        )
+        self._prepared[shape] = prepared
+        t = Ticket(tid=tid, shape=shape, params=dict(params),
+                   submitted_us=now)
+        bucket = self._buckets.get(shape)
+        if bucket is None:
+            bucket = self._buckets[shape] = []
+            self._rr.append(shape)
+        if not bucket:
+            self._deadline[shape] = now + self.flush_deadline_us
+        bucket.append(t)
+        self.pending += 1
+        self.stats["admitted"] += 1
+        return t
+
+    def _retry_after(self, now: float) -> float:
+        """Backpressure hint: the earliest queued bucket flushes by its
+        deadline, freeing lane_width slots — retry then."""
+        due = min(self._deadline.values(), default=now)
+        return max(due - now, 0.0) + self.flush_deadline_us
+
+    # ------------------------------------------------------------- service
+    def next_due(self) -> Optional[float]:
+        """Earliest bucket flush deadline, or None when nothing is queued.
+        Discrete-event drivers (the fig13 closed-loop benchmark) advance
+        their virtual clock to this instant between arrivals instead of
+        busy-polling ``pump``."""
+        return min(self._deadline.values(), default=None)
+
+    def _ready(self, shape, now: float) -> bool:
+        bucket = self._buckets.get(shape)
+        if not bucket:
+            return False
+        return (
+            len(bucket) >= self.lane_width
+            or now >= self._deadline[shape]
+        )
+
+    def pump(self, *, force: bool = False) -> List[Ticket]:
+        """One loop iteration: serve every *ready* bucket once, round-robin
+        from just past the shape served first last time. Each bucket
+        yields at most ``lane_width`` tickets per rotation; a hot shape's
+        remainder re-queues behind every other ready shape with a fresh
+        deadline (a still-full remainder stays ready by size, but only
+        gets its next turn after the rest of the rotation). ``force=True``
+        treats every non-empty bucket as ready (drain semantics)."""
+        now = self.clock()
+        done: List[Ticket] = []
+        n = len(self._rr)
+        if n == 0:
+            return done
+        order = [self._rr[(self._rr_next + i) % n] for i in range(n)]
+        rotated = False
+        for shape in order:
+            if not (force or self._ready(shape, now)):
+                continue
+            if not rotated:
+                # next pump starts after the first shape served this time
+                self._rr_next = (self._rr.index(shape) + 1) % n
+                rotated = True
+            bucket = self._buckets[shape]
+            batch, rest = bucket[: self.lane_width], bucket[self.lane_width:]
+            self._buckets[shape] = rest
+            if rest:
+                self._deadline[shape] = now + self.flush_deadline_us
+            else:
+                self._deadline.pop(shape, None)
+            prepared = self._prepared[shape]
+            for t in batch:
+                try:
+                    t.result = prepared.bind(**t.params).execute()
+                    t.status = "done"
+                    self.stats["executed"] += 1
+                except Exception as e:  # noqa: BLE001 - per-ticket isolation
+                    t.error = e
+                    t.status = "failed"
+                    self.stats["failed"] += 1
+                t.done_us = self.clock()
+                done.append(t)
+            self.pending -= len(batch)
+            self.stats["flushes"] += 1
+        return done
+
+    def drain(self) -> List[Ticket]:
+        """Service everything queued regardless of deadlines (shutdown /
+        test convenience); fairness rotation still applies per pass."""
+        out: List[Ticket] = []
+        while self.pending:
+            out.extend(self.pump(force=True))
+        return out
+
+    def run_until_idle(self, *, max_iters: int = 1_000_000) -> List[Ticket]:
+        """Drive ``pump`` until the queue is empty, honoring deadlines
+        (busy-waits on the injected clock between due times)."""
+        out: List[Ticket] = []
+        it = 0
+        while self.pending and it < max_iters:
+            out.extend(self.pump())
+            it += 1
+        return out

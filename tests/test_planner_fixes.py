@@ -1,0 +1,274 @@
+"""Planner cardinality / cycle / distinct-vertices regression suite.
+
+Three cost-model and semantics bugs that mis-planned (or rejected) exactly
+the parameterized composed-PATHS shapes the serving loop replays:
+
+  * column-anchored path estimates used a fixed 32-row producer guess —
+    now the anchor's referenced producer (another PATHS source or a
+    relational scan) is estimated and threaded through;
+  * cyclic column-anchor dependencies between PATHS sources raised
+    NotImplementedError — now one orientation is demoted to a path-join
+    condition, costed, and the cheaper one picked;
+  * ``distinct-vertices`` counted shared vertex *occurrences*, so a
+    ``close_loop`` path's repeated junction vertex over-filtered — now
+    the filter counts distinct shared values.
+
+Every result is verified against a numpy/python brute-force enumeration.
+"""
+import numpy as np
+import pytest
+
+from repro.core import logical as L
+from repro.core import optimizer as OPT
+from repro.core.engine import GRFusion
+from repro.core.query import Query, P
+
+# undirected fixture graph: the test_path_join social graph plus the
+# (1, 4) chord, so 1-3-4 is a triangle (3-cycles have witnesses)
+EDGES = [(1, 3), (2, 3), (3, 4), (4, 5), (1, 4)]
+VERTS = [1, 2, 3, 4, 5]
+
+
+@pytest.fixture
+def social():
+    eng = GRFusion()
+    eng.create_table("Users", {"uId": np.array(VERTS)}, capacity=8)
+    eng.create_table("Rel", {
+        "relId": np.arange(1, len(EDGES) + 1),
+        "uId1": np.array([e[0] for e in EDGES]),
+        "uId2": np.array([e[1] for e in EDGES]),
+    }, capacity=16)
+    eng.create_graph_view(
+        "G", vertexes="Users", edges="Rel",
+        v_id="uId", e_src="uId1", e_dst="uId2", directed=False,
+    )
+    return eng
+
+
+# ------------------------------------------------------------ brute force
+def _adj():
+    adj = {v: set() for v in VERTS}
+    for a, b in EDGES:
+        adj[a].add(b)
+        adj[b].add(a)
+    return adj
+
+
+def brute_paths(lo, hi, start=None, close_loop=False):
+    """Simple paths as vertex tuples; close_loop also emits start==end
+    walks whose only repeat is the junction vertex."""
+    adj = _adj()
+    out = []
+    starts = [start] if start is not None else VERTS
+    stack = [(s,) for s in starts]
+    while stack:
+        p = stack.pop()
+        hops = len(p) - 1
+        if lo <= hops <= hi and hops > 0:
+            if close_loop:
+                if p[-1] == p[0]:
+                    out.append(p)
+            else:
+                out.append(p)
+        if hops < hi:
+            for n in adj[p[-1]]:
+                if n not in p or (close_loop and n == p[0]):
+                    stack.append(p + (n,))
+    return out
+
+
+def _rows(res, *cols):
+    return sorted(
+        tuple(int(x) for x in row)
+        for row in zip(*(np.asarray(res.columns[c])[: res.count] for c in cols))
+    )
+
+
+# --------------------------------------------------- bug 1: cardinality
+def _classified_state(eng, q):
+    """Optimizer state after predicate classification (cost-model probe)."""
+    if q.max_path_len is None:
+        q.max_path_len = eng.default_max_path_len
+    st = OPT._State(q, L.build_logical(q), stats=eng)
+    OPT.rule_classify_predicates(st)
+    return st
+
+
+def test_col_anchor_estimate_threads_producer_cardinality(social):
+    """A column-anchored path's source count is its producer's estimated
+    cardinality, not a fixed 32-lane guess."""
+    P1, P2 = P("P1"), P("P2")
+    q = (Query().from_paths("G", "P1").from_paths("G", "P2")
+         .where((P1.start.id == 1) & (P1.length == 1)
+                & (P2.start.id == P1.end.id) & (P2.length == 1))
+         .select(e=P2.end.id))
+    st = _classified_state(social, q)
+    p1 = next(p for p in st.paths if p.alias == "P1")
+    p2 = next(p for p in st.paths if p.alias == "P2")
+    gs = social.graph_stats("G")
+    F = max(float(gs.avg_fan_out), 1.0)
+    est_p1 = OPT._estimate_path_rows(st, p1)
+    assert est_p1 == pytest.approx(F)  # one const lane, one hop
+    # standalone estimate of P2 resolves P1 as its producer width
+    assert OPT._estimate_path_rows(st, p2) == pytest.approx(est_p1 * F)
+    # the un-threadable case keeps a finite fallback instead of blowing up
+    p2.spec.start_anchor = ("col", "NoSuchAlias.endvertexid")
+    assert OPT._estimate_path_rows(st, p2) == pytest.approx(32.0 * F)
+
+
+def test_col_anchor_estimate_resolves_relational_producer(social):
+    """Anchors on relational columns thread the scan's filtered estimate."""
+    from repro.core.query import col
+
+    PS = P("PS")
+    q = (Query().from_table("Users", "U").from_paths("G", "PS")
+         .where((col("U.uId") == 3) & (PS.start.id == col("U.uId"))
+                & (PS.length == 1))
+         .select(e=PS.end.id))
+    st = _classified_state(social, q)
+    ps = next(p for p in st.paths if p.alias == "PS")
+    gs = social.graph_stats("G")
+    F = max(float(gs.avg_fan_out), 1.0)
+    scan_est = OPT._estimate_scan_rows(st, st.scans["U"])
+    assert OPT._estimate_path_rows(st, ps) == pytest.approx(scan_est * F)
+
+
+def test_pathjoin_capacity_reflects_threaded_estimate(social):
+    """The path-join rule's costed capacities come from the threaded
+    producer cardinalities (asserted against the rule trace)."""
+    A, B, D = P("A"), P("B"), P("D")
+    q = (Query()
+         .from_paths("G", "A").from_paths("G", "B").from_paths("G", "D")
+         .where((A.start.id == B.end.id) & (B.start.id == A.end.id)
+                & (D.end.id == B.end.id)
+                & (A.length == 1) & (B.length == 1) & (D.length == 1))
+         .select(s=D.start.id))
+    plan = social.explain(q)
+    gs = social.graph_stats("G")
+    F = max(float(gs.avg_fan_out), 1.0)
+    # cycle broken by demoting A (FROM-order tie): stack is A (unanchored)
+    # then B seeded from A's rows; D hash-joins the stack
+    est_a = gs.n_vertices * F
+    est_b = est_a * F
+    est_d = gs.n_vertices * F
+    est_join = max(est_b * est_d / gs.n_vertices, 1.0)
+    cap = OPT._pow2_at_least(4.0 * est_join)
+    msg = next(
+        e.message for e in plan.trace
+        if e.rule == "path-join" and e.message.startswith("path join")
+    )
+    assert f"left~{est_b:.0f} x right~{est_d:.0f}" in msg
+    assert f"capacity {cap})" in msg
+
+
+# ---------------------------------------------------- bug 2: anchor cycles
+def test_two_cycle_anchor_dependency(social):
+    """A.start == B.end AND B.start == A.end used to raise; now one anchor
+    demotes to a path-join condition and results match brute force."""
+    A, B = P("A"), P("B")
+    q = (Query().from_paths("G", "A").from_paths("G", "B")
+         .where((A.start.id == B.end.id) & (B.start.id == A.end.id)
+                & (A.length == 1) & (B.length == 1))
+         .select(a_s=A.start.id, a_e=A.end.id, b_s=B.start.id, b_e=B.end.id))
+    plan = social.explain(q)
+    assert any(
+        e.rule == "path-ordering" and "cyclic PATHS anchor dependencies" in e.message
+        and "demoted to path-join condition" in e.message
+        for e in plan.trace
+    )
+    got = _rows(social.run(q), "a_s", "a_e", "b_s", "b_e")
+    pa = brute_paths(1, 1)
+    exp = sorted(
+        (a[0], a[-1], b[0], b[-1])
+        for a in pa for b in pa
+        if a[0] == b[-1] and b[0] == a[-1]
+    )
+    assert got == exp and got  # non-vacuous: the chord gives witnesses
+
+
+def test_three_cycle_anchor_dependency(social):
+    """3-cycle of anchors (A<-C, B<-A, C<-B) plans and matches the brute
+    triangle enumeration."""
+    A, B, C = P("A"), P("B"), P("C")
+    q = (Query()
+         .from_paths("G", "A").from_paths("G", "B").from_paths("G", "C")
+         .where((A.start.id == C.end.id) & (B.start.id == A.end.id)
+                & (C.start.id == B.end.id)
+                & (A.length == 1) & (B.length == 1) & (C.length == 1))
+         .select(a_s=A.start.id, b_s=B.start.id, c_s=C.start.id,
+                 c_e=C.end.id))
+    got = _rows(social.run(q), "a_s", "b_s", "c_s", "c_e")
+    pa = brute_paths(1, 1)
+    exp = sorted(
+        (a[0], b[0], c[0], c[-1])
+        for a in pa for b in pa for c in pa
+        if a[0] == c[-1] and b[0] == a[-1] and c[0] == b[-1]
+    )
+    assert got == exp and got  # the 1-3-4 triangle provides witnesses
+
+
+def test_cycle_orientation_picks_cheaper_demotion(social):
+    """With unequal length windows the cheaper unanchored enumeration is
+    the one demoted (here B: one hop enumerates fewer rows than A's two)."""
+    A, B = P("A"), P("B")
+    q = (Query().from_paths("G", "A").from_paths("G", "B")
+         .where((A.start.id == B.end.id) & (B.start.id == A.end.id)
+                & (A.length == 2) & (B.length == 1))
+         .select(a_s=A.start.id, b_s=B.start.id))
+    plan = social.explain(q)
+    msg = next(
+        e.message for e in plan.trace
+        if "demoted to path-join condition" in e.message
+    )
+    assert "B.start anchor on A.end demoted" in msg
+    # and the composition still matches brute force
+    got = _rows(social.run(q), "a_s", "b_s")
+    exp = sorted(
+        (a[0], b[0])
+        for a in brute_paths(2, 2) for b in brute_paths(1, 1)
+        if a[0] == b[-1] and b[0] == a[-1]
+    )
+    assert got == exp and got
+
+
+# ------------------------------------------- bug 3: close_loop distinct
+def test_close_loop_distinct_vertices_counts_junction_once(social):
+    """A close_loop path repeats exactly its junction vertex; the
+    distinct-vertices filter must count it as ONE shared vertex."""
+    PA, PB = P("PA"), P("PB")
+
+    def query():
+        return (Query().from_paths("G", "PA").from_paths("G", "PB")
+                .where((PA.start.id == 3) & (PA.start.id == PA.end.id)
+                       & (PA.length == 2)
+                       & (PB.start.id == PA.end.id) & (PB.length == 1))
+                .select(pa=PA.path_string, pb=PB.path_string))
+
+    loops = brute_paths(2, 2, start=3, close_loop=True)
+    hops = brute_paths(1, 1, start=3)
+    loose = social.run(query())
+    assert loose.count == len(loops) * len(hops)
+
+    strict = social.run(query().distinct_vertices())
+    # globally simple: the loop and the hop may share exactly the junction
+    # vertex (distinct values, not occurrences — the loop visits 3 twice)
+    exp = [
+        (l, h) for l in loops for h in hops
+        if set(l) & set(h) == {3}
+    ]
+    assert strict.count == len(exp)
+    assert 0 < strict.count < loose.count
+    vids = np.asarray(social.views["G"].view.v_ids)
+
+    def to_ids(s):  # path_string emits vertex positions, not external ids
+        return "->".join(str(int(vids[int(x)])) for x in s.split("->"))
+
+    got = sorted(
+        (to_ids(social.path_string(strict, "pa", i)),
+         to_ids(social.path_string(strict, "pb", i)))
+        for i in range(strict.count)
+    )
+    want = sorted(
+        ("->".join(map(str, l)), "->".join(map(str, h))) for l, h in exp
+    )
+    assert got == want

@@ -1,0 +1,219 @@
+"""Continuous-batching QueryLoop: admission, flush, fairness, identity.
+
+The loop is driven with an injected virtual clock so deadline behavior is
+deterministic; execution itself is real (shared engine, shared plan cache,
+warm compiled runtime)."""
+import numpy as np
+import pytest
+
+from repro.core.engine import GRFusion
+from repro.core.query import Query, P, col, param
+from repro.serve.loop import QueryLoop
+
+EDGES = [(1, 3), (2, 3), (3, 4), (4, 5)]
+
+
+class Clock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, us):
+        self.now += us
+
+
+@pytest.fixture
+def eng():
+    e = GRFusion()
+    e.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=8)
+    e.create_table("Rel", {
+        "relId": np.arange(1, len(EDGES) + 1),
+        "uId1": np.array([a for a, _ in EDGES]),
+        "uId2": np.array([b for _, b in EDGES]),
+    }, capacity=16)
+    e.create_graph_view("G", vertexes="Users", edges="Rel",
+                        v_id="uId", e_src="uId1", e_dst="uId2",
+                        directed=False)
+    return e
+
+
+def friends_query():
+    PS = P("PS")
+    return (Query().from_paths("G", "PS")
+            .where((PS.start.id == param("src")) & (PS.length == 1))
+            .select(e=PS.end.id))
+
+
+def two_hop_query():
+    PS = P("PS")
+    return (Query().from_paths("G", "PS")
+            .where((PS.start.id == param("src")) & (PS.length == 2))
+            .select(e=PS.end.id))
+
+
+def ends(t):
+    return sorted(int(x) for x in
+                  np.asarray(t.result.columns["e"])[: t.result.count])
+
+
+def test_deadline_flush_fires_without_full_bucket(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=16, flush_deadline_us=2000.0,
+                     clock=clk)
+    t = loop.submit(friends_query(), src=3)
+    assert t.status == "queued" and loop.pending == 1
+    assert loop.pump() == []  # bucket below lane_width, deadline not due
+    clk.advance(1999.0)
+    assert loop.pump() == []
+    clk.advance(2.0)  # past the bucket's deadline
+    done = loop.pump()
+    assert [d.tid for d in done] == [t.tid]
+    assert t.status == "done" and loop.pending == 0
+    assert ends(t) == [1, 2, 4]
+    assert t.latency_us == pytest.approx(2001.0)
+
+
+def test_full_bucket_flushes_before_deadline(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=4, flush_deadline_us=1e9, clock=clk)
+    tickets = [loop.submit(friends_query(), src=s) for s in (1, 2, 3, 4)]
+    done = loop.pump()  # lane full: no deadline wait
+    assert {d.tid for d in done} == {t.tid for t in tickets}
+    assert all(t.status == "done" for t in tickets)
+
+
+def test_backpressure_rejects_at_capacity_with_retry_hint(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=8, flush_deadline_us=500.0,
+                     max_pending=2, clock=clk)
+    a = loop.submit(friends_query(), src=1)
+    b = loop.submit(friends_query(), src=2)
+    c = loop.submit(friends_query(), src=3)
+    assert (a.status, b.status, c.status) == ("queued", "queued", "rejected")
+    assert loop.pending == 2  # the queue did NOT grow past max_pending
+    assert c.retry_after_us is not None and c.retry_after_us > 0
+    assert loop.stats["rejected"] == 1
+    # after the hinted wait the queue has flushed and admission reopens
+    clk.advance(c.retry_after_us)
+    loop.pump()
+    assert loop.pending == 0
+    assert loop.submit(friends_query(), src=3).status == "queued"
+
+
+def test_shared_plan_cache_across_clients_with_different_binds(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=8, flush_deadline_us=100.0, clock=clk)
+    # two clients build the query independently (same structure, their own
+    # objects and bind values): the second admission must hit the shared
+    # shape-keyed cache, not re-plan
+    t1 = loop.submit(friends_query(), src=1)
+    builds0 = eng.plan_cache.stats["plan_builds"]
+    t2 = loop.submit(friends_query(), src=4)
+    assert eng.plan_cache.stats["plan_builds"] == builds0
+    assert eng.plan_cache.stats["plan_hits"] >= 1
+    clk.advance(101.0)
+    loop.pump()
+    assert ends(t1) == [3] and ends(t2) == [3, 5]
+    # and the QueryServer admission path shares the same cache entry
+    from repro.serve.engine import QueryServer
+
+    srv = QueryServer(eng, "G")
+    srv.submit_plan(friends_query().hint_max_length(
+        eng.default_max_path_len))
+    assert eng.plan_cache.stats["plan_builds"] == builds0
+
+
+def test_round_robin_fairness_under_one_hot_shape(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=4, flush_deadline_us=50.0, clock=clk)
+    hot = [loop.submit(friends_query(), src=1 + (i % 5)) for i in range(12)]
+    cold = loop.submit(two_hop_query(), src=3)
+    clk.advance(51.0)  # both shapes past deadline; hot is 3 lanes deep
+    first = loop.pump()
+    # one rotation serves at most lane_width of the hot shape AND the cold
+    # shape — the hot backlog cannot starve it
+    assert cold.tid in {t.tid for t in first}
+    assert sum(t.shape == hot[0].shape for t in first) == 4
+    loop.drain()
+    assert all(t.status == "done" for t in hot)
+    # rotation start advances between pumps (round-robin, not fixed order)
+    assert loop.stats["flushes"] >= 4
+
+
+def test_loop_results_bit_identical_to_direct_run(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=4, flush_deadline_us=10.0, clock=clk)
+    PS = P("PS")
+    qdir = (Query().from_table("Users", "U").from_paths("G", "PS")
+            .where((col("U.Job") == "Lawyer")
+                   & (PS.start.id == col("U.uId")) & (PS.length == 2))
+            .select(s=PS.start.id, e=PS.end.id))
+    direct = eng.run(qdir)
+    t = loop.submit(qdir)
+    clk.advance(11.0)
+    loop.pump()
+    assert t.status == "done"
+    assert t.result.count == direct.count
+    for c in direct.columns:
+        np.testing.assert_array_equal(
+            np.asarray(t.result.columns[c])[: direct.count],
+            np.asarray(direct.columns[c])[: direct.count],
+        )
+
+
+def test_warm_steady_state_executes_from_caches_only(eng):
+    """Acceptance: warm loop iterations re-plan and re-compile nothing —
+    PlanRuntime.stats moves only on its *_hits counters."""
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=2, flush_deadline_us=10.0, clock=clk)
+    binds = [1, 3]
+    for _ in range(2):  # warm the plan, masks, and both bind values
+        for s in binds:
+            loop.submit(friends_query(), src=s)
+        clk.advance(11.0)
+        loop.pump()
+    prepared = eng.plan_cache.get_or_prepare(
+        eng.query_shape(friends_query()),
+        lambda: pytest.fail("warm shape must already be cached"),
+    )
+    rt = prepared.runtime
+    before = dict(rt.stats)
+    plan_builds = eng.plan_cache.stats["plan_builds"]
+    tickets = []
+    for _ in range(3):  # steady state
+        for s in binds:
+            tickets.append(loop.submit(friends_query(), src=s))
+        clk.advance(11.0)
+        loop.pump()
+    assert all(t.status == "done" for t in tickets)
+    delta = {k: v - before.get(k, 0) for k, v in rt.stats.items()
+             if v != before.get(k, 0)}
+    assert delta and all(k.endswith("hits") for k in delta), delta
+    assert eng.plan_cache.stats["plan_builds"] == plan_builds
+
+
+def test_failed_ticket_isolates_error(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=8, flush_deadline_us=10.0, clock=clk)
+    bad = loop.submit(friends_query())  # src never bound
+    good = loop.submit(friends_query(), src=3)
+    clk.advance(11.0)
+    loop.pump()
+    assert bad.status == "failed" and isinstance(bad.error, ValueError)
+    assert "unbound parameter" in str(bad.error)
+    assert good.status == "done" and ends(good) == [1, 2, 4]
+
+
+def test_engine_entry_point_returns_one_loop(eng):
+    loop = eng.serving_loop(lane_width=8)
+    assert eng.serving_loop() is loop
+    with pytest.raises(RuntimeError):
+        eng.serving_loop(lane_width=4)
+    t = loop.submit(friends_query(), src=3)
+    done = loop.drain()
+    assert t in done and t.status == "done"
