@@ -14,6 +14,10 @@
 #                 past its stored threshold (REPRO_PLAN_OVERHEAD_MAX, 1.3;
 #                 REPRO_SERVING_P99_MAX, 3.0) or the warm serving steady
 #                 state stops running purely from caches
+#   analyze       static analysis — hot-path lint over src/repro against
+#                 scripts/lint_baseline.json (python -m repro.analysis);
+#                 fails on any fresh host-sync / device-loop /
+#                 structural-repr / pump-alloc finding
 #   docs          executes the README's worked example
 #                 (examples/readme_example.py, asserted output) so the
 #                 documented API can never drift from the code
@@ -24,7 +28,7 @@ cd "$(dirname "$0")/.."
 
 STAGES=("$@")
 if [ ${#STAGES[@]} -eq 0 ]; then
-  STAGES=(collect tier1 differential bench docs)
+  STAGES=(collect tier1 differential analyze bench docs)
 fi
 
 declare -a TIMINGS=()
@@ -40,7 +44,19 @@ run_stage() {
   echo "== stage ${name} OK in $((t1 - t0))s =="
 }
 
-for stage in "${STAGES[@]}"; do
+bench_stage() {
+  # runs inside run_stage so the cat of the records counts toward the
+  # stage and a missing record file fails the stage itself
+  env REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
+  echo "-- plan overhead record --"
+  cat BENCH_plan_overhead.json
+  echo "-- serving record --"
+  cat BENCH_serving.json
+}
+
+# "${ARR[@]}" on an empty array trips `set -u` before bash 4.4; the
+# ${ARR[@]+...} guards keep stage-less / timing-less runs working there.
+for stage in ${STAGES[@]+"${STAGES[@]}"}; do
   case "$stage" in
     collect)
       # collection errors (bad imports, syntax) abort the run immediately
@@ -52,12 +68,11 @@ for stage in "${STAGES[@]}"; do
     differential)
       run_stage differential python -m pytest -q -m differential
       ;;
+    analyze)
+      run_stage analyze env PYTHONPATH=src python -m repro.analysis
+      ;;
     bench)
-      run_stage bench env REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.run
-      echo "-- plan overhead record --"
-      cat BENCH_plan_overhead.json
-      echo "-- serving record --"
-      cat BENCH_serving.json
+      run_stage bench bench_stage
       ;;
     docs)
       # the README's worked example, extracted verbatim and asserted —
@@ -72,6 +87,6 @@ for stage in "${STAGES[@]}"; do
 done
 
 echo "CI OK — stage timings:"
-for t in "${TIMINGS[@]}"; do
+for t in ${TIMINGS[@]+"${TIMINGS[@]}"}; do
   echo "  ${t}"
 done

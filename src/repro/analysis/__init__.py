@@ -1,0 +1,36 @@
+"""Static-analysis layer: plan verifier + hot-path lint.
+
+Two independent checkers that turn PR-5-class plan-shape bugs and JAX
+hot-path hazards from runtime surprises into plan-time / CI failures:
+
+* :mod:`repro.analysis.plan_verify` — typed invariant checks over the
+  optimizer's logical and physical plan trees. Hooked into
+  ``repro.core.optimizer.optimize``: after every named rewrite rule when
+  ``REPRO_VERIFY_PLANS=1`` (on by default under pytest), and once at plan
+  finalization always. Violations raise :class:`PlanInvariantError`
+  naming the rule that introduced them.
+* :mod:`repro.analysis.lint` — an AST lint over ``src/repro`` with
+  repo-specific rules (host syncs in hot paths, Python loops over device
+  arrays, structural-key classes without stable reprs, allocation inside
+  ``QueryLoop.pump``). Run it with ``python -m repro.analysis``; the
+  ``analyze`` stage of ``scripts/ci.sh`` fails on any unsuppressed
+  finding (suppress with a ``# lint: allow-<rule>`` pragma or the
+  checked-in baseline ``scripts/lint_baseline.json``).
+"""
+from repro.analysis.lint import Finding, lint_paths, lint_source
+from repro.analysis.plan_verify import (
+    PlanInvariantError,
+    verify_after_rule,
+    verify_enabled,
+    verify_plan,
+)
+
+__all__ = [
+    "Finding",
+    "lint_paths",
+    "lint_source",
+    "PlanInvariantError",
+    "verify_after_rule",
+    "verify_enabled",
+    "verify_plan",
+]

@@ -1,0 +1,75 @@
+"""CLI for the analysis layer's lint pass.
+
+    python -m repro.analysis [root ...] [--baseline FILE]
+                             [--update-baseline] [--no-baseline]
+
+Defaults to linting ``src/repro`` against the checked-in baseline
+``scripts/lint_baseline.json``. Exit status 1 on any finding that is
+neither pragma-suppressed nor baselined — this is what the ``analyze``
+stage of ``scripts/ci.sh`` runs. ``--update-baseline`` rewrites the
+baseline from the current findings (do this only when grandfathering a
+deliberate, reviewed exception).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from repro.analysis.lint import lint_paths, load_baseline, save_baseline
+
+_REPO_ROOT = Path(__file__).resolve().parents[3]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Repo-specific hot-path lint (see repro.analysis.lint).",
+    )
+    ap.add_argument(
+        "roots", nargs="*",
+        default=[str(_REPO_ROOT / "src" / "repro")],
+        help="directories/files to lint (default: src/repro)",
+    )
+    ap.add_argument(
+        "--baseline", default=str(_REPO_ROOT / "scripts" / "lint_baseline.json"),
+        help="baseline file of grandfathered finding identities",
+    )
+    ap.add_argument(
+        "--no-baseline", action="store_true",
+        help="report every unsuppressed finding, ignoring the baseline",
+    )
+    ap.add_argument(
+        "--update-baseline", action="store_true",
+        help="rewrite the baseline from the current findings and exit 0",
+    )
+    args = ap.parse_args(argv)
+
+    findings = []
+    for root in args.roots:
+        findings.extend(lint_paths(root))
+
+    if args.update_baseline:
+        save_baseline(args.baseline, findings)
+        print(f"baseline updated: {args.baseline} "
+              f"({len({f.ident for f in findings})} identit(y/ies))")
+        return 0
+
+    baseline = set() if args.no_baseline else load_baseline(args.baseline)
+    fresh = [f for f in findings if f.ident not in baseline]
+    known = [f for f in findings if f.ident in baseline]
+
+    for f in fresh:
+        print(f)
+    if known:
+        print(f"({len(known)} baselined finding(s) suppressed; "
+              "run with --no-baseline to list)")
+    if fresh:
+        print(f"{len(fresh)} unsuppressed finding(s)")
+        return 1
+    print("analysis lint: clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

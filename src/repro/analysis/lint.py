@@ -1,0 +1,364 @@
+"""AST-based hot-path lint with repo-specific rules.
+
+The rules encode hazards that are invisible to generic linters because
+they depend on *this* codebase's execution model (JAX device arrays on
+the executor/serving hot path, structural shape keys built from reprs):
+
+=================== ======================================================
+``host-sync``       ``np.asarray(...)``, ``.item()``, ``float(...)`` on a
+                    runtime value, or ``bool(jnp.…(...))`` inside a
+                    hot-path function — each forces a device→host
+                    transfer that serializes the pipeline. Result-assembly
+                    sites are allowlisted with ``# lint: allow-host-sync``.
+``device-loop``     a Python ``for`` loop iterating a ``jnp`` array
+                    (directly or through a local assigned from a ``jnp``
+                    call) inside a hot-path function — O(n) dispatches
+                    where one vectorized op would do.
+``structural-repr`` a class participating in ``query_shape_key``
+                    structural keys (an ``Expr``/``PathExpr`` subclass)
+                    without a stable ``__repr__``/``structural_key`` in
+                    its body (``@dataclass`` auto-reprs count) — the
+                    default object repr leaks ``id()`` into shape keys
+                    and defeats cross-run plan-cache sharing.
+``pump-alloc``      a ``jnp`` array-allocation call inside
+                    ``QueryLoop.pump``'s per-ticket path — steady-state
+                    serving must touch warm caches, not allocate.
+=================== ======================================================
+
+Suppression is explicit and reviewable: a ``# lint: allow-<rule>``
+pragma on the offending line (or on the enclosing ``def``/``class``
+line, covering the whole body), or an entry in the checked-in baseline
+file (``scripts/lint_baseline.json``) keyed by ``path::rule::qualname``
+so pre-existing findings are grandfathered without hiding new ones.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import re
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Sequence, Set
+
+__all__ = [
+    "Finding",
+    "lint_source",
+    "lint_paths",
+    "load_baseline",
+    "save_baseline",
+    "HOT_PATH_FUNCS",
+]
+
+
+# Hot-path registry: (path suffix) -> function names whose bodies are the
+# per-execution / per-ticket fast path. Matched by endswith so callers can
+# pass absolute paths, repo-relative paths, or corpus-test pseudo-paths.
+HOT_PATH_FUNCS: Dict[str, Set[str]] = {
+    "core/executor.py": {
+        "run", "run_count", "finalize", "_enumerate", "_prepare",
+        "_child_batch", "_apply_scan_filters", "eval_on_batch", "_join",
+        "_vmask", "_emask", "_start_positions", "_end_anchor_mask",
+        "_hop_masks", "_vert_ids",
+    },
+    "core/compiled.py": {"mask", "cached", "evaluate", "__call__"},
+    "serve/loop.py": {"pump", "submit"},
+    "serve/engine.py": {"submit", "step", "flush", "flush_plans"},
+}
+
+# jnp calls that allocate fresh device arrays (the pump-alloc rule)
+_JNP_ALLOC = {"asarray", "array", "zeros", "ones", "full", "arange", "empty"}
+
+_PRAGMA_RE = re.compile(r"#\s*lint:\s*([a-z0-9_,\- ]+)")
+
+
+@dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    qualname: str
+    message: str
+
+    @property
+    def ident(self) -> str:
+        """Baseline identity — deliberately line-number-free so moving
+        code inside a function does not churn the baseline."""
+        return f"{self.path}::{self.rule}::{self.qualname}"
+
+    def __str__(self):
+        return f"{self.path}:{self.line}: [{self.rule}] {self.qualname}: {self.message}"
+
+
+def _pragmas(src: str) -> Dict[int, Set[str]]:
+    out: Dict[int, Set[str]] = {}
+    for i, line in enumerate(src.splitlines(), start=1):
+        m = _PRAGMA_RE.search(line)
+        if m:
+            out[i] = {tok.strip() for tok in m.group(1).split(",") if tok.strip()}
+    return out
+
+
+def _call_root(node: ast.AST) -> Optional[str]:
+    """Name at the root of an attribute chain: jnp.take(...) -> 'jnp'."""
+    while isinstance(node, ast.Attribute):
+        node = node.value
+    return node.id if isinstance(node, ast.Name) else None
+
+
+def _is_jnp_call(node: ast.AST) -> bool:
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Attribute)
+        and _call_root(node.func) == "jnp"
+    )
+
+
+class _HotPathVisitor(ast.NodeVisitor):
+    """host-sync / device-loop / pump-alloc over one module."""
+
+    def __init__(self, path: str, hot_funcs: Set[str], in_serve: bool):
+        self.path = path
+        self.hot_funcs = hot_funcs
+        self.in_serve = in_serve
+        self.scope: List[str] = []  # class/function qualname parts
+        # per-function state stacks
+        self.hot: List[bool] = [False]
+        self.pump: List[bool] = [False]
+        self.def_lines: List[int] = []  # enclosing def/class lines (pragma scope)
+        self.device_names: List[Set[str]] = [set()]
+        self.findings: List[Finding] = []
+
+    # -- bookkeeping -------------------------------------------------------
+    def _qualname(self) -> str:
+        return ".".join(self.scope) or "<module>"
+
+    def _flag(self, rule: str, node: ast.AST, message: str):
+        self.findings.append(Finding(
+            rule=rule, path=self.path, line=node.lineno,
+            qualname=self._qualname(), message=message,
+        ))
+
+    def visit_ClassDef(self, node: ast.ClassDef):
+        self.scope.append(node.name)
+        self.def_lines.append(node.lineno)
+        self.generic_visit(node)
+        self.def_lines.pop()
+        self.scope.pop()
+
+    def _visit_func(self, node):
+        self.scope.append(node.name)
+        self.def_lines.append(node.lineno)
+        self.hot.append(node.name in self.hot_funcs)
+        self.pump.append(self.in_serve and node.name == "pump")
+        self.device_names.append(set())
+        self.generic_visit(node)
+        self.device_names.pop()
+        self.pump.pop()
+        self.hot.pop()
+        self.def_lines.pop()
+        self.scope.pop()
+
+    visit_FunctionDef = _visit_func
+    visit_AsyncFunctionDef = _visit_func
+
+    # -- rules -------------------------------------------------------------
+    def visit_Assign(self, node: ast.Assign):
+        if self.hot[-1] and _is_jnp_call(node.value):
+            for t in node.targets:
+                if isinstance(t, ast.Name):
+                    self.device_names[-1].add(t.id)
+        self.generic_visit(node)
+
+    def visit_For(self, node: ast.For):
+        if self.hot[-1]:
+            it = node.iter
+            if _is_jnp_call(it):
+                self._flag(
+                    "device-loop", node,
+                    "Python-level for loop over a jnp call result — one "
+                    "dispatch per element; vectorize instead",
+                )
+            elif (isinstance(it, ast.Name)
+                  and it.id in self.device_names[-1]):
+                self._flag(
+                    "device-loop", node,
+                    f"Python-level for loop over device array '{it.id}' "
+                    "— one dispatch per element; vectorize instead",
+                )
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call):
+        if self.hot[-1]:
+            f = node.func
+            if (isinstance(f, ast.Attribute) and f.attr == "asarray"
+                    and _call_root(f) == "np"):
+                self._flag(
+                    "host-sync", node,
+                    "np.asarray() on the hot path materializes a device "
+                    "array on host (blocking transfer)",
+                )
+            elif isinstance(f, ast.Attribute) and f.attr == "item" \
+                    and not node.args:
+                self._flag(
+                    "host-sync", node,
+                    ".item() forces a device sync on the hot path",
+                )
+            elif (isinstance(f, ast.Name) and f.id == "float"
+                    and node.args
+                    and not isinstance(node.args[0], ast.Constant)):
+                self._flag(
+                    "host-sync", node,
+                    "float() on a runtime value forces a device sync when "
+                    "the value lives on device",
+                )
+            elif (isinstance(f, ast.Name) and f.id == "bool"
+                    and node.args and _is_jnp_call(node.args[0])):
+                self._flag(
+                    "host-sync", node,
+                    "bool(jnp...) forces a device sync on the hot path",
+                )
+        if self.pump[-1] and _is_jnp_call(node) \
+                and node.func.attr in _JNP_ALLOC:
+            self._flag(
+                "pump-alloc", node,
+                f"jnp.{node.func.attr}() allocation inside QueryLoop.pump's "
+                "per-ticket path — steady-state serving must reuse warm "
+                "buffers, not allocate",
+            )
+        self.generic_visit(node)
+
+
+def _structural_repr_findings(tree: ast.Module, path: str) -> List[Finding]:
+    """Classes reachable from query_shape_key's structural fallback
+    (Expr/PathExpr subclasses) must carry a stable repr."""
+    classes: Dict[str, ast.ClassDef] = {}
+    bases: Dict[str, Set[str]] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ClassDef):
+            classes[node.name] = node
+            bs = set()
+            for b in node.bases:
+                if isinstance(b, ast.Name):
+                    bs.add(b.id)
+                elif isinstance(b, ast.Attribute):
+                    bs.add(b.attr)
+            bases[node.name] = bs
+
+    roots = {"Expr", "PathExpr"}
+    structural: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for name, bs in bases.items():
+            if name in structural:
+                continue
+            if bs & (roots | structural):
+                structural.add(name)
+                changed = True
+
+    out: List[Finding] = []
+    for name in sorted(structural):
+        node = classes[name]
+        has_stable = any(
+            isinstance(n, ast.FunctionDef)
+            and n.name in ("__repr__", "structural_key")
+            for n in node.body
+        )
+        is_dataclass = any(
+            (isinstance(d, ast.Name) and d.id == "dataclass")
+            or (isinstance(d, ast.Attribute) and d.attr == "dataclass")
+            or (isinstance(d, ast.Call) and _call_root(d.func) in
+                ("dataclass", "dataclasses"))
+            for d in node.decorator_list
+        )
+        # abstract bases that only anchor the hierarchy are exempt —
+        # instances in shape keys are always concrete subclasses
+        if name in roots or has_stable or is_dataclass:
+            continue
+        out.append(Finding(
+            rule="structural-repr", path=path, line=node.lineno,
+            qualname=name,
+            message=(
+                f"class {name} participates in query_shape_key structural "
+                "keys (Expr/PathExpr subclass) but defines no stable "
+                "__repr__/structural_key — the default object repr leaks "
+                "id() into shape keys, breaking cross-run key stability"
+            ),
+        ))
+    return out
+
+
+def lint_source(src: str, path: str) -> List[Finding]:
+    """Lint one module's source. ``path`` should be repo-layout-relative
+    (e.g. ``core/executor.py``) — it selects the hot-path function set
+    and becomes the baseline identity prefix."""
+    tree = ast.parse(src)
+    hot_funcs: Set[str] = set()
+    for suffix, funcs in HOT_PATH_FUNCS.items():
+        if path.endswith(suffix):
+            hot_funcs |= funcs
+    v = _HotPathVisitor(path, hot_funcs, in_serve="serve/" in path)
+    v.visit(tree)
+    findings = v.findings + _structural_repr_findings(tree, path)
+
+    pragmas = _pragmas(src)
+
+    def suppressed(f: Finding) -> bool:
+        allow = f"allow-{f.rule}"
+        if allow in pragmas.get(f.line, ()):
+            return True
+        # pragma on any enclosing def/class line covers the body; walk
+        # the recorded lines of defs that lexically contain the finding
+        for line, toks in pragmas.items():
+            if allow in toks and line in _def_lines_containing(tree, f.line):
+                return True
+        return False
+
+    return sorted(
+        (f for f in findings if not suppressed(f)),
+        key=lambda f: (f.path, f.line, f.rule),
+    )
+
+
+def _def_lines_containing(tree: ast.Module, line: int) -> Set[int]:
+    out: Set[int] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            end = getattr(node, "end_lineno", node.lineno)
+            if node.lineno <= line <= end:
+                out.add(node.lineno)
+    return out
+
+
+def lint_paths(root) -> List[Finding]:
+    """Lint every ``.py`` file under ``root`` (a directory or one file).
+    Finding paths are reported relative to ``root`` so baseline idents
+    stay stable regardless of where the checkout lives."""
+    root = Path(root)
+    files: Iterable[Path]
+    if root.is_file():
+        files = [root]
+        base = root.parent
+    else:
+        files = sorted(root.rglob("*.py"))
+        base = root
+    out: List[Finding] = []
+    for p in files:
+        rel = p.relative_to(base).as_posix()
+        out.extend(lint_source(p.read_text(), rel))
+    return out
+
+
+# -- baseline ---------------------------------------------------------------
+def load_baseline(path) -> Set[str]:
+    p = Path(path)
+    if not p.exists():
+        return set()
+    data = json.loads(p.read_text())
+    return set(data.get("findings", []))
+
+
+def save_baseline(path, findings: Sequence[Finding]) -> None:
+    idents = sorted({f.ident for f in findings})
+    Path(path).write_text(json.dumps({"findings": idents}, indent=2) + "\n")

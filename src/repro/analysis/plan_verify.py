@@ -1,0 +1,605 @@
+"""Plan verifier: typed invariant checks over logical and physical plans.
+
+Every invariant here encodes a contract between optimizer rules and the
+executor that, when broken, previously surfaced only at execution time
+(the PR 5 bug sweep: bogus cardinality guesses, unresolvable anchor
+cycles, junction double-counting). The checks run in two modes:
+
+* after every named rewrite rule, on the optimizer's working ``_State``
+  (:func:`verify_after_rule`) — enabled when ``REPRO_VERIFY_PLANS=1``
+  (pytest turns it on via a conftest fixture), so a violation is
+  attributed to the exact rule that introduced it;
+* once at plan finalization, on the finished :class:`PhysicalPlan`
+  (:func:`verify_plan`) — always, regardless of the env flag.
+
+Invariants (names appear in :class:`PlanInvariantError` messages):
+
+==================== =====================================================
+``tree-shape``       the plan is a tree: no node object appears twice
+                     (a diamond/cycle would double-execute or hang)
+``column-resolution`` every column reference resolves in its producer's
+                     output schema (scans emit ``alias.col``; PathScan
+                     emits the §5.2 extended-tuple columns its *physical*
+                     actually materializes)
+``join-capacity``    HashJoin/PathJoin output capacities are >= the cost
+                     model's row estimates (estimates may widen a join,
+                     never starve it)
+``anchor-dag``       seeded-stack anchors form a DAG after cycle
+                     demotion: no column anchor references a source that
+                     is not already planned below the PathScan
+``param-binding``    every ``Param`` in the tree is declared in
+                     ``plan.param_names`` (what ``bind()`` validates
+                     against), so no binding is unreachable
+``trace-chain``      each snapshot-bearing ``RuleEvent``'s after-image
+                     structurally matches the tree the next rule received
+``cache-site-key``   every physical node that caches on ``PlanRuntime``
+                     exposes a stable, plan-unique call-site key (no
+                     object ids / unhashables that would break epoch
+                     cache reuse)
+==================== =====================================================
+"""
+from __future__ import annotations
+
+import os
+from typing import Iterable, List, Optional, Set
+
+from repro.core import executor as E
+from repro.core import expr as X
+from repro.core import logical as L
+from repro.core import query as Q
+
+__all__ = [
+    "PlanInvariantError",
+    "verify_enabled",
+    "verify_after_rule",
+    "verify_plan",
+]
+
+
+class PlanInvariantError(Exception):
+    """A plan failed a structural invariant.
+
+    ``rule`` names the optimizer rule that introduced the violation when
+    the per-rule checks are on (``REPRO_VERIFY_PLANS=1``); the
+    finalization-only pass attributes to ``"plan-finalization"``."""
+
+    def __init__(self, invariant: str, rule: str, message: str):
+        self.invariant = invariant
+        self.rule = rule
+        super().__init__(f"[{invariant}] after rule '{rule}': {message}")
+
+
+def verify_enabled() -> bool:
+    """Per-rule verification switch (read dynamically so tests and the
+    conftest fixture can flip it without re-importing)."""
+    return os.environ.get("REPRO_VERIFY_PLANS", "") == "1"
+
+
+# --------------------------------------------------------------------------
+# tree walking (shared by logical and physical IRs — both expose children())
+# --------------------------------------------------------------------------
+def _iter_nodes(root) -> Iterable:
+    stack = [root]
+    seen: Set[int] = set()
+    while stack:
+        n = stack.pop()
+        if id(n) in seen:  # revisit: diamond/cycle; tree-shape reports it
+            continue
+        seen.add(id(n))
+        yield n
+        stack.extend(n.children())
+
+
+def _check_tree_shape(root, rule: str) -> None:
+    seen: Set[int] = set()
+    aliases: Set[str] = set()
+    stack = [root]
+    while stack:
+        n = stack.pop()
+        if id(n) in seen:
+            raise PlanInvariantError(
+                "tree-shape", rule,
+                f"node {n.label()} is reachable more than once — the plan "
+                "must be a tree (shared subtrees double-execute; cycles "
+                "never terminate)",
+            )
+        seen.add(id(n))
+        spec = getattr(n, "spec", None)
+        alias = (spec.alias if spec is not None and hasattr(spec, "alias")
+                 else getattr(n, "alias", None))
+        is_source = spec is not None or hasattr(n, "filters")
+        if is_source and alias is not None:
+            if alias in aliases:
+                raise PlanInvariantError(
+                    "tree-shape", rule,
+                    f"FROM alias {alias!r} names more than one source — "
+                    "duplicate aliases make every column reference "
+                    "ambiguous and silently collide batch columns",
+                )
+            aliases.add(alias)
+        stack.extend(n.children())
+
+
+def _produced_aliases(node) -> Set[str]:
+    """Aliases produced by ``node``'s *subtree below it* (scans and path
+    scans under its children)."""
+    out: Set[str] = set()
+    stack = list(node.children())
+    while stack:
+        n = stack.pop()
+        spec = getattr(n, "spec", None)
+        if spec is not None:
+            out.add(spec.alias)
+        else:
+            a = getattr(n, "alias", None)
+            if a is not None:
+                out.add(a)
+        stack.extend(n.children())
+    return out
+
+
+# --------------------------------------------------------------------------
+# individual invariants
+# --------------------------------------------------------------------------
+def _check_anchor_dag(root, rule: str) -> None:
+    for n in _iter_nodes(root):
+        spec = getattr(n, "spec", None)
+        if spec is None or not hasattr(spec, "start_anchor"):
+            continue
+        below = _produced_aliases(n)
+        for side, anchor in (("start", spec.start_anchor),
+                             ("end", spec.end_anchor)):
+            if not anchor or anchor[0] != "col":
+                continue
+            ref = str(anchor[1]).split(".", 1)[0]
+            if ref == spec.alias:
+                raise PlanInvariantError(
+                    "anchor-dag", rule,
+                    f"PathScan '{spec.alias}' {side} anchor "
+                    f"{anchor[1]!r} references itself",
+                )
+            if ref not in below:
+                raise PlanInvariantError(
+                    "anchor-dag", rule,
+                    f"PathScan '{spec.alias}' {side} anchor "
+                    f"{anchor[1]!r} references source '{ref}', which is "
+                    "not planned below it — seeded-stack anchors must "
+                    "form a DAG over already-planned sources (cycles "
+                    "must demote to path-join conditions)",
+                )
+
+
+def _check_capacities(root, rule: str) -> None:
+    for n in _iter_nodes(root):
+        cap = getattr(n, "capacity", None)
+        est = getattr(n, "est_rows", None)
+        if cap is None or est is None:
+            continue
+        if cap < est:
+            raise PlanInvariantError(
+                "join-capacity", rule,
+                f"{n.label()}: output capacity {cap} is below the cost "
+                f"model's estimate of {est:.0f} row(s) — estimates may "
+                "widen a join, never starve it (silent truncation)",
+            )
+
+
+def _spec_exprs(spec) -> Iterable[X.Expr]:
+    yield from spec.start_attr_preds
+    yield from spec.end_attr_preds
+    yield from spec.global_vertex_preds
+    yield from spec.any_edge_preds
+    for _lo, _hi, p in spec.hop_edge_preds:
+        yield p
+
+
+def _node_exprs(node) -> Iterable[X.Expr]:
+    """Every expression a plan node (logical or physical) evaluates."""
+    for f in getattr(node, "filters", None) or ():
+        yield f
+    for p in getattr(node, "predicates", None) or ():
+        yield p
+    sl = getattr(node, "select_list", None)
+    if sl:
+        for e in sl.values():
+            if isinstance(e, (X.Expr, Q.PathExpr)):
+                yield e
+    ags = getattr(node, "agg_select", None)
+    if ags:
+        for _op, e in ags.values():
+            if isinstance(e, (X.Expr, Q.PathExpr)):
+                yield e
+    spec = getattr(node, "spec", None)
+    if spec is not None and hasattr(spec, "start_attr_preds"):
+        yield from _spec_exprs(spec)
+
+
+def _tree_param_names(root) -> Set[str]:
+    names: Set[str] = set()
+    for n in _iter_nodes(root):
+        for e in _node_exprs(n):
+            if isinstance(e, X.Expr):
+                names |= X.params_of(e)
+        spec = getattr(n, "spec", None)
+        if spec is not None and hasattr(spec, "start_anchor"):
+            for anchor in (spec.start_anchor, spec.end_anchor):
+                if anchor and anchor[0] == "param":
+                    names.add(anchor[1])
+    return names
+
+
+def _declared_params(query: Q.Query) -> Set[str]:
+    names = set(X.params_of(query.where_expr))
+    for e in query.select_list.values():
+        if isinstance(e, X.Expr):
+            names |= X.params_of(e)
+    for _op, e in query.agg_select.values():
+        if isinstance(e, X.Expr):
+            names |= X.params_of(e)
+    return names
+
+
+def _check_params(root, declared: Set[str], rule: str) -> None:
+    used = _tree_param_names(root)
+    undeclared = sorted(used - declared)
+    if undeclared:
+        raise PlanInvariantError(
+            "param-binding", rule,
+            f"plan references Param(s) {undeclared} that are not declared "
+            "in the query's parameter set — bind() can never reach them, "
+            "so execution would fail (or silently use a stale value)",
+        )
+
+
+def _check_trace_chain(trace, rule: str) -> None:
+    snaps = [e for e in trace
+             if e.before is not None and e.after is not None]
+    for prev, nxt in zip(snaps, snaps[1:]):
+        if prev.after != nxt.before:
+            raise PlanInvariantError(
+                "trace-chain", nxt.rule,
+                f"rule '{nxt.rule}' received a tree that does not match "
+                f"the after-snapshot recorded by rule '{prev.rule}' — an "
+                "untraced mutation happened between them (expected "
+                f"{prev.after!r}, got {nxt.before!r})",
+            )
+
+
+def _check_current_matches_trace(st, rule: str) -> None:
+    snaps = [e for e in st.trace if e.after is not None]
+    if not snaps:
+        return
+    current = L.compact(st.root)
+    if current != snaps[-1].after:
+        raise PlanInvariantError(
+            "trace-chain", rule,
+            f"the working tree after rule '{rule}' does not match the "
+            f"last recorded after-snapshot (rule '{snaps[-1].rule}'): "
+            f"expected {snaps[-1].after!r}, got {current!r}",
+        )
+
+
+def _stable_key(k) -> bool:
+    if isinstance(k, (str, int, float, bool, type(None))):
+        return True
+    if isinstance(k, (tuple, frozenset)):
+        return all(_stable_key(x) for x in k)
+    return False
+
+
+def _check_cache_site_keys(root, rule: str) -> None:
+    seen = {}
+    for n in _iter_nodes(root):
+        fn = getattr(n, "cache_site_keys", None)
+        if fn is None:
+            continue
+        for k in fn():
+            if not _stable_key(k):
+                raise PlanInvariantError(
+                    "cache-site-key", rule,
+                    f"{n.label()} caches on PlanRuntime under key {k!r}, "
+                    "which contains non-primitive components — cache keys "
+                    "must be built from str/int/float/bool/None/tuple so "
+                    "they are stable across executions and processes",
+                )
+            other = seen.get(k)
+            if other is not None and other is not n:
+                raise PlanInvariantError(
+                    "cache-site-key", rule,
+                    f"call-site cache key {k!r} is shared by "
+                    f"{other.label()} and {n.label()} — distinct caching "
+                    "nodes would silently read each other's entries "
+                    "(duplicate FROM alias?)",
+                )
+            seen[k] = n
+
+
+# --------------------------------------------------------------------------
+# column resolution: a bottom-up schema model of the physical tree
+# --------------------------------------------------------------------------
+class _Schema:
+    """Set of fully-qualified output columns plus 'open' aliases whose
+    column set is unknown (no engine to consult): open aliases resolve
+    any suffix, so engine-less verification stays permissive."""
+
+    def __init__(self, cols: Optional[Set[str]] = None,
+                 open_aliases: Optional[Set[str]] = None):
+        self.cols: Set[str] = set(cols or ())
+        self.open: Set[str] = set(open_aliases or ())
+
+    def union(self, other: "_Schema") -> "_Schema":
+        return _Schema(self.cols | other.cols, self.open | other.open)
+
+    def resolves(self, name: str) -> bool:
+        if name in self.cols:
+            return True
+        if "." in name:
+            return name.split(".", 1)[0] in self.open
+        # bare name: only resolvable when we cannot enumerate all columns
+        return bool(self.open)
+
+
+def _table_cols(engine, table_name: str, alias: str) -> Optional[Set[str]]:
+    t = getattr(engine, "tables", {}).get(table_name) if engine else None
+    if t is None:
+        return None
+    return {f"{alias}.{c}" for c in t.colnames} | {f"{alias}._row"}
+
+
+def _path_out_cols(spec) -> Set[str]:
+    """Columns PathScanExec materializes for this spec's physical — the
+    executor's output contract, kept in sync with PathScanExec.run."""
+    a = spec.alias
+    if spec.physical == "bfs":
+        names = ["length", "exists", "startvertexid", "endvertexid",
+                 "_start_pos", "_end_pos", "_origin"]
+    elif spec.physical in ("sssp", "bfs_path"):
+        if spec.end_anchor is not None:
+            names = ["length", "distance", "startvertexid", "endvertexid",
+                     "_edges", "_verts", "_start_pos", "_end_pos", "_origin"]
+        else:  # single-source, all destinations: no path reconstruction
+            names = ["distance", "startvertexid", "endvertexid",
+                     "_end_pos", "_origin"]
+    else:  # enumeration
+        names = ["length", "startvertexid", "endvertexid", "_start_pos",
+                 "_end_pos", "_edges", "_verts", "_origin"]
+        names += [f"sum_{x}" for x in spec.agg_attrs]
+        names += [f"any_{i}" for i in range(len(spec.any_edge_preds))]
+    return {f"{a}.{n}" for n in names}
+
+
+def _expr_col_requirements(e, specs) -> Iterable[str]:
+    """Fully-qualified batch columns an expression needs when evaluated
+    over the combined batch (mirrors executor.eval_on_batch)."""
+    def walk(n):
+        if isinstance(n, Q.PathLength):
+            yield f"{n.alias}.length"
+        elif isinstance(n, Q.PathAgg):
+            yield f"{n.alias}.sum_{n.attr}"
+        elif isinstance(n, Q.PathVertexAttr):
+            yield f"{n.alias}._{n.which}_pos"
+        elif isinstance(n, Q.PathString):
+            yield f"{n.alias}._verts"
+        elif isinstance(n, (Q.PathEdgeSliceAttr, Q.PathVertexSliceAttr)):
+            raise PlanInvariantError(
+                "column-resolution", "plan-finalization",
+                f"{n!r} cannot be evaluated over the combined batch "
+                "(no per-hop columns survive combination) — it must be "
+                "classified into the PathSpec, not left residual",
+            )
+        elif isinstance(n, X.Col):
+            yield n.name
+        elif isinstance(n, (X.Cmp, X.Arith)):
+            yield from walk(n.left)
+            yield from walk(n.right)
+        elif isinstance(n, X.BoolOp):
+            for a in n.args:
+                yield from walk(a)
+        elif isinstance(n, X.In):
+            yield from walk(n.item)
+    yield from walk(e)
+
+
+def _require(schema: _Schema, name: str, where: str, rule: str) -> None:
+    if not schema.resolves(name):
+        raise PlanInvariantError(
+            "column-resolution", rule,
+            f"{where} references column {name!r}, which its producer "
+            "does not emit (producer columns: "
+            f"{sorted(schema.cols)[:12]}{'...' if len(schema.cols) > 12 else ''})",
+        )
+
+
+def _check_scan_filters(node, colset: Optional[Set[str]], extra: Set[str],
+                        rule: str) -> None:
+    """Pushed scan filters use alias-stripped names resolved against the
+    scan's own batch; ``extra`` holds view-provided columns."""
+    if colset is None:
+        return
+    allowed = {c.split(".", 1)[1] for c in colset} | extra
+    for f in node.filters:
+        for c in X.columns_of(f):
+            name = c.split(".", 1)[1] if c.startswith(node.alias + ".") else c
+            if name not in allowed:
+                raise PlanInvariantError(
+                    "column-resolution", rule,
+                    f"pushed filter on scan '{node.alias}' references "
+                    f"column {c!r}, not a column of its source "
+                    f"'{node.source}'",
+                )
+
+
+def _check_spec_preds(spec, engine, rule: str) -> None:
+    """Spec predicate/aggregate attributes must exist on the view's
+    vertex/edge tables (through the view's attribute aliasing maps)."""
+    views = getattr(engine, "views", {}) if engine else {}
+    vb = views.get(spec.graph)
+    if vb is None:
+        if engine is not None:
+            raise PlanInvariantError(
+                "column-resolution", rule,
+                f"PathScan '{spec.alias}' traverses unknown graph view "
+                f"{spec.graph!r}",
+            )
+        return
+    vt = engine.tables[vb.vertex_table]
+    et = engine.tables[vb.edge_table]
+
+    def chk(preds, attrs_map, table, kind):
+        for p in preds:
+            for c in X.columns_of(p):
+                src = attrs_map.get(c, c)
+                if src not in table.colnames:
+                    raise PlanInvariantError(
+                        "column-resolution", rule,
+                        f"PathScan '{spec.alias}' {kind} predicate "
+                        f"references attribute {c!r}, which resolves to "
+                        f"no column of {kind} table "
+                        f"'{table.name if hasattr(table, 'name') else ''}'"
+                        f" (available: {sorted(table.colnames)})",
+                    )
+
+    chk(spec.start_attr_preds, vb.v_attrs, vt, "vertex")
+    chk(spec.end_attr_preds, vb.v_attrs, vt, "vertex")
+    chk(spec.global_vertex_preds, vb.v_attrs, vt, "vertex")
+    chk(spec.any_edge_preds, vb.e_attrs, et, "edge")
+    chk([p for _lo, _hi, p in spec.hop_edge_preds], vb.e_attrs, et, "edge")
+    for attr in spec.agg_attrs:
+        if vb.e_attrs.get(attr, attr) not in et.colnames:
+            raise PlanInvariantError(
+                "column-resolution", rule,
+                f"PathScan '{spec.alias}' aggregates edge attribute "
+                f"{attr!r}, which resolves to no edge-table column",
+            )
+    if spec.sp_weight_attr is not None:
+        if vb.e_attrs.get(spec.sp_weight_attr, spec.sp_weight_attr) \
+                not in et.colnames:
+            raise PlanInvariantError(
+                "column-resolution", rule,
+                f"PathScan '{spec.alias}' shortest-path weight attribute "
+                f"{spec.sp_weight_attr!r} resolves to no edge-table column",
+            )
+
+
+def _schema_of(node, engine, specs, rule: str) -> _Schema:
+    """Bottom-up output schema of a physical exec node, checking every
+    column reference it evaluates along the way."""
+    views = getattr(engine, "views", {}) if engine else {}
+
+    if isinstance(node, E.TableScanExec):
+        cols = _table_cols(engine, node.source, node.alias)
+        _check_scan_filters(node, cols, set(), rule)
+        return (_Schema(cols) if cols is not None
+                else _Schema(open_aliases={node.alias}))
+    if isinstance(node, E.VertexScanExec):
+        vb = views.get(node.source)
+        cols = _table_cols(engine, vb.vertex_table, node.alias) if vb else None
+        if cols is not None:
+            cols |= {f"{node.alias}.{c}" for c in ("fanout", "fanin", "_pos")}
+        _check_scan_filters(node, cols, set(), rule)
+        return (_Schema(cols) if cols is not None
+                else _Schema(open_aliases={node.alias}))
+    if isinstance(node, E.EdgeScanExec):
+        vb = views.get(node.source)
+        cols = _table_cols(engine, vb.edge_table, node.alias) if vb else None
+        _check_scan_filters(node, cols, set(), rule)
+        return (_Schema(cols) if cols is not None
+                else _Schema(open_aliases={node.alias}))
+    if isinstance(node, E.PathScanExec):
+        _check_spec_preds(node.spec, engine, rule)
+        out = _Schema(_path_out_cols(node.spec))
+        if node.child is not None:
+            # combined with the anchor child via the origin lane
+            out = out.union(_schema_of(node.child, engine, specs, rule))
+        return out
+    if isinstance(node, E.HashJoinExec):
+        ls = _schema_of(node.left, engine, specs, rule)
+        rs = _schema_of(node.right, engine, specs, rule)
+        _require(ls, node.left_key, f"{node.label()} left key", rule)
+        _require(rs, node.right_key, f"{node.label()} right key", rule)
+        return ls.union(rs)
+    if isinstance(node, E.CrossJoinExec):
+        return _schema_of(node.left, engine, specs, rule).union(
+            _schema_of(node.right, engine, specs, rule))
+    if isinstance(node, E.PathJoinExec):
+        ls = _schema_of(node.left, engine, specs, rule)
+        rs = _schema_of(node.right, engine, specs, rule)
+        for (la, lw), (ra, rw) in node.on:
+            _require(ls, f"{la}.{lw}vertexid",
+                     f"{node.label()} left key", rule)
+            _require(rs, f"{ra}.{rw}vertexid",
+                     f"{node.label()} right key", rule)
+        return ls.union(rs)
+    if isinstance(node, E.PathDisjointExec):
+        cs = _schema_of(node.child, engine, specs, rule)
+        for a, b, _allowed in node.pairs:
+            for alias in (a, b):
+                _require(
+                    cs, f"{alias}._verts",
+                    f"{node.label()} (globally simple paths need "
+                    f"materialized vertices for '{alias}')", rule)
+        return cs
+    if isinstance(node, E.ResidualFilterExec):
+        cs = _schema_of(node.child, engine, specs, rule)
+        for p in node.predicates:
+            for c in _expr_col_requirements(p, specs):
+                _require(cs, c, "residual predicate", rule)
+        return cs
+    if isinstance(node, E.SortExec):
+        cs = _schema_of(node.child, engine, specs, rule)
+        _require(cs, node.key, f"{node.label()} sort key", rule)
+        return cs
+    if isinstance(node, E.LimitExec):
+        return _schema_of(node.child, engine, specs, rule)
+    if isinstance(node, E.ProjectExec):
+        cs = _schema_of(node.child, engine, specs, rule)
+        for out_name, e in node.select_list.items():
+            if isinstance(e, (X.Expr, Q.PathExpr)):
+                for c in _expr_col_requirements(e, specs):
+                    _require(cs, c, f"select item {out_name!r}", rule)
+        return cs
+    if isinstance(node, E.AggregateExec):
+        cs = _schema_of(node.child, engine, specs, rule)
+        for out_name, (_op, e) in node.agg_select.items():
+            if isinstance(e, (X.Expr, Q.PathExpr)):
+                for c in _expr_col_requirements(e, specs):
+                    _require(cs, c, f"aggregate {out_name!r}", rule)
+        return cs
+    # unknown/wrapper node: pass the union of its children through
+    out = _Schema()
+    for c in node.children():
+        out = out.union(_schema_of(c, engine, specs, rule))
+    return out
+
+
+# --------------------------------------------------------------------------
+# entry points
+# --------------------------------------------------------------------------
+def verify_after_rule(st, rule_name: str, ran: List[str]) -> None:
+    """Invariants checkable on the optimizer's working logical state,
+    run after each named rule when ``REPRO_VERIFY_PLANS=1``. ``ran`` is
+    the ordered list of rules applied so far (some invariants only hold
+    once a later rule has normalized the tree)."""
+    _check_tree_shape(st.root, rule_name)
+    _check_trace_chain(st.trace, rule_name)
+    _check_current_matches_trace(st, rule_name)
+    _check_capacities(st.root, rule_name)
+    _check_params(st.root, _declared_params(st.query), rule_name)
+    if "path-ordering" in ran:
+        # before path-ordering, anchors may legitimately be cyclic —
+        # that rule demotes cycles to path-join conditions
+        _check_anchor_dag(st.root, rule_name)
+
+
+def verify_plan(plan, engine=None, rule: str = "plan-finalization") -> None:
+    """Full invariant pass over a finished ``PhysicalPlan``. Runs
+    unconditionally at the end of ``optimize`` — per-rule verification
+    narrows a failure to the offending rule, this pass guarantees no
+    unverified plan ever reaches the executor."""
+    _check_tree_shape(plan.root, rule)
+    _check_trace_chain(plan.trace, rule)
+    _check_capacities(plan.logical, rule)
+    _check_anchor_dag(plan.root, rule)
+    _check_params(plan.root, set(plan.param_names), rule)
+    _check_cache_site_keys(plan.root, rule)
+    _schema_of(plan.root, engine, plan.specs, rule)

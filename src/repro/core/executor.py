@@ -130,6 +130,11 @@ class _ScanExec(ExecNode):
         f = f" [{len(self.filters)} pushed filter(s)]" if self.filters else ""
         return f"{type(self).__name__}({self.source} AS {self.alias}){f}"
 
+    def cache_site_keys(self):
+        """Call-site keys this node caches under on ``PlanRuntime`` (the
+        plan verifier checks they are stable and plan-unique)."""
+        return (("scan", self.alias),) if self.filters else ()
+
 
 class TableScanExec(_ScanExec):
     def run(self, ctx):
@@ -286,6 +291,16 @@ class PathScanExec(ExecNode):
 
     def label(self):
         return f"PathScanExec({format_pathspec(self.spec)})"
+
+    def cache_site_keys(self):
+        """Base call-site keys for every PlanRuntime cache this node
+        touches: vertex/edge masks extend ``("path", alias, ...)``, the
+        prepared-anchor bundle lives under ``("prep", alias)``, the
+        anchor-child batch under ``("child", alias)``. All derive from
+        the FROM alias, so plan-wide key uniqueness (checked by the plan
+        verifier) is exactly FROM-alias uniqueness."""
+        a = self.spec.alias
+        return (("path", a), ("prep", a), ("child", a))
 
     # -- compiled-mask access (epoch-keyed, cached on the plan) ------------
     def _vmask(self, ctx, vb, preds, kind):
@@ -724,11 +739,19 @@ class PathJoinExec(ExecNode):
     def _key_col(alias: str, which: str) -> str:
         return f"{alias}.{which}vertexid"
 
+    def cache_site_keys(self):
+        """The joined-batch cache key: the full ``on`` condition list, so
+        two PathJoins in one plan collide only if they join the same
+        aliases on the same endpoints (which the verifier rejects)."""
+        return (
+            ("pathjoin",) + tuple(
+                (la, lw, ra, rw) for (la, lw), (ra, rw) in self.on
+            ),
+        )
+
     def run(self, ctx) -> O.RelBatch:
         epoch = (_epoch_signature(ctx, self), _params_key(ctx))
-        key = ("pathjoin",) + tuple(
-            (la, lw, ra, rw) for (la, lw), (ra, rw) in self.on
-        )
+        (key,) = self.cache_site_keys()
         return _cached_observed(ctx, key, epoch, lambda: self._join(ctx))
 
     def _join(self, ctx) -> O.RelBatch:
@@ -888,7 +911,9 @@ class ProjectExec(ExecNode):
         names = ", ".join(self.select_list) if self.select_list else "*"
         return f"ProjectExec({names})"
 
-    def finalize(self, ctx) -> QueryResult:
+    def finalize(self, ctx) -> QueryResult:  # lint: allow-host-sync
+        # result assembly: the query is over, moving the surviving rows
+        # to host numpy here is the point of the method
         combined = self.child.run(ctx)
         sel = self.select_list
         if not sel:
@@ -928,7 +953,8 @@ class AggregateExec(ExecNode):
         parts = ", ".join(f"{k}={op}" for k, (op, _) in self.agg_select.items())
         return f"AggregateExec({parts})"
 
-    def finalize(self, ctx) -> QueryResult:
+    def finalize(self, ctx) -> QueryResult:  # lint: allow-host-sync
+        # result assembly: scalar aggregates land on host by design
         if isinstance(self.child, PathScanExec) and self.child.spec.count_only:
             cnt, ovf = self.child.run_count(ctx)
             cols = {name: np.asarray(cnt) for name in self.agg_select}

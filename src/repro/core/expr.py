@@ -125,10 +125,19 @@ class Arith(Expr):
     def __init__(self, op: str, left: Expr, right: Expr):
         self.op, self.left, self.right = op, left, right
 
+    def __repr__(self):
+        # stable repr: these nodes reach compiled.structural_key /
+        # query_shape_key, where a default object repr would leak id()s
+        # into shape keys and defeat cross-run plan-cache sharing
+        return f"({self.left!r} {self.op} {self.right!r})"
+
 
 class In(Expr):
     def __init__(self, item: Expr, values: tuple):
         self.item, self.values = item, values
+
+    def __repr__(self):
+        return f"({self.item!r} in {tuple(self.values)!r})"
 
 
 def col(name: str) -> Col:

@@ -417,6 +417,17 @@ def build_logical(query: Q.Query) -> LogicalOp:
     top Filter; the optimizer classifies and pushes them down."""
     rel_leaves: List[LogicalOp] = []
     path_nodes: List[PathScan] = []
+    seen_aliases = set()
+    for f in query.froms:
+        # duplicate aliases would silently collide everywhere downstream
+        # (the optimizer's per-alias indexes would drop one source and the
+        # executor's batch columns would overwrite each other)
+        if f.alias in seen_aliases:
+            raise ValueError(
+                f"duplicate FROM alias {f.alias!r}: every FROM item needs "
+                "a distinct alias"
+            )
+        seen_aliases.add(f.alias)
     for f in query.froms:
         if f.kind == "table":
             rel_leaves.append(TableScan(alias=f.alias, table=f.name))

@@ -1285,9 +1285,18 @@ def optimize(query: Q.Query, catalog=None, *, stats=None) -> PhysicalPlan:
     ``stats`` is the owning engine (catalog-statistics provider) for
     cost-based rules; None keeps every rule on its statistics-free path.
     The driver snapshots the tree around each rule and attaches a compact
-    before/after diff to the rule's first trace event when it changed."""
+    before/after diff to the rule's first trace event when it changed.
+
+    Plan verification (``repro.analysis.plan_verify``) runs after every
+    rule when ``REPRO_VERIFY_PLANS=1`` — attributing any invariant
+    violation to the rule that introduced it — and once on the finished
+    physical plan always, so no unverified plan reaches the executor."""
+    from repro.analysis import plan_verify as PV
+
     root = L.build_logical(query)
     st = _State(query, root, stats=stats)
+    verify_rules = PV.verify_enabled()
+    ran: List[str] = []
     for name, rule in RULE_PIPELINE:
         before = L.compact(st.root)
         n0 = len(st.trace)
@@ -1300,8 +1309,11 @@ def optimize(query: Q.Query, catalog=None, *, stats=None) -> PhysicalPlan:
                 st.trace.append(
                     RuleEvent(name, "tree rewritten", before=before, after=after)
                 )
+        ran.append(name)
+        if verify_rules:
+            PV.verify_after_rule(st, name, ran)
     phys = _lower(st.root)
-    return PhysicalPlan(
+    plan = PhysicalPlan(
         query=query,
         root=phys,
         logical=st.root,
@@ -1312,6 +1324,8 @@ def optimize(query: Q.Query, catalog=None, *, stats=None) -> PhysicalPlan:
         trace=st.trace,
         param_names=_collect_param_names(query),
     )
+    PV.verify_plan(plan, engine=stats)
+    return plan
 
 
 def _lower(node: L.LogicalOp) -> "E.ExecNode":

@@ -1,7 +1,24 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests and benches must
 see the single real CPU device; only the dry-run subprocesses fake 512."""
+import os
+
 import numpy as np
 import pytest
+
+
+@pytest.fixture(autouse=True, scope="session")
+def verify_plans():
+    """Per-rule plan verification is on by default under pytest: every
+    plan optimized by any test runs the full invariant suite after every
+    rewrite rule (repro.analysis.plan_verify), so a rule that breaks a
+    plan-shape contract fails the suite naming itself. Tests that need
+    it off (none today) can monkeypatch REPRO_VERIFY_PLANS."""
+    prev = os.environ.get("REPRO_VERIFY_PLANS")
+    if prev is None:
+        os.environ["REPRO_VERIFY_PLANS"] = "1"
+    yield
+    if prev is None:
+        os.environ.pop("REPRO_VERIFY_PLANS", None)
 
 
 @pytest.fixture

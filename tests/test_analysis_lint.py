@@ -1,0 +1,228 @@
+"""Hot-path lint tests: the mutation-style snippet corpus.
+
+Each lint rule is demonstrated by a seeded-bad snippet that it — and
+only it — flags, plus pragma/baseline suppression mechanics and the
+repo-clean gate (``python -m repro.analysis`` must pass on src/repro,
+which is also what the ``analyze`` CI stage runs).
+"""
+import json
+from pathlib import Path
+
+import pytest
+
+from repro.analysis.lint import (
+    Finding,
+    lint_paths,
+    lint_source,
+    load_baseline,
+    save_baseline,
+)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _rules(findings):
+    return {f.rule for f in findings}
+
+
+# ----------------------------------------------------------- seeded-bad corpus
+HOST_SYNC_NP_ASARRAY = '''
+import numpy as np
+
+class FooExec:
+    def run(self, ctx):
+        return np.asarray(ctx.batch.valid)
+'''
+
+HOST_SYNC_ITEM = '''
+class FooExec:
+    def run(self, ctx):
+        return ctx.batch.valid.sum().item()
+'''
+
+HOST_SYNC_FLOAT = '''
+class FooExec:
+    def run(self, ctx):
+        return float(ctx.view.avg_fan_out)
+'''
+
+HOST_SYNC_BOOL_JNP = '''
+import jax.numpy as jnp
+
+class FooExec:
+    def run(self, ctx):
+        return bool(jnp.any(ctx.view.delta_valid))
+'''
+
+DEVICE_LOOP_DIRECT = '''
+import jax.numpy as jnp
+
+class FooExec:
+    def run(self, ctx):
+        total = 0
+        for x in jnp.take(ctx.ids, ctx.pos):
+            total += int(x)
+        return total
+'''
+
+DEVICE_LOOP_VIA_NAME = '''
+import jax.numpy as jnp
+
+class FooExec:
+    def run(self, ctx):
+        rows = jnp.where(ctx.valid, ctx.ids, -1)
+        out = []
+        for r in rows:
+            out.append(r)
+        return out
+'''
+
+STRUCTURAL_NO_REPR = '''
+class Expr:
+    pass
+
+class Shiny(Expr):
+    def __init__(self, value):
+        self.value = value
+'''
+
+PUMP_ALLOC = '''
+import jax.numpy as jnp
+
+class QueryLoop:
+    def pump(self, force=False):
+        lanes = jnp.zeros((16,), jnp.int32)
+        return lanes
+'''
+
+
+@pytest.mark.parametrize("src, rule", [
+    (HOST_SYNC_NP_ASARRAY, "host-sync"),
+    (HOST_SYNC_ITEM, "host-sync"),
+    (HOST_SYNC_FLOAT, "host-sync"),
+    (HOST_SYNC_BOOL_JNP, "host-sync"),
+    (DEVICE_LOOP_DIRECT, "device-loop"),
+    (DEVICE_LOOP_VIA_NAME, "device-loop"),
+    (PUMP_ALLOC, "pump-alloc"),
+], ids=["np-asarray", "item", "float", "bool-jnp", "loop-direct",
+        "loop-via-name", "pump-alloc"])
+def test_bad_snippet_flags_only_its_rule(src, rule):
+    path = "serve/loop.py" if rule == "pump-alloc" else "core/executor.py"
+    findings = lint_source(src, path)
+    assert findings, f"expected a {rule} finding"
+    assert _rules(findings) == {rule}
+
+
+def test_structural_repr_flags_only_its_rule():
+    findings = lint_source(STRUCTURAL_NO_REPR, "core/expr.py")
+    assert _rules(findings) == {"structural-repr"}
+    assert findings[0].qualname == "Shiny"
+    # base Expr itself is an abstract anchor, never flagged
+    assert all(f.qualname != "Expr" for f in findings)
+
+
+def test_structural_repr_accepts_repr_structural_key_and_dataclass():
+    src = '''
+from dataclasses import dataclass
+
+class Expr:
+    pass
+
+class HasRepr(Expr):
+    def __repr__(self):
+        return "HasRepr()"
+
+class HasKey(Expr):
+    def structural_key(self):
+        return ("haskey",)
+
+@dataclass
+class AutoRepr(Expr):
+    x: int
+'''
+    assert lint_source(src, "core/expr.py") == []
+
+
+def test_hot_path_scoping_only_flags_hot_functions():
+    src = '''
+import numpy as np
+
+class FooExec:
+    def setup(self, ctx):
+        # not a hot-path function: result staging at plan build is fine
+        return np.asarray(ctx.batch.valid)
+'''
+    assert lint_source(src, "core/executor.py") == []
+    # identical code in a non-hot-path module is also clean
+    assert lint_source(HOST_SYNC_NP_ASARRAY, "core/stats.py") == []
+
+
+def test_pragma_suppresses_on_line_and_on_def():
+    on_line = HOST_SYNC_NP_ASARRAY.replace(
+        "return np.asarray(ctx.batch.valid)",
+        "return np.asarray(ctx.batch.valid)  # lint: allow-host-sync",
+    )
+    assert lint_source(on_line, "core/executor.py") == []
+    on_def = HOST_SYNC_NP_ASARRAY.replace(
+        "def run(self, ctx):",
+        "def run(self, ctx):  # lint: allow-host-sync",
+    )
+    assert lint_source(on_def, "core/executor.py") == []
+    # a pragma for a different rule does not suppress
+    wrong = HOST_SYNC_NP_ASARRAY.replace(
+        "return np.asarray(ctx.batch.valid)",
+        "return np.asarray(ctx.batch.valid)  # lint: allow-device-loop",
+    )
+    assert _rules(lint_source(wrong, "core/executor.py")) == {"host-sync"}
+
+
+def test_baseline_round_trip(tmp_path):
+    findings = lint_source(HOST_SYNC_NP_ASARRAY, "core/executor.py")
+    bl = tmp_path / "baseline.json"
+    save_baseline(bl, findings)
+    data = json.loads(bl.read_text())
+    assert data["findings"] == ["core/executor.py::host-sync::FooExec.run"]
+    assert load_baseline(bl) == {"core/executor.py::host-sync::FooExec.run"}
+    # identities are line-number-free: moving the call inside the
+    # function does not churn the baseline
+    moved = HOST_SYNC_NP_ASARRAY.replace(
+        "def run(self, ctx):", "def run(self, ctx):\n        pass\n")
+    moved_findings = lint_source(moved, "core/executor.py")
+    assert {f.ident for f in moved_findings} <= load_baseline(bl)
+
+
+def test_finding_str_is_path_line_rule():
+    f = Finding(rule="host-sync", path="core/executor.py", line=12,
+                qualname="FooExec.run", message="m")
+    assert str(f) == "core/executor.py:12: [host-sync] FooExec.run: m"
+
+
+# --------------------------------------------------------------- repo gates
+def test_repo_lint_clean_against_baseline():
+    """What `bash scripts/ci.sh analyze` enforces: no unsuppressed,
+    unbaselined finding anywhere under src/repro."""
+    findings = lint_paths(REPO / "src" / "repro")
+    baseline = load_baseline(REPO / "scripts" / "lint_baseline.json")
+    fresh = [f for f in findings if f.ident not in baseline]
+    assert fresh == [], "\n".join(str(f) for f in fresh)
+
+
+def test_repo_expr_query_nodes_all_have_stable_reprs():
+    """Satellite audit, encoded: every Expr/PathExpr subclass in
+    expr.py/query.py carries a stable __repr__ (query_shape_key's
+    structural fallback reprs them — a default object repr would leak
+    id() into shape keys)."""
+    for mod in ("core/expr.py", "core/query.py"):
+        src = (REPO / "src" / "repro" / mod).read_text()
+        findings = [f for f in lint_source(src, mod)
+                    if f.rule == "structural-repr"]
+        assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_repo_baseline_entries_still_exist():
+    """Baseline hygiene: every grandfathered identity still corresponds
+    to a real finding — fixed sites must leave the baseline."""
+    findings = {f.ident for f in lint_paths(REPO / "src" / "repro")}
+    baseline = load_baseline(REPO / "scripts" / "lint_baseline.json")
+    stale = sorted(baseline - findings)
+    assert stale == [], f"stale baseline entries: {stale}"

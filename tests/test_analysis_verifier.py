@@ -1,0 +1,282 @@
+"""Plan-verifier tests: the mutation-style self-test corpus.
+
+Every invariant in ``repro.analysis.plan_verify`` is demonstrated by at
+least one seeded-bad plan that violates it — and *only* it (each test
+asserts the raised ``PlanInvariantError`` names the expected invariant).
+Clean engine-built plans must verify silently, and the real bugs the
+verifier surfaced (duplicate FROM aliases dropping a scan) stay fixed.
+"""
+import copy
+
+import numpy as np
+import pytest
+
+from repro.analysis.plan_verify import (
+    PlanInvariantError,
+    verify_enabled,
+    verify_plan,
+)
+from repro.core import executor as EX
+from repro.core import expr as X
+from repro.core.engine import GRFusion
+from repro.core.optimizer import RuleEvent
+from repro.core.query import P, Query, col, param
+
+
+@pytest.fixture
+def social():
+    eng = GRFusion()
+    eng.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "age": np.array([34, 28, 45, 31, 39]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=8)
+    eng.create_table("Relationships", {
+        "relId": np.array([1, 2, 3, 4]),
+        "uId1": np.array([1, 2, 3, 4]),
+        "uId2": np.array([3, 3, 4, 5]),
+        "w": np.array([1, 2, 1, 3]),
+    }, capacity=16)
+    eng.create_graph_view(
+        "SocialNetwork", vertexes="Users", edges="Relationships",
+        v_id="uId", e_src="uId1", e_dst="uId2",
+        v_attrs={"Job": "Job"}, e_attrs={"weight": "w"},
+        directed=False,
+    )
+    return eng
+
+
+def _find(root, kind):
+    stack = [root]
+    while stack:
+        n = stack.pop()
+        if isinstance(n, kind):
+            return n
+        stack.extend(n.children())
+    raise AssertionError(f"no {kind.__name__} in plan")
+
+
+def _invariant_of(err: PlanInvariantError) -> str:
+    return err.invariant
+
+
+# ------------------------------------------------------------- clean plans
+def test_clean_plans_verify_silently(social):
+    PS = P("PS")
+    queries = [
+        Query().from_table("Users", "U").where(col("U.age") > 30)
+               .select(a=col("U.age")),
+        Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+               .where((col("U.Job") == "Lawyer")
+                      & (PS.start.id == col("U.uId")) & (PS.length <= 2))
+               .select(end=PS.end.id),
+    ]
+    for q in queries:
+        plan = social.plan(q)
+        verify_plan(plan, engine=social)  # idempotent re-verification
+
+
+def test_verifier_enabled_under_pytest():
+    # the conftest fixture turns per-rule verification on for the suite
+    assert verify_enabled()
+
+
+# ------------------------------------------- mutation corpus, one per check
+def test_mutation_column_resolution(social):
+    q = (Query().from_table("Users", "U").where(col("U.age") > 30)
+         .order_by("U.age").select(a=col("U.age")))
+    plan = social.plan(q)
+    sort = _find(plan.root, EX.SortExec)
+    sort.key = "U.nosuch"
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "column-resolution"
+    assert "U.nosuch" in str(ei.value)
+
+
+def test_mutation_join_capacity(social):
+    q = (Query().from_table("Users", "U").from_table("Relationships", "R")
+         .where(col("U.uId") == col("R.uId1")).select(r=col("R.relId")))
+    plan = social.plan(q)
+    import repro.core.logical as L
+    join = _find(plan.logical, L.HashJoin)
+    assert join.est_rows is not None
+    join.capacity = 1  # below the cost-model estimate: silent truncation
+    join.est_rows = 500.0
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "join-capacity"
+
+
+def test_mutation_anchor_dag(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == col("U.uId")) & (PS.length <= 2))
+         .select(end=PS.end.id))
+    plan = social.plan(q)
+    ps = _find(plan.root, EX.PathScanExec)
+    # re-anchor on a source that is not planned below the PathScan
+    ps.spec = copy.deepcopy(ps.spec)
+    ps.spec.start_anchor = ("col", "GHOST.endvertexid")
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "anchor-dag"
+    assert "GHOST" in str(ei.value)
+
+
+def test_mutation_param_binding(social):
+    q = (Query().from_table("Users", "U")
+         .where(col("U.age") > param("min_age")).select(a=col("U.age")))
+    plan = social.plan(q)
+    scan = _find(plan.root, EX.TableScanExec)
+    # a "rule" smuggles in a Param that bind() can never reach
+    scan.filters = scan.filters + [X.Cmp(">", X.Col("age"), X.Param("ghost"))]
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "param-binding"
+    assert "ghost" in str(ei.value)
+
+
+def test_mutation_trace_chain(social):
+    q = (Query().from_table("Users", "U").where(col("U.age") > 30)
+         .select(a=col("U.age")))
+    plan = social.plan(q)
+    # forge an untraced mutation between two snapshot-bearing events
+    plan.trace.append(RuleEvent(
+        "rogue-rule", "tree rewritten",
+        before="Project(NotWhatTheLastRuleLeft)", after="Project(X)",
+    ))
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "trace-chain"
+    assert "rogue-rule" in str(ei.value)
+
+
+class _StubCachingExec(EX.ExecNode):
+    """Wrapper node that caches under a caller-chosen key."""
+
+    def __init__(self, child, keys):
+        self.child = child
+        self.keys = keys
+
+    def children(self):
+        return [self.child]
+
+    def label(self):
+        return "StubCachingExec"
+
+    def cache_site_keys(self):
+        return self.keys
+
+
+def test_mutation_cache_site_key_unstable(social):
+    q = (Query().from_table("Users", "U").where(col("U.age") > 30)
+         .select(a=col("U.age")))
+    plan = social.plan(q)
+    root = plan.root
+    # an object() in the key reprs with its id(): unstable across runs
+    root.child = _StubCachingExec(root.child, [("scan", object())])
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "cache-site-key"
+
+
+def test_mutation_cache_site_key_duplicate(social):
+    q = (Query().from_table("Users", "U").where(col("U.age") > 30)
+         .select(a=col("U.age")))
+    plan = social.plan(q)
+    # two distinct caching nodes sharing one call-site key: they would
+    # silently read each other's PlanRuntime entries
+    plan.root.child = _StubCachingExec(
+        _StubCachingExec(plan.root.child, [("dup", "k")]), [("dup", "k")])
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "cache-site-key"
+    assert "shared" in str(ei.value)
+
+
+def test_mutation_tree_shape_shared_node(social):
+    q = (Query().from_table("Users", "U").from_table("Relationships", "R")
+         .where(col("U.uId") == col("R.uId1")).select(r=col("R.relId")))
+    plan = social.plan(q)
+    join = _find(plan.root, EX.HashJoinExec)
+    join.right = join.left  # diamond: one scan reachable twice
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "tree-shape"
+
+
+# ------------------------------------------------ specific hazard coverage
+def test_residual_pathagg_without_spec_column(social):
+    PS = P("PS")
+    q = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == col("U.uId")) & (PS.length <= 2))
+         .select(end=PS.end.id))
+    plan = social.plan(q)
+    ps = _find(plan.root, EX.PathScanExec)
+    assert not ps.spec.agg_attrs
+    # a residual referencing sum_weight the traversal never materialized
+    # would KeyError at execution; the verifier rejects it at plan time
+    plan.root.child = EX.ResidualFilterExec(
+        plan.root.child,
+        [X.Cmp(">", P("PS").sum_edges("weight"), X.Const(0))])
+    with pytest.raises(PlanInvariantError) as ei:
+        verify_plan(plan, engine=social)
+    assert _invariant_of(ei.value) == "column-resolution"
+
+
+def test_bad_path_attribute_caught_at_plan_time(social):
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == 1) & (PS.length <= 2)
+                & (PS.end.attr("NoSuchAttr") == "x"))
+         .select(end=PS.end.id))
+    with pytest.raises(PlanInvariantError) as ei:
+        social.plan(q)
+    assert _invariant_of(ei.value) == "column-resolution"
+    assert "NoSuchAttr" in str(ei.value)
+
+
+def test_duplicate_from_alias_rejected(social):
+    # regression: join-ordering's per-alias index silently DROPPED one of
+    # the two scans before this was rejected at plan entry
+    q = (Query().from_table("Users", "U").from_table("Users", "U")
+         .where(col("U.age") > 30).select(a=col("U.age")))
+    with pytest.raises(ValueError, match="duplicate FROM alias"):
+        social.plan(q)
+
+
+def test_rule_attribution_names_offending_rule(social, monkeypatch):
+    """Per-rule verification attributes a violation to the rule that
+    introduced it, not to plan finalization."""
+    from repro.core import optimizer as OPT
+
+    def sabotage(st):
+        for p in st.paths:
+            p.spec.start_anchor = ("col", "GHOST.endvertexid")
+
+    pipeline = []
+    for name, rule in OPT.RULE_PIPELINE:
+        pipeline.append((name, rule))
+        if name == "physical-pathscan":
+            pipeline.append(("sabotage-anchors", sabotage))
+    monkeypatch.setattr(OPT, "RULE_PIPELINE", tuple(pipeline))
+
+    PS = P("PS")
+    q = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where((PS.start.id == col("U.uId")) & (PS.length <= 2))
+         .select(end=PS.end.id))
+    with pytest.raises(PlanInvariantError) as ei:
+        social.plan(q)
+    assert ei.value.rule == "sabotage-anchors"
+    assert _invariant_of(ei.value) == "anchor-dag"
+
+
+def test_finalization_verify_runs_with_env_off(social, monkeypatch):
+    """The finalization pass is unconditional: plans are never handed to
+    the executor unverified even with REPRO_VERIFY_PLANS unset."""
+    monkeypatch.delenv("REPRO_VERIFY_PLANS", raising=False)
+    q = (Query().from_table("Users", "U")
+         .where(col("U.nosuch") > 1).select(a=col("U.age")))
+    with pytest.raises(PlanInvariantError):
+        social.plan(q)

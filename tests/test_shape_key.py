@@ -1,0 +1,129 @@
+"""query_shape_key coverage: structurally different queries must key
+differently, and keys must be stable across interpreter runs (no id() /
+default-object-repr leakage) — the engine-wide PreparedPlanCache and the
+serving loop's buckets are only correct if shape keys are exact and
+process-independent."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+from repro.core.compiled import query_shape_key, structural_key
+from repro.core.query import P, Query, col, param
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _base_query():
+    PS = P("PS")
+    return (Query().from_table("Users", "U")
+            .from_paths("SocialNetwork", "PS")
+            .where((col("U.Job") == "Lawyer")
+                   & (PS.start.id == col("U.uId")) & (PS.length <= 2))
+            .select(end=PS.end.id, job=col("U.Job")))
+
+
+# ------------------------------------------------------------ distinctness
+def test_different_from_aliases_key_differently():
+    PS = P("PS")
+    a = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+         .where(PS.start.id == col("U.uId")).select(end=PS.end.id))
+    b = (Query().from_table("Users", "V").from_paths("SocialNetwork", "PS")
+         .where(PS.start.id == col("V.uId")).select(end=PS.end.id))
+    assert query_shape_key(a) != query_shape_key(b)
+
+
+def test_const_vs_param_at_same_slot_key_differently():
+    PS = P("PS")
+
+    def q(anchor):
+        return (Query().from_paths("SocialNetwork", "PS")
+                .where((PS.start.id == anchor) & (PS.length <= 2))
+                .select(end=PS.end.id))
+
+    k_const = query_shape_key(q(3))
+    k_param = query_shape_key(q(param("src")))
+    assert k_const != k_param
+    # differing const VALUES differ too (vary-a-value means use a Param)
+    assert k_const != query_shape_key(q(4))
+    # while the same Param name keys identically regardless of binding
+    assert k_param == query_shape_key(q(param("src")))
+
+
+def test_differing_hints_key_differently():
+    base = query_shape_key(_base_query())
+    assert base != query_shape_key(_base_query().hint_traversal("dfs"))
+    assert base != query_shape_key(_base_query().hint_max_length(5))
+    assert base != query_shape_key(_base_query().limit(3))
+    assert base != query_shape_key(_base_query().order_by("U.Job"))
+    assert base != query_shape_key(_base_query().distinct_vertices())
+
+
+def test_default_max_path_len_normalization():
+    a, b = _base_query(), _base_query()
+    b.max_path_len = 8
+    assert (query_shape_key(a, default_max_path_len=8)
+            == query_shape_key(b))
+    assert query_shape_key(a) != query_shape_key(b)
+
+
+# --------------------------------------------------------------- stability
+def _assert_no_object_repr(key):
+    """Default object reprs carry an id() as '0x...' hex — any appearance
+    means the key changes from process to process."""
+    stack = [key]
+    while stack:
+        k = stack.pop()
+        if isinstance(k, tuple):
+            stack.extend(k)
+        elif isinstance(k, str):
+            assert "0x" not in k, f"id() leakage in shape key part: {k!r}"
+
+
+def test_shape_key_has_no_object_repr_leakage():
+    PS = P("PS")
+    q = (_base_query()
+         .where((PS.edges[0:"*"].attr("sDate") > 20000101)
+                & (PS.vertexes[1:"*"].attr("Job") == "Eng")
+                & (col("U.uId") + col("U.dob") > 0)
+                & col("U.uId").isin([1, 2])
+                & (PS.sum_edges("w") < param("cap")))
+         .order_by("U.Job"))
+    q.select_list["pstr"] = PS.path_string
+    _assert_no_object_repr(query_shape_key(q))
+    _assert_no_object_repr(structural_key(q.where_expr))
+
+
+_CHILD = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.core.compiled import query_shape_key
+from repro.core.query import P, Query, col, param
+
+PS = P("PS")
+q = (Query().from_table("Users", "U").from_paths("SocialNetwork", "PS")
+     .where((col("U.Job") == "Lawyer") & (PS.start.id == col("U.uId"))
+            & (PS.length <= 2) & (PS.sum_edges("w") < param("cap"))
+            & (PS.edges[0:"*"].attr("sDate") > 20000101))
+     .select(end=PS.end.id)
+     .hint_traversal("bfs"))
+print(repr(query_shape_key(q, default_max_path_len=8)))
+"""
+
+
+def test_shape_key_stable_across_interpreter_runs():
+    """The same query built in two fresh interpreters (different
+    PYTHONHASHSEED, different object addresses) must print the same
+    key — this is what lets a serving tier share plan-cache keys across
+    restarts."""
+    script = _CHILD.format(src=str(REPO / "src"))
+    outs = []
+    for seed in ("0", "1"):
+        env = dict(os.environ, PYTHONHASHSEED=seed)
+        out = subprocess.run(
+            [sys.executable, "-c", script], env=env,
+            capture_output=True, text=True, check=True,
+        ).stdout.strip()
+        outs.append(out)
+    assert outs[0] == outs[1]
+    assert "0x" not in outs[0]
