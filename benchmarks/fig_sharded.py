@@ -1,0 +1,170 @@
+"""Sharded-backend scaling benchmark (extension: multi-device traversal).
+
+Measures the ``sharded`` TraversalEngine backend against the
+single-device ``xla_coo`` sweep on one synthetic ER graph:
+
+  * ``fig_sharded/native_bfs`` — the ``xla_coo`` baseline per query;
+  * ``fig_sharded/sharded_bfs/n=N`` — the sharded backend pinned to an
+    N-wide mesh, for every N in {1, 2, 4} that the visible device count
+    allows. ``derived`` carries the speedup vs the N=1 sharded point
+    (the 1->N scaling curve).
+
+The stored-threshold gate quantity is the **N=1 overhead ratio**:
+``sharded@1 / xla_coo`` measured interleaved (``time_pair``), i.e. what
+the partitioned layout + shard_map dispatch cost when sharding buys no
+parallelism. Sharding must not regress the single-device path:
+``benchmarks.run`` (and the standalone ``main``) writes
+``BENCH_sharded.json`` and FAILS when the ratio exceeds
+``REPRO_SHARDED_OVERHEAD_MAX`` (default 2.0) — shard_map's fixed
+dispatch overhead is real at CPU-CI graph sizes, but bounded; on
+HBM-scale graphs it amortizes to noise.
+
+The record also carries ``warm_zero_repacks``: the measured (warm)
+phase must hit the per-(epoch, shard) pack cache and the module-level
+trace cache exclusively — zero shard re-partitions, zero re-traces.
+
+CI runs this under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+(the ``sharded`` stage) so the scaling curve has three points; a plain
+``bench`` run degenerates to the N=1 gate, which is the part that guards
+the single-device trajectory.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graphview import build_graph_view
+from repro.core.table import Table
+from repro.core.traversal_engine import TraversalEngine
+
+from .common import time_call, time_pair
+
+OVERHEAD_THRESHOLD = 2.0  # stored threshold: sharded@1 vs xla_coo
+RECORD_PATH = "BENCH_sharded.json"
+
+#: last run's record, consumed by benchmarks.run (or main) for the JSON gate
+RECORD = None
+
+
+def _graph(v, e, seed=0):
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, v, e).astype(np.int32)
+    dst = rng.integers(0, v, e).astype(np.int32)
+    vt = Table.create("V", {"vid": np.arange(v, dtype=np.int32)})
+    et = Table.create("E", {"src": src, "dst": dst,
+                            "w": rng.random(e).astype(np.float32) + 0.1})
+    return build_graph_view("G", vt, et, v_id="vid", e_src="src", e_dst="dst")
+
+
+def run(quick: bool = False):
+    global RECORD
+    v = 1 << 14 if quick else 1 << 17
+    e = 4 * v
+    s = 32
+    max_hops = 8
+    view = _graph(v, e)
+    rng = np.random.default_rng(1)
+    sp = jnp.asarray(rng.integers(0, v, s), jnp.int32)
+
+    n_dev = jax.device_count()
+    widths = [n for n in (1, 2, 4) if n <= n_dev]
+    engines = {n: TraversalEngine(n_devices=n) for n in widths}
+    baseline = TraversalEngine()
+
+    rows = []
+    # gate quantity: interleaved mins, both sides share the estimator
+    t_sharded1, t_native = time_pair(
+        lambda: engines[1].bfs(view, sp, max_hops=max_hops,
+                               backend="sharded"),
+        lambda: baseline.bfs(view, sp, max_hops=max_hops,
+                             backend="xla_coo"),
+    )
+    ratio = t_sharded1 / t_native
+    rows.append(("fig_sharded/native_bfs", t_native, f"V={v} E={e} S={s}"))
+    rows.append(("fig_sharded/sharded_bfs/n=1", t_sharded1,
+                 f"overhead={ratio:.2f}x"))
+
+    scaling = {1: round(t_sharded1, 1)}
+    for n in widths[1:]:
+        t = time_call(
+            engines[n].bfs, view, sp, max_hops=max_hops, backend="sharded")
+        scaling[n] = round(t, 1)
+        rows.append((f"fig_sharded/sharded_bfs/n={n}", t,
+                     f"speedup_vs_n1={t_sharded1 / t:.2f}x"))
+
+    # warm phase: repeated queries must re-pack and re-trace nothing
+    eng = engines[widths[-1]]
+    packs = eng.stats["shard_pack_builds"]
+    traces = eng.stats["traces_bfs_sharded"]
+    eng.bfs(view, sp, max_hops=max_hops, backend="sharded")
+    eng.bfs(view, sp, max_hops=max_hops, backend="sharded")
+    warm_zero = (
+        eng.stats["shard_pack_builds"] == packs
+        and eng.stats["traces_bfs_sharded"] == traces
+        and eng.stats["shard_pack_hits"] >= 2
+    )
+    rows.append(("fig_sharded/warm_zero_repacks", 0.0, warm_zero))
+
+    RECORD = {
+        "n1_overhead_ratio": round(ratio, 4),
+        "native_us": round(t_native, 1),
+        "scaling_us": {str(k): val for k, val in scaling.items()},
+        "warm_zero_repacks": bool(warm_zero),
+        "devices": n_dev,
+        "lanes": s,
+        "quick": quick,
+    }
+    return rows
+
+
+def publish(record, failures=0) -> int:
+    """Write BENCH_sharded.json and apply the stored-threshold gate.
+    Returns the updated failure count (shared by run.py and main)."""
+    threshold = float(
+        os.environ.get("REPRO_SHARDED_OVERHEAD_MAX", OVERHEAD_THRESHOLD)
+    )
+    record = dict(record, threshold=threshold)
+    path = os.environ.get("REPRO_BENCH_SHARDED_JSON", RECORD_PATH)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(
+        f"sharded/overhead,0.0,ratio={record['n1_overhead_ratio']:.2f}x "
+        f"(threshold {threshold:.2f}x) -> {path}",
+        flush=True,
+    )
+    if record["n1_overhead_ratio"] > threshold:
+        print(
+            f"sharded/REGRESSION,0.0,N=1 overhead "
+            f"{record['n1_overhead_ratio']:.2f}x exceeds stored threshold "
+            f"{threshold:.2f}x",
+            flush=True,
+        )
+        failures += 1
+    if not record["warm_zero_repacks"]:
+        print(
+            "sharded/REGRESSION,0.0,warm queries re-packed or re-traced "
+            "instead of hitting the per-(epoch, shard) caches",
+            flush=True,
+        )
+        failures += 1
+    return failures
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+    print("name,us_per_call,derived")
+    rows = run(quick=quick)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if publish(RECORD):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -23,6 +23,14 @@ stay under ``REPRO_SERVING_P99_MAX`` (default 3.0, the stored threshold),
 and the warm steady state must have executed purely from caches
 (``warm_cache_hits_only``: PlanRuntime moved only on ``*_hits`` counters,
 zero new plan builds).
+
+The fig_sharded module publishes the **sharded-backend record**
+(``BENCH_sharded.json``): the N=1 overhead ratio of the ``sharded``
+traversal backend vs ``xla_coo`` (gated by ``REPRO_SHARDED_OVERHEAD_MAX``
+— partitioning must not regress the single-device path), the 1->N
+scaling curve at whatever device counts are visible, and
+``warm_zero_repacks`` (warm queries hit the per-(epoch, shard) pack and
+trace caches exclusively).
 """
 from __future__ import annotations
 
@@ -71,6 +79,7 @@ def main() -> None:
         fig11_sssp,
         fig12_pathjoin,
         fig13_serving,
+        fig_sharded,
         table1_construction,
     )
 
@@ -81,6 +90,7 @@ def main() -> None:
         ("fig11", fig11_sssp),
         ("fig12", fig12_pathjoin),
         ("fig13", fig13_serving),
+        ("fig_sharded", fig_sharded),
         ("table1", table1_construction),
     ]
     print("name,us_per_call,derived")
@@ -148,6 +158,9 @@ def main() -> None:
                 flush=True,
             )
             failures += 1
+    if getattr(fig_sharded, "RECORD", None) is not None:
+        failures = fig_sharded.publish(fig_sharded.RECORD, failures)
+
     if failures:
         sys.exit(1)
 

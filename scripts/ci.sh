@@ -5,19 +5,29 @@
 # Stages (default: all, in order):
 #   collect       pytest collection only — fails fast on import/collection
 #                 errors before any slow work starts
-#   tier1         fast test suite (slow dry-run compiles excluded)
+#   tier1         fast test suite (slow dry-run compiles and multi-device
+#                 sharded suite excluded)
 #   differential  cross-backend traversal equivalence suite (-m differential)
+#   sharded       multi-device sharded-backend suite: the differential
+#                 family sweep plus the >=1M-vertex bit-identity tests
+#                 (-m "differential or sharded") re-run under
+#                 XLA_FLAGS=--xla_force_host_platform_device_count=N for
+#                 N=1,2,4, then the fig_sharded scaling benchmark at 4
+#                 forced devices (writes BENCH_sharded.json, gated)
 #   bench         quick-size benchmark smoke (REPRO_BENCH_QUICK=1); writes
-#                 BENCH_plan_overhead.json (planned-vs-raw fig8/fig9 ratios)
-#                 and BENCH_serving.json (fig13 QueryLoop warm p50/p99 at
-#                 fixed QPS) at the repo root and FAILS if either regresses
-#                 past its stored threshold (REPRO_PLAN_OVERHEAD_MAX, 1.3;
-#                 REPRO_SERVING_P99_MAX, 3.0) or the warm serving steady
+#                 BENCH_plan_overhead.json (planned-vs-raw fig8/fig9 ratios),
+#                 BENCH_serving.json (fig13 QueryLoop warm p50/p99 at
+#                 fixed QPS), and BENCH_sharded.json (sharded-backend N=1
+#                 overhead + scaling curve) at the repo root and FAILS if
+#                 any regresses past its stored threshold
+#                 (REPRO_PLAN_OVERHEAD_MAX, 1.3; REPRO_SERVING_P99_MAX,
+#                 3.0; REPRO_SHARDED_OVERHEAD_MAX, 2.0) or a warm steady
 #                 state stops running purely from caches
 #   analyze       static analysis — hot-path lint over src/repro against
 #                 scripts/lint_baseline.json (python -m repro.analysis);
 #                 fails on any fresh host-sync / device-loop /
-#                 structural-repr / pump-alloc finding
+#                 structural-repr / pump-alloc /
+#                 cross-shard-host-transfer finding
 #   docs          executes the README's worked example
 #                 (examples/readme_example.py, asserted output) so the
 #                 documented API can never drift from the code
@@ -28,7 +38,7 @@ cd "$(dirname "$0")/.."
 
 STAGES=("$@")
 if [ ${#STAGES[@]} -eq 0 ]; then
-  STAGES=(collect tier1 differential analyze bench docs)
+  STAGES=(collect tier1 differential sharded analyze bench docs)
 fi
 
 declare -a TIMINGS=()
@@ -52,6 +62,25 @@ bench_stage() {
   cat BENCH_plan_overhead.json
   echo "-- serving record --"
   cat BENCH_serving.json
+  echo "-- sharded record --"
+  cat BENCH_sharded.json
+}
+
+sharded_stage() {
+  # XLA fixes the device count at process start, so each forced count is
+  # its own pytest process; the family sweep (-m differential, which now
+  # includes the sharded backend) and the >=1M-vertex suite (-m sharded)
+  # must be bit-identical at every width
+  local n
+  for n in 1 2 4; do
+    echo "-- sharded: forced host device count ${n} --"
+    env XLA_FLAGS="--xla_force_host_platform_device_count=${n}" \
+      python -m pytest -q -m "differential or sharded"
+  done
+  echo "-- sharded: scaling benchmark (4 forced devices) --"
+  env XLA_FLAGS="--xla_force_host_platform_device_count=4" \
+    REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.fig_sharded
+  cat BENCH_sharded.json
 }
 
 # "${ARR[@]}" on an empty array trips `set -u` before bash 4.4; the
@@ -63,10 +92,14 @@ for stage in ${STAGES[@]+"${STAGES[@]}"}; do
       run_stage collect python -m pytest -q --collect-only -m "not slow"
       ;;
     tier1)
-      run_stage tier1 python -m pytest -q -m "not slow and not differential"
+      run_stage tier1 python -m pytest -q \
+        -m "not slow and not differential and not sharded"
       ;;
     differential)
       run_stage differential python -m pytest -q -m differential
+      ;;
+    sharded)
+      run_stage sharded sharded_stage
       ;;
     analyze)
       run_stage analyze env PYTHONPATH=src python -m repro.analysis

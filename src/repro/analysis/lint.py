@@ -23,6 +23,15 @@ the executor/serving hot path, structural shape keys built from reprs):
 ``pump-alloc``      a ``jnp`` array-allocation call inside
                     ``QueryLoop.pump``'s per-ticket path — steady-state
                     serving must touch warm caches, not allocate.
+``cross-shard-host-transfer``
+                    ``jax.device_get(...)`` / ``np.asarray(...)`` inside a
+                    ``for``/``while`` loop of a registered sharded-traversal
+                    hop function (``SHARD_HOP_FUNCS``) — pulling shard_map
+                    outputs to host per hop turns the device-to-device ring
+                    combine into a host round-trip per iteration. The hop
+                    loops must stay inside one jitted ``shard_map`` call
+                    (host-loop drivers like ``ops.bfs_pallas`` are a
+                    different, unregistered execution model).
 =================== ======================================================
 
 Suppression is explicit and reviewable: a ``# lint: allow-<rule>``
@@ -47,6 +56,7 @@ __all__ = [
     "load_baseline",
     "save_baseline",
     "HOT_PATH_FUNCS",
+    "SHARD_HOP_FUNCS",
 ]
 
 
@@ -63,6 +73,17 @@ HOT_PATH_FUNCS: Dict[str, Set[str]] = {
     "core/compiled.py": {"mask", "cached", "evaluate", "__call__"},
     "serve/loop.py": {"pump", "submit"},
     "serve/engine.py": {"submit", "step", "flush", "flush_plans"},
+}
+
+# Sharded-traversal hop functions: their loops are (or feed) the per-hop
+# relaxation and must never host-transfer shard_map outputs mid-loop.
+# Deliberately NOT registered: ops.bfs_pallas (a host-side hop driver by
+# design) and the engine's flush (result assembly after the sweep).
+SHARD_HOP_FUNCS: Dict[str, Set[str]] = {
+    "kernels/frontier/shard.py": {
+        "sharded_bfs", "sharded_sssp_dist", "_bfs_body", "_sssp_body",
+    },
+    "core/traversal_engine.py": {"bfs", "sssp"},
 }
 
 # jnp calls that allocate fresh device arrays (the pump-alloc rule)
@@ -116,14 +137,18 @@ def _is_jnp_call(node: ast.AST) -> bool:
 class _HotPathVisitor(ast.NodeVisitor):
     """host-sync / device-loop / pump-alloc over one module."""
 
-    def __init__(self, path: str, hot_funcs: Set[str], in_serve: bool):
+    def __init__(self, path: str, hot_funcs: Set[str], in_serve: bool,
+                 shard_funcs: Optional[Set[str]] = None):
         self.path = path
         self.hot_funcs = hot_funcs
         self.in_serve = in_serve
+        self.shard_funcs = shard_funcs or set()
         self.scope: List[str] = []  # class/function qualname parts
         # per-function state stacks
         self.hot: List[bool] = [False]
         self.pump: List[bool] = [False]
+        self.shard: List[bool] = [False]
+        self.loop_depth: List[int] = [0]
         self.def_lines: List[int] = []  # enclosing def/class lines (pragma scope)
         self.device_names: List[Set[str]] = [set()]
         self.findings: List[Finding] = []
@@ -150,9 +175,17 @@ class _HotPathVisitor(ast.NodeVisitor):
         self.def_lines.append(node.lineno)
         self.hot.append(node.name in self.hot_funcs)
         self.pump.append(self.in_serve and node.name == "pump")
+        # nested defs inherit the hop-loop context: shard_map bodies and
+        # while-loop steps are closures inside the registered drivers
+        self.shard.append(
+            node.name in self.shard_funcs or self.shard[-1]
+        )
+        self.loop_depth.append(0)
         self.device_names.append(set())
         self.generic_visit(node)
         self.device_names.pop()
+        self.loop_depth.pop()
+        self.shard.pop()
         self.pump.pop()
         self.hot.pop()
         self.def_lines.pop()
@@ -185,7 +218,14 @@ class _HotPathVisitor(ast.NodeVisitor):
                     f"Python-level for loop over device array '{it.id}' "
                     "— one dispatch per element; vectorize instead",
                 )
+        self.loop_depth[-1] += 1
         self.generic_visit(node)
+        self.loop_depth[-1] -= 1
+
+    def visit_While(self, node: ast.While):
+        self.loop_depth[-1] += 1
+        self.generic_visit(node)
+        self.loop_depth[-1] -= 1
 
     def visit_Call(self, node: ast.Call):
         if self.hot[-1]:
@@ -216,6 +256,19 @@ class _HotPathVisitor(ast.NodeVisitor):
                 self._flag(
                     "host-sync", node,
                     "bool(jnp...) forces a device sync on the hot path",
+                )
+        if self.shard[-1] and self.loop_depth[-1] > 0:
+            f = node.func
+            if isinstance(f, ast.Attribute) and (
+                (f.attr == "device_get" and _call_root(f) == "jax")
+                or (f.attr == "asarray" and _call_root(f) == "np")
+            ):
+                self._flag(
+                    "cross-shard-host-transfer", node,
+                    f"{_call_root(f)}.{f.attr}() inside a sharded-traversal "
+                    "hop loop pulls shard_map output to host every "
+                    "iteration — keep the loop inside one jitted shard_map "
+                    "call (ring combine stays device-to-device)",
                 )
         if self.pump[-1] and _is_jnp_call(node) \
                 and node.func.attr in _JNP_ALLOC:
@@ -297,7 +350,13 @@ def lint_source(src: str, path: str) -> List[Finding]:
     for suffix, funcs in HOT_PATH_FUNCS.items():
         if path.endswith(suffix):
             hot_funcs |= funcs
-    v = _HotPathVisitor(path, hot_funcs, in_serve="serve/" in path)
+    shard_funcs: Set[str] = set()
+    for suffix, funcs in SHARD_HOP_FUNCS.items():
+        if path.endswith(suffix):
+            shard_funcs |= funcs
+    v = _HotPathVisitor(
+        path, hot_funcs, in_serve="serve/" in path, shard_funcs=shard_funcs
+    )
     v.visit(tree)
     findings = v.findings + _structural_repr_findings(tree, path)
 

@@ -36,6 +36,11 @@ Invariants (names appear in :class:`PlanInvariantError` messages):
                      exposes a stable, plan-unique call-site key (no
                      object ids / unhashables that would break epoch
                      cache reuse)
+``backend-known``    every traversal-backend pin carried on a PathScan
+                     spec names a registered ``TraversalEngine`` backend
+                     (or ``auto``/unset) — an unknown pin would otherwise
+                     surface as a ``ValueError`` deep inside the executor
+                     on the first sweep, after planning already succeeded
 ==================== =====================================================
 """
 from __future__ import annotations
@@ -167,6 +172,28 @@ def _check_anchor_dag(root, rule: str) -> None:
                     "form a DAG over already-planned sources (cycles "
                     "must demote to path-join conditions)",
                 )
+
+
+def _check_backend_known(root, rule: str) -> None:
+    """Backend pins must name a registered physical backend. Imported
+    lazily so the verifier keeps working in stripped-down test rigs that
+    stub out the engine layer."""
+    from repro.core.traversal_engine import BACKENDS
+
+    valid = (None, "auto") + tuple(BACKENDS)
+    for n in _iter_nodes(root):
+        spec = getattr(n, "spec", None)
+        b = getattr(spec, "backend", None) if spec is not None else None
+        if b not in valid:
+            alias = getattr(spec, "alias", "?")
+            raise PlanInvariantError(
+                "backend-known", rule,
+                f"PathScan '{alias}' pins traversal backend {b!r}, which "
+                f"is not a registered TraversalEngine backend "
+                f"(known: {', '.join(BACKENDS)}; or 'auto'/unset) — the "
+                "pin would fail at execution time, after planning "
+                "succeeded",
+            )
 
 
 def _check_capacities(root, rule: str) -> None:
@@ -584,6 +611,7 @@ def verify_after_rule(st, rule_name: str, ran: List[str]) -> None:
     _check_trace_chain(st.trace, rule_name)
     _check_current_matches_trace(st, rule_name)
     _check_capacities(st.root, rule_name)
+    _check_backend_known(st.root, rule_name)
     _check_params(st.root, _declared_params(st.query), rule_name)
     if "path-ordering" in ran:
         # before path-ordering, anchors may legitimately be cyclic —
@@ -600,6 +628,7 @@ def verify_plan(plan, engine=None, rule: str = "plan-finalization") -> None:
     _check_trace_chain(plan.trace, rule)
     _check_capacities(plan.logical, rule)
     _check_anchor_dag(plan.root, rule)
+    _check_backend_known(plan.root, rule)
     _check_params(plan.root, set(plan.param_names), rule)
     _check_cache_site_keys(plan.root, rule)
     _schema_of(plan.root, engine, plan.specs, rule)

@@ -1236,11 +1236,13 @@ def rule_traversal_backend(st: _State):
     """Record per-query traversal-backend pins in the plan trace.
 
     A query may request a specific TraversalEngine backend (``xla_coo``,
-    ``pallas_frontier``, ``reference``); the pin is carried on the spec
-    and *resolved* at execution time against live view statistics (the
-    auto density policy), because the right backend depends on state the
-    optimizer should not freeze — frontier width, edge count, packing
-    cache warmth. The rule only notes the request so EXPLAIN shows it."""
+    ``pallas_frontier``, ``reference``, ``sharded``); the pin is carried
+    on the spec and *resolved* at execution time against live view
+    statistics (the device-count-aware auto policy), because the right
+    backend depends on state the optimizer should not freeze — frontier
+    width, edge count, device count, packing cache warmth. The rule only
+    notes the request so EXPLAIN shows it; the ``backend-known`` plan
+    invariant rejects pins naming no registered backend."""
     multi = len(st.paths) > 1
     for p in st.paths:
         if p.spec.backend is not None:

@@ -252,6 +252,6 @@ class Query:
 
     def traversal_backend(self, name: str):
         """Pin the physical traversal backend for this query
-        ('xla_coo' | 'pallas_frontier' | 'reference')."""
+        ('xla_coo' | 'pallas_frontier' | 'reference' | 'sharded')."""
         self.backend = name
         return self

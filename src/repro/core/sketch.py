@@ -1,0 +1,121 @@
+"""HyperLogLog distinct-count sketch for catalog statistics.
+
+``Table.compute_stats`` fed the optimizer exact ``np.unique`` counts per
+column — an O(n log n) sort per column per epoch, fine for benchmark-sized
+tables but not for sharded-graph-scale edge tables where a stats pass must
+stay cheap relative to the traversal it is planning. This module is the
+classic HyperLogLog estimator (Flajolet et al. 2007) in vectorized numpy:
+
+* hash every value with a splitmix64 finalizer (good avalanche, branch-free
+  on uint64 lanes),
+* the low ``p`` bits pick one of ``m = 2**p`` registers,
+* each register keeps the max leading-zero rank of the remaining 64-p bits,
+* the harmonic mean of ``2**-register`` estimates cardinality, with the
+  standard small-range linear-counting correction below ``2.5 * m``.
+
+Relative standard error is ``~1.04 / sqrt(m)`` (~2.3% at the default
+p=12 / 4 KiB of registers); the property test in
+``tests/test_sketch.py`` bounds observed error at several multiples of
+that. Sketches over disjoint inputs merge by elementwise register max,
+which is what lets per-shard stats passes combine without a rescan.
+
+``Table.compute_stats`` keeps exact counts under a row threshold
+(``REPRO_STATS_EXACT_MAX``) — small tables pay nothing for the estimate,
+and every existing planner test stays on exact counts.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+DEFAULT_P = 12  # 4096 registers, ~2.3% relative standard error
+
+
+def _hash64(x: np.ndarray) -> np.ndarray:
+    """splitmix64 finalizer over uint64 lanes (vectorized, wrap-around)."""
+    with np.errstate(over="ignore"):
+        z = x.astype(np.uint64, copy=True)
+        z += np.uint64(0x9E3779B97F4A7C15)
+        z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+        z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+        return z ^ (z >> np.uint64(31))
+
+
+def _to_u64(values: np.ndarray) -> np.ndarray:
+    """Reinterpret an arbitrary 1-D column as uint64 hash inputs."""
+    v = np.asarray(values)
+    if v.dtype.kind in "iu" and v.dtype.itemsize <= 8:
+        return v.astype(np.uint64)
+    if v.dtype.kind == "f":
+        # canonicalize so 0.0 == -0.0 hash alike; NaNs collapse to one bucket
+        v = v.astype(np.float64)
+        v = np.where(v == 0.0, 0.0, v)
+        v = np.where(np.isnan(v), np.nan, v)
+        return v.view(np.uint64)
+    if v.dtype.kind == "b":
+        return v.astype(np.uint64)
+    # fallback: hash the raw bytes row-wise (strings, structured dtypes)
+    raw = np.ascontiguousarray(v).view(np.uint8).reshape(v.shape[0], -1)
+    acc = np.zeros(v.shape[0], np.uint64)
+    with np.errstate(over="ignore"):
+        for i in range(raw.shape[1]):
+            acc = acc * np.uint64(1099511628211) + raw[:, i]
+    return acc
+
+
+class HyperLogLog:
+    """Mergeable distinct-count sketch; ``add`` is vectorized over arrays."""
+
+    def __init__(self, p: int = DEFAULT_P):
+        if not 4 <= p <= 18:
+            raise ValueError(f"p={p} out of the supported [4, 18] range")
+        self.p = p
+        self.m = 1 << p
+        self.registers = np.zeros(self.m, np.uint8)
+
+    def add(self, values) -> "HyperLogLog":
+        v = np.asarray(values)
+        if v.ndim != 1:
+            raise ValueError("HyperLogLog.add expects a 1-D array")
+        if v.shape[0] == 0:
+            return self
+        h = _hash64(_to_u64(v))
+        idx = (h & np.uint64(self.m - 1)).astype(np.int64)
+        rest = h >> np.uint64(self.p)
+        # rank = leading zeros of the (64-p)-bit remainder, + 1; a zero
+        # remainder gets the max rank (all 64-p bits are "zeros")
+        width = 64 - self.p
+        nbits = np.zeros(v.shape[0], np.int64)  # highest set bit position+1
+        r = rest.copy()
+        for shift in (32, 16, 8, 4, 2, 1):
+            big = r >= (np.uint64(1) << np.uint64(shift))
+            nbits = np.where(big, nbits + shift, nbits)
+            r = np.where(big, r >> np.uint64(shift), r)
+        nbits = np.where(rest > 0, nbits + 1, 0)
+        rank = (width - nbits + 1).astype(np.uint8)
+        np.maximum.at(self.registers, idx, rank)
+        return self
+
+    def merge(self, other: "HyperLogLog") -> "HyperLogLog":
+        if other.p != self.p:
+            raise ValueError("cannot merge sketches with different precision")
+        np.maximum(self.registers, other.registers, out=self.registers)
+        return self
+
+    def estimate(self) -> int:
+        m = float(self.m)
+        if self.m >= 128:
+            alpha = 0.7213 / (1.0 + 1.079 / m)
+        else:
+            alpha = {16: 0.673, 32: 0.697, 64: 0.709}.get(self.m, 0.7213)
+        inv = np.ldexp(1.0, -self.registers.astype(np.int64))
+        raw = alpha * m * m / float(inv.sum())
+        if raw <= 2.5 * m:
+            zeros = int(np.count_nonzero(self.registers == 0))
+            if zeros:
+                return int(round(m * np.log(m / zeros)))
+        return int(round(raw))
+
+
+def approx_distinct(values, p: int = DEFAULT_P) -> int:
+    """One-shot estimate for a 1-D array (the ``compute_stats`` entry)."""
+    return HyperLogLog(p).add(values).estimate()

@@ -14,6 +14,7 @@ mask, so all programs compile once per capacity.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
 from typing import Dict, Mapping
 
@@ -27,10 +28,11 @@ from repro.core.struct import pytree, field, static_field
 class TableStats:
     """Catalog statistics for one table snapshot (keyed by table epoch).
 
-    ``distinct`` holds exact distinct counts over live rows per 1-D column
-    (exact because tables are in-memory and stats recompute only on epoch
-    change); the optimizer's cost-based join-ordering rule reads them as
-    equi-join selectivity denominators.
+    ``distinct`` holds distinct counts over live rows per 1-D column —
+    exact below the ``REPRO_STATS_EXACT_MAX`` row threshold, HyperLogLog
+    estimates (``core/sketch.py``, ~2.3% relative error) above it; the
+    optimizer's cost-based join-ordering rule reads them as equi-join
+    selectivity denominators, where that error is immaterial.
     """
 
     name: str
@@ -165,16 +167,28 @@ class Table:
         """Host-side statistics pass over live rows (planning-time only).
 
         Engines cache the result per table epoch (``GRFusion.table_stats``);
-        this method itself always recomputes.
+        this method itself always recomputes. Small tables (live rows up to
+        ``REPRO_STATS_EXACT_MAX``, default 32768) get exact ``np.unique``
+        counts; larger ones switch to the HyperLogLog sketch
+        (``core/sketch.py``) so the stats pass stays linear-time at
+        sharded-graph scale. Estimates are clamped to ``[1, row_count]`` —
+        the optimizer only consumes them as selectivity denominators.
         """
+        from repro.core.sketch import approx_distinct
+
         mask = np.asarray(self.valid)
         n = int(mask.sum())
+        exact_max = int(os.environ.get("REPRO_STATS_EXACT_MAX", 1 << 15))
         distinct: Dict[str, int] = {}
         for k, v in self.columns.items():
             arr = np.asarray(v)
             if arr.ndim != 1:
                 continue
-            distinct[k] = int(np.unique(arr[mask]).size)
+            if n <= exact_max:
+                distinct[k] = int(np.unique(arr[mask]).size)
+            else:
+                est = approx_distinct(arr[mask])
+                distinct[k] = max(1, min(est, n))
         return TableStats(
             name=self.name, capacity=self.capacity, row_count=n,
             distinct=distinct,

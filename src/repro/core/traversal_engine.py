@@ -20,10 +20,21 @@ Backend registry
   * ``reference``        — pure-numpy oracle (independent of XLA *and*
                            Pallas); the ground truth the differential suite
                            compares everything against.
-  * ``auto``             — frontier-density policy: the fused kernel is
-                           selected on TPU backends for dense multi-source
-                           sweeps (avg fan-out and batch width above
-                           thresholds); everything else takes ``xla_coo``.
+  * ``sharded``          — multi-device edge-cut sweep: the COO stream is
+                           partitioned by dst block across a 1-D device
+                           mesh (``kernels/frontier/shard.py``), per-shard
+                           frontier relaxations run under ``shard_map`` and
+                           per-hop partial frontiers / distances combine
+                           with the exact ring all-reduce
+                           (``repro.dist.compression``). Graphs bigger than
+                           one device's HBM; CI exercises it with
+                           ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
+  * ``auto``             — device-count-aware density policy: streams past
+                           the per-device threshold on a multi-device mesh
+                           take ``sharded``; dense multi-source sweeps on
+                           TPU take the fused kernel (avg fan-out and batch
+                           width above thresholds); everything else takes
+                           ``xla_coo``.
 
 All backends return bit-identical results by construction: BFS distances
 are integral hop counts; SSSP distances are the unique least fixpoint of
@@ -34,6 +45,12 @@ identical distances imply identical parent slots.
 
 Caches
 ------
+  * **Shard-pack cache** — key ``(topology_key, n_shards, pad_block)``,
+    value the per-shard edge-cut ``(shard_src, shard_dst, shard_eid)``
+    arrays. Same epoch lifecycle as the packing cache below: the edge-cut
+    partition is paid once per (topology epoch, mesh width), warm queries
+    hit it with zero re-packs (the BENCH_sharded gate asserts this), and
+    ``bump_epoch`` invalidates it alongside the dst-sort packs.
   * **Packing cache** — key ``(topology_key, block_rows, block_edges)``,
     value the packed ``(packed_src, packed_eid, ldst)`` arrays. The
     topology key is ``(graph_name, epoch)`` when the owning engine
@@ -71,10 +88,17 @@ import numpy as np
 from repro.core import traversal as T
 from repro.core.compiled import EpochRegistry
 from repro.core.graphview import GraphView
+from repro.kernels.frontier import shard as FS
 from repro.kernels.frontier.ops import bfs_pallas, pack_edges_by_dst
 
-BACKENDS = ("xla_coo", "pallas_frontier", "reference")
+BACKENDS = ("xla_coo", "pallas_frontier", "reference", "sharded")
 _INF = jnp.float32(jnp.inf)
+
+# Default auto-policy threshold: edge-stream slots above which a
+# multi-device mesh shards the sweep instead of running single-device.
+# Sized so every benchmark/test graph below ~4M edge slots keeps its
+# existing backend; overridable per engine (tests set it to 1).
+SHARD_MIN_SLOTS = 1 << 22
 
 # Trace counters live at module level because the jitted entry points do
 # too: one XLA trace cache is shared by every TraversalEngine instance
@@ -191,10 +215,17 @@ class TraversalEngine:
         lane_width: int = 32,
         max_lanes: int = 1024,
         epochs: Optional[EpochRegistry] = None,
+        n_devices: Optional[int] = None,
+        shard_min_slots: int = SHARD_MIN_SLOTS,
     ):
         if default_backend != "auto" and default_backend not in BACKENDS:
             raise ValueError(f"unknown backend {default_backend!r}")
         self.default_backend = default_backend
+        # sharded-backend knobs: mesh width (None = every visible device,
+        # read per query so forced host-platform device counts apply) and
+        # the auto policy's stream-size threshold for picking `sharded`
+        self.n_devices = n_devices
+        self.shard_min_slots = shard_min_slots
         self.block_rows = block_rows
         self.block_edges = block_edges
         self.block_size = block_size
@@ -207,6 +238,7 @@ class TraversalEngine:
         self.max_lanes = max_lanes  # widest single [S, V] sweep flush builds
         self._stats = collections.Counter()
         self._packs: "collections.OrderedDict" = collections.OrderedDict()
+        self._shard_packs: "collections.OrderedDict" = collections.OrderedDict()
         self._pack_cap = pack_cache_capacity
         # shared with the owning GRFusion: one registry answers both "did
         # the topology change?" (packing cache) and "did a table change?"
@@ -221,7 +253,7 @@ class TraversalEngine:
     @property
     def stats(self) -> collections.Counter:
         """Per-engine event counts merged with the shared trace counters."""
-        return self._stats + _TRACE_COUNTS
+        return self._stats + _TRACE_COUNTS + FS.TRACE_COUNTS
 
     # ------------------------------------------------------- topology epochs
     def register_view(self, name: str):
@@ -231,9 +263,10 @@ class TraversalEngine:
     def bump_epoch(self, name: str):
         """Topology changed (compaction / delta insert): invalidate packs."""
         self.epochs.bump(name)
-        stale = [k for k in self._packs if k[0][0] == name]
-        for k in stale:
-            del self._packs[k]
+        for packs in (self._packs, self._shard_packs):
+            stale = [k for k in packs if k[0][0] == name]
+            for k in stale:
+                del packs[k]
 
     def topology_key(self, view: GraphView, graph: Optional[str] = None):
         if graph is not None and self.epochs.known(graph):
@@ -286,6 +319,42 @@ class TraversalEngine:
         self._stats["pack_builds"] += 1
         return pack
 
+    # ----------------------------------------------------- sharded edge-cut
+    def device_count(self) -> int:
+        """Mesh width for the sharded backend (constructor override or
+        every visible device — read lazily so forced host-platform device
+        counts picked up at process start apply)."""
+        return self.n_devices if self.n_devices is not None else jax.device_count()
+
+    def get_shard_pack(
+        self, view: GraphView, graph: Optional[str] = None,
+        n_shards: Optional[int] = None,
+    ):
+        """Per-shard edge-cut streams for the sharded backend, cached per
+        (topology epoch, mesh width). The pad granularity reuses the
+        adaptive ``_block_for`` machinery so similarly-sized topologies
+        share shapes (and therefore XLA traces) across epochs."""
+        n = n_shards if n_shards is not None else self.device_count()
+        pad_block = self._block_for(view)
+        key = (self.topology_key(view, graph), n, pad_block)
+        hit = self._shard_packs.get(key)
+        if hit is not None:
+            self._stats["shard_pack_hits"] += 1
+            self._shard_packs.move_to_end(key)
+            return hit
+        src, dst, eid = view.all_coo()
+        ssrc, sdst, seid = FS.partition_edges_by_dst_block(
+            np.asarray(src), np.asarray(dst), np.asarray(eid),
+            view.n_vertices, n,
+            block_rows=self.block_rows, pad_block=pad_block,
+        )
+        pack = (jnp.asarray(ssrc), jnp.asarray(sdst), jnp.asarray(seid))
+        self._shard_packs[key] = pack
+        while len(self._shard_packs) > self._pack_cap:
+            self._shard_packs.popitem(last=False)
+        self._stats["shard_pack_builds"] += 1
+        return pack
+
     def _block_for(self, view: GraphView) -> int:
         """Effective COO block size for one view: the configured block,
         shrunk to the next power of two covering the actual edge stream.
@@ -309,12 +378,15 @@ class TraversalEngine:
         requested: Optional[str] = None,
         n_sources: int = 1,
     ) -> str:
-        """Auto policy: frontier-density heuristic.
+        """Auto policy: device-count-aware frontier-density heuristic.
 
-        The fused MXU kernel amortizes its packed layout when the [S, V]
-        sweep is dense — wide query batches over high-fan-out graphs — and
-        only runs compiled on TPU (interpret mode elsewhere is a
-        correctness tool, not a fast path).
+        Streams past the per-device slot threshold on a multi-device mesh
+        take ``sharded`` (the whole point of partitioning is graphs that
+        exceed one device); the fused MXU kernel amortizes its packed
+        layout when the [S, V] sweep is dense — wide query batches over
+        high-fan-out graphs — and only runs compiled on TPU (interpret
+        mode elsewhere is a correctness tool, not a fast path).
+        ``REPRO_TRAVERSAL_BACKEND`` overrides the auto choice.
         """
         b = requested or self.default_backend
         env = os.environ.get("REPRO_TRAVERSAL_BACKEND")
@@ -324,6 +396,10 @@ class TraversalEngine:
             if b not in BACKENDS:
                 raise ValueError(f"unknown traversal backend {b!r}")
             return b
+        if self.device_count() > 1:
+            n_slots = view.n_slots + view.delta_capacity
+            if n_slots >= self.shard_min_slots:
+                return "sharded"
         if jax.default_backend() == "tpu":
             dense = float(view.avg_fan_out) >= 4.0 and n_sources >= 8
             if dense:
@@ -367,6 +443,17 @@ class TraversalEngine:
                 vertex_mask=vmask, target_pos=target_pos,
                 block_rows=self.block_rows, max_hops=max_hops,
                 interpret=self.interpret,
+            )
+        if b == "sharded":
+            ssrc, sdst, seid = self.get_shard_pack(view, graph)
+            vmask = view.v_valid if vertex_mask is None else (
+                view.v_valid & vertex_mask
+            )
+            return FS.sharded_bfs(
+                ssrc, sdst, seid, source_pos, view.n_vertices,
+                edge_mask_by_row=edge_mask_by_row,
+                vertex_mask=vmask, target_pos=target_pos,
+                max_hops=max_hops,
             )
         return jnp.asarray(
             self._bfs_reference(
@@ -446,6 +533,16 @@ class TraversalEngine:
             dist = self._sssp_packed_dist(
                 view, source_pos, weight_by_row, edge_mask_by_row,
                 vertex_mask, max_iters=max_iters, graph=graph,
+            )
+        elif b == "sharded":
+            ssrc, sdst, seid = self.get_shard_pack(view, graph)
+            vmask = view.v_valid if vertex_mask is None else (
+                view.v_valid & vertex_mask
+            )
+            dist = FS.sharded_sssp_dist(
+                ssrc, sdst, seid, source_pos, weight_by_row,
+                view.n_vertices, edge_mask_by_row=edge_mask_by_row,
+                vertex_mask=vmask, max_iters=max_iters,
             )
         else:
             dist = jnp.asarray(

@@ -1,11 +1,37 @@
-"""Int8 gradient compression with error feedback, plus a quantized ring
-all-reduce (the wire format the production mesh would use for gradient
-sync; on a single device it degenerates to the identity).
+"""Collectives for the device mesh: int8 gradient compression with error
+feedback plus a quantized ring all-reduce (the training-side wire format),
+and the **exact** ring all-reduce family the sharded traversal backend
+uses to combine per-shard frontier/dist lanes.
+
+Two reduction families, deliberately separate:
+
+* ``ring_allreduce_int8`` — int8-quantized wire traffic with an
+  error-feedback residual carried by :class:`Compressor`. Lossy per step,
+  convergent in sum; only ever valid for approximate-tolerant float
+  aggregates (gradients, weighted path aggregates).
+* ``ring_allreduce_exact`` — the same ring schedule (reduce-scatter then
+  all-gather over ``ppermute``) but with full-precision chunks and an
+  order-independent elementwise op (``min``/``max``/``or``/``sum``).
+  ``min`` over float32 and ``or``/``max`` over integers are bitwise
+  exact regardless of sharding, which is what keeps the sharded traversal
+  backend bit-identical to the single-device oracles.
+
+:func:`traversal_allreduce` is the routing seam between the two: traversal
+state lanes (``dist``/``parent``/``frontier``) carry correctness-critical
+integer or float-fixpoint semantics and are rejected at call time if a
+caller asks for the int8 error-feedback path.
+
+On a single-participant axis every reduce degenerates to the identity.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+# Lanes whose values are semantically exact (hop counts, parent edge slots,
+# frontier membership, min-fixpoint distances). Quantizing any of these
+# silently corrupts traversal results, so traversal_allreduce refuses.
+EXACT_LANES = frozenset({"dist", "parent", "frontier"})
 
 
 def quantize_int8(x):
@@ -82,3 +108,102 @@ def ring_allreduce_int8(x, *, axis_name):
     if pad:
         full = full[:-pad]
     return full.reshape(orig_shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# exact ring all-reduce (traversal-side collectives)
+# --------------------------------------------------------------------------
+def _combine(buf, i, chunk, op):
+    """Fold one received chunk into the local buffer with an exact op."""
+    if op == "min":
+        return buf.at[i].min(chunk)
+    if op in ("max", "or"):
+        # 'or' is max over bool/unsigned lanes — both are exact; keeping
+        # the spelling separate documents intent at call sites
+        return buf.at[i].max(chunk)
+    if op == "sum":
+        return buf.at[i].add(chunk)
+    raise ValueError(f"unknown exact all-reduce op {op!r}")
+
+
+def _op_identity(dtype, op):
+    """Padding value that is an identity for ``op`` on ``dtype``."""
+    if op == "min":
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.asarray(jnp.inf, dtype)
+        return jnp.asarray(jnp.iinfo(dtype).max, dtype)
+    if op in ("max", "or"):
+        if dtype == jnp.bool_:
+            return jnp.asarray(False)
+        if jnp.issubdtype(dtype, jnp.floating):
+            return jnp.asarray(-jnp.inf, dtype)
+        return jnp.asarray(jnp.iinfo(dtype).min, dtype)
+    return jnp.asarray(0, dtype)
+
+
+def ring_allreduce_exact(x, *, axis_name, op="min"):
+    """Bitwise-exact ring all-reduce (inside ``shard_map``).
+
+    Same reduce-scatter + all-gather schedule as the int8 ring, but the
+    wire chunks are full precision and the reduction op is elementwise and
+    order-independent (``min`` / ``max`` / ``or`` / ``sum``). For ``min``,
+    ``max`` and ``or`` the result is bit-identical to reducing the
+    unsharded stream in any order — the property the sharded traversal
+    backend's dist/frontier combines rely on. (``sum`` over floats is
+    exact only up to reassociation; traversal lanes never use it.)
+
+    Single-participant axes return ``x`` unchanged.
+    """
+    n = jax.lax.psum(1, axis_name)  # axis size: a static Python int
+    if n == 1:
+        return x
+
+    orig_shape = x.shape
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    if pad:
+        flat = jnp.pad(flat, (0, pad), constant_values=_op_identity(x.dtype, op))
+    chunks = flat.reshape(n, -1)
+    idx = jax.lax.axis_index(axis_name)
+    perm = [(i, (i + 1) % n) for i in range(n)]
+
+    # reduce-scatter: after n-1 hops device d owns the full reduction of
+    # chunk (d + 1) mod n
+    buf = chunks
+    for s in range(n - 1):
+        send_i = (idx - s) % n
+        c = jax.lax.ppermute(jnp.take(buf, send_i, axis=0), axis_name, perm)
+        recv_i = (idx - s - 1) % n
+        buf = _combine(buf, recv_i, c, op)
+
+    owned = jnp.take(buf, (idx + 1) % n, axis=0)
+    gathered = jax.lax.all_gather(owned, axis_name)  # [n, C]
+    full = jnp.take(gathered, (jnp.arange(n) - 1) % n, axis=0).reshape(-1)
+    if pad:
+        full = full[:-pad]
+    return full.reshape(orig_shape)
+
+
+def traversal_allreduce(x, *, axis_name, lane, mode="exact", op="min"):
+    """Route a traversal-state collective to the right wire format.
+
+    ``lane`` names what the array means (``dist``, ``parent``,
+    ``frontier``, or an aggregate lane like ``agg``); ``mode`` is
+    ``"exact"`` (default) or ``"int8_ef"`` for the error-feedback
+    quantized ring. Correctness-critical lanes (:data:`EXACT_LANES`) are
+    rejected for the quantized path at call time — int8 error feedback
+    converges *in sum over steps*, which is meaningless for hop counts,
+    parent slots, frontier membership, or min-fixpoint distances.
+    """
+    if mode == "int8_ef":
+        if lane in EXACT_LANES:
+            raise ValueError(
+                f"int8 error-feedback all-reduce requested for exact lane "
+                f"{lane!r}: dist/parent/frontier lanes carry integer or "
+                "min-fixpoint semantics and must use the exact ring "
+                "(mode='exact')"
+            )
+        return ring_allreduce_int8(x, axis_name=axis_name)
+    if mode != "exact":
+        raise ValueError(f"unknown all-reduce mode {mode!r}")
+    return ring_allreduce_exact(x, axis_name=axis_name, op=op)

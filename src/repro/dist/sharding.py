@@ -87,3 +87,41 @@ def fm_param_rules(mesh_axes):
         (r"(^|/)v$", (m, None)),
         (r"(^|/)w$", (m,)),
     ]
+
+
+# --------------------------------------------------------------------------
+# traversal-side rules: the sharded backend's edge-cut streams
+# --------------------------------------------------------------------------
+TRAVERSAL_AXIS = "shards"
+
+
+def traversal_mesh_axes() -> Tuple[str, ...]:
+    """The sharded traversal backend runs over a 1-D mesh: one axis, each
+    device owning one contiguous dst-block slice of the edge stream."""
+    return (TRAVERSAL_AXIS,)
+
+
+def edge_stream_specs(mesh_axes: Sequence[str] = (TRAVERSAL_AXIS,)):
+    """PartitionSpecs for the sharded traversal backend's arrays.
+
+    The edge-cut partition (``partition_edges_by_dst_block``) stacks the
+    per-shard packed streams on a leading shard dim, so the three edge
+    arrays shard on axis 0 and everything else — frontier/dist state,
+    per-row mask and weight lanes, source/target vectors — is replicated.
+    Lives here, next to the training-side rule trees, so every sharding
+    decision in the system is declared in one module.
+    """
+    s = TRAVERSAL_AXIS if TRAVERSAL_AXIS in tuple(mesh_axes) else mesh_axes[0]
+    return {
+        "shard_src": P(s, None),
+        "shard_dst": P(s, None),
+        "shard_eid": P(s, None),
+        "source_pos": P(),
+        "target_pos": P(),
+        "weight_by_row": P(),
+        "edge_mask_by_row": P(),
+        "vertex_mask": P(),
+        "frontier": P(),
+        "dist": P(),
+        "parent": P(),
+    }

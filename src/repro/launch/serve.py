@@ -20,7 +20,7 @@ def main():
     ap.add_argument("--requests", type=int, default=16)
     ap.add_argument(
         "--backend", default=None,
-        choices=["auto", "xla_coo", "pallas_frontier", "reference"],
+        choices=["auto", "xla_coo", "pallas_frontier", "reference", "sharded"],
         help="traversal backend for the graph-query serving path",
     )
     args = ap.parse_args()

@@ -95,6 +95,28 @@ class QueryLoop:
         return lanes
 '''
 
+CROSS_SHARD_DEVICE_GET = '''
+import jax
+
+def sharded_bfs(frontier, max_hops):
+    for hop in range(max_hops):
+        partial = jax.device_get(frontier)
+        frontier = combine(partial)
+    return frontier
+'''
+
+CROSS_SHARD_NP_ASARRAY = '''
+import numpy as np
+
+def sharded_sssp_dist(dist, max_iters):
+    it = 0
+    while it < max_iters:
+        host = np.asarray(dist)
+        dist = relax(host)
+        it += 1
+    return dist
+'''
+
 
 @pytest.mark.parametrize("src, rule", [
     (HOST_SYNC_NP_ASARRAY, "host-sync"),
@@ -104,13 +126,48 @@ class QueryLoop:
     (DEVICE_LOOP_DIRECT, "device-loop"),
     (DEVICE_LOOP_VIA_NAME, "device-loop"),
     (PUMP_ALLOC, "pump-alloc"),
+    (CROSS_SHARD_DEVICE_GET, "cross-shard-host-transfer"),
+    (CROSS_SHARD_NP_ASARRAY, "cross-shard-host-transfer"),
 ], ids=["np-asarray", "item", "float", "bool-jnp", "loop-direct",
-        "loop-via-name", "pump-alloc"])
+        "loop-via-name", "pump-alloc", "shard-device-get",
+        "shard-np-asarray"])
 def test_bad_snippet_flags_only_its_rule(src, rule):
-    path = "serve/loop.py" if rule == "pump-alloc" else "core/executor.py"
+    path = ("serve/loop.py" if rule == "pump-alloc"
+            else "kernels/frontier/shard.py"
+            if rule == "cross-shard-host-transfer"
+            else "core/executor.py")
     findings = lint_source(src, path)
     assert findings, f"expected a {rule} finding"
     assert _rules(findings) == {rule}
+
+
+def test_cross_shard_rule_scoping():
+    """Only registered hop functions in registered modules are checked:
+    the same host transfer outside a loop, in an unregistered function,
+    or in a host-loop driver module (ops.bfs_pallas pulls the frontier
+    per hop *by design*) stays clean."""
+    # outside any loop: staging transfers before/after the sweep are fine
+    no_loop = '''
+import jax
+
+def sharded_bfs(frontier):
+    return jax.device_get(frontier)
+'''
+    assert lint_source(no_loop, "kernels/frontier/shard.py") == []
+    # unregistered function name in the registered module
+    other_fn = CROSS_SHARD_DEVICE_GET.replace("sharded_bfs", "pack_debug")
+    assert lint_source(other_fn, "kernels/frontier/shard.py") == []
+    # the deliberate host-hop driver module is not registered
+    assert lint_source(
+        CROSS_SHARD_DEVICE_GET.replace("sharded_bfs", "bfs_pallas"),
+        "kernels/frontier/ops.py",
+    ) == []
+    # pragma suppression works like every other rule
+    sup = CROSS_SHARD_DEVICE_GET.replace(
+        "partial = jax.device_get(frontier)",
+        "partial = jax.device_get(frontier)  # lint: allow-cross-shard-host-transfer",
+    )
+    assert lint_source(sup, "kernels/frontier/shard.py") == []
 
 
 def test_structural_repr_flags_only_its_rule():

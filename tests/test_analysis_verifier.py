@@ -195,6 +195,28 @@ def test_mutation_cache_site_key_duplicate(social):
     assert "shared" in str(ei.value)
 
 
+def test_mutation_backend_unknown(social):
+    PS = P("PS")
+    q = (Query().from_paths("SocialNetwork", "PS")
+         .where(PS.length <= 2).select(end=PS.end.id)
+         .traversal_backend("warp_drive"))
+    with pytest.raises(PlanInvariantError) as ei:
+        social.plan(q)
+    assert _invariant_of(ei.value) == "backend-known"
+    assert "warp_drive" in str(ei.value)
+
+
+def test_backend_pins_accept_every_registered_backend(social):
+    from repro.core.traversal_engine import BACKENDS
+    PS = P("PS")
+    for b in BACKENDS + ("auto",):
+        q = (Query().from_paths("SocialNetwork", "PS")
+             .where(PS.length <= 2).select(end=PS.end.id)
+             .traversal_backend(b))
+        plan = social.plan(q)
+        verify_plan(plan, engine=social)  # silent
+
+
 def test_mutation_tree_shape_shared_node(social):
     q = (Query().from_table("Users", "U").from_table("Relationships", "R")
          .where(col("U.uId") == col("R.uId1")).select(r=col("R.relId")))

@@ -1,0 +1,102 @@
+"""HyperLogLog sketch tests (``repro.core.sketch``) and its
+``Table.compute_stats`` integration.
+
+The property test bounds the sketch's relative error at several multiples
+of its theoretical standard error (``1.04 / sqrt(m)`` — ~2.3% at the
+default p=12); the Table tests pin the exact/estimate threshold contract:
+small tables never pay for an estimate, large ones never pay for a sort.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from _prop import given, settings, st
+from repro.core.sketch import DEFAULT_P, HyperLogLog, approx_distinct
+from repro.core.table import Table
+
+
+# ------------------------------------------------------------- sketch core
+@given(
+    st.integers(min_value=0, max_value=2**31),
+    st.integers(min_value=50, max_value=200_000),
+)
+@settings(max_examples=15, deadline=None)
+def test_estimate_error_bounded(seed, true_n):
+    rng = np.random.default_rng(seed)
+    # draw ~3x duplicates so the sketch sees repeats, then measure truth
+    vals = rng.integers(0, true_n, true_n * 3).astype(np.int64)
+    actual = int(np.unique(vals).size)
+    est = approx_distinct(vals)
+    rse = 1.04 / np.sqrt(1 << DEFAULT_P)
+    # 5 sigma plus slack for the small-range correction crossover
+    assert abs(est - actual) <= max(5 * rse * actual, 3)
+
+
+@given(st.integers(min_value=0, max_value=2**31))
+@settings(max_examples=10, deadline=None)
+def test_merge_equals_union(seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 60_000, 50_000).astype(np.int64)
+    y = rng.integers(30_000, 90_000, 50_000).astype(np.int64)
+    a = HyperLogLog().add(x)
+    b = HyperLogLog().add(y)
+    u = HyperLogLog().add(np.concatenate([x, y]))
+    assert a.merge(b).estimate() == u.estimate()
+
+
+def test_add_is_idempotent_and_order_independent():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 10_000, 30_000).astype(np.int64)
+    a = HyperLogLog().add(vals).add(vals)  # re-adding changes nothing
+    b = HyperLogLog().add(vals[::-1].copy())
+    assert a.estimate() == b.estimate()
+
+
+def test_empty_and_tiny_inputs():
+    assert HyperLogLog().estimate() == 0
+    assert approx_distinct(np.array([], np.int64)) == 0
+    # linear-counting regime: tiny cardinalities come out near-exact
+    assert approx_distinct(np.array([42] * 1000, np.int64)) == 1
+    est = approx_distinct(np.arange(100, dtype=np.int64))
+    assert abs(est - 100) <= 2
+
+
+def test_float_columns_hash_canonically():
+    # 0.0 and -0.0 are equal values and must land in one bucket
+    a = approx_distinct(np.array([0.0, -0.0, 1.5], np.float64))
+    assert a == approx_distinct(np.array([0.0, 1.5], np.float64))
+
+
+def test_merge_rejects_mismatched_precision():
+    with pytest.raises(ValueError, match="precision"):
+        HyperLogLog(p=10).merge(HyperLogLog(p=12))
+    with pytest.raises(ValueError, match="out of the supported"):
+        HyperLogLog(p=2)
+
+
+# ------------------------------------------------- Table.compute_stats seam
+def test_small_tables_stay_exact():
+    n = 1000
+    t = Table.create("T", {"k": np.arange(n, dtype=np.int32) % 37})
+    stats = t.compute_stats()
+    assert stats.distinct["k"] == 37  # exact, below the threshold
+
+
+def test_large_tables_use_sketch(monkeypatch):
+    # force the sketch path with a low threshold instead of a huge table
+    monkeypatch.setenv("REPRO_STATS_EXACT_MAX", "100")
+    rng = np.random.default_rng(3)
+    vals = rng.integers(0, 5_000, 20_000).astype(np.int32)
+    t = Table.create("T", {"k": vals})
+    stats = t.compute_stats()
+    actual = int(np.unique(vals).size)
+    est = stats.distinct["k"]
+    assert est != 0 and abs(est - actual) / actual < 0.15
+    assert 1 <= est <= stats.row_count  # clamped to the selectivity domain
+
+
+def test_threshold_boundary(monkeypatch):
+    monkeypatch.setenv("REPRO_STATS_EXACT_MAX", "50")
+    vals = np.arange(50, dtype=np.int32)
+    assert Table.create("T", {"k": vals}).compute_stats().distinct["k"] == 50

@@ -27,6 +27,79 @@ def test_auto_policy_defaults_to_xla_on_cpu():
     assert te.resolve_backend(view, n_sources=64) == "xla_coo"
 
 
+def test_auto_policy_is_device_count_aware():
+    view = _chain_view()
+    # multi-device mesh + stream past the threshold -> sharded
+    te = TraversalEngine(n_devices=2, shard_min_slots=1)
+    assert te.device_count() == 2
+    assert te.resolve_backend(view) == "sharded"
+    # same mesh, stream below the threshold -> single-device policy
+    te = TraversalEngine(n_devices=2, shard_min_slots=1 << 30)
+    assert te.resolve_backend(view) == "xla_coo"
+    # single device never shards, no matter how large the stream
+    te = TraversalEngine(n_devices=1, shard_min_slots=1)
+    assert te.resolve_backend(view) == "xla_coo"
+    # explicit request beats the size policy in both directions
+    te = TraversalEngine(n_devices=2, shard_min_slots=1)
+    assert te.resolve_backend(view, requested="reference") == "reference"
+
+
+def test_env_override_reaches_sharded(monkeypatch):
+    view = _chain_view()
+    te = TraversalEngine()
+    monkeypatch.setenv("REPRO_TRAVERSAL_BACKEND", "sharded")
+    assert te.resolve_backend(view) == "sharded"
+
+
+def test_shard_pack_cache_and_epoch_invalidation():
+    view = _chain_view()
+    te = TraversalEngine()
+    p1 = te.get_shard_pack(view, n_shards=2)
+    assert te.stats["shard_pack_builds"] == 1
+    p2 = te.get_shard_pack(view, n_shards=2)
+    assert p2 is p1
+    assert te.stats["shard_pack_hits"] == 1
+    # a different mesh width is a different pack
+    te.get_shard_pack(view, n_shards=4)
+    assert te.stats["shard_pack_builds"] == 2
+    # epoch bump invalidates shard packs alongside dst-sort packs
+    te.register_view("G")
+    te.get_shard_pack(view, graph="G", n_shards=2)
+    assert te.stats["shard_pack_builds"] == 3
+    te.bump_epoch("G")
+    te.get_shard_pack(view, graph="G", n_shards=2)
+    assert te.stats["shard_pack_builds"] == 4
+
+
+def test_shard_partition_covers_stream_exactly():
+    from repro.kernels.frontier.shard import partition_edges_by_dst_block
+
+    rng = np.random.default_rng(5)
+    V, E, n = 300, 900, 4
+    src = rng.integers(0, V, E).astype(np.int32)
+    dst = rng.integers(0, V, E).astype(np.int32)
+    eid = np.arange(E, dtype=np.int32)
+    eid[::7] = -1  # tombstoned rows must be dropped
+    ssrc, sdst, seid = partition_edges_by_dst_block(src, dst, eid, V, n)
+    assert ssrc.shape == sdst.shape == seid.shape
+    assert ssrc.shape[0] == n
+    live = seid >= 0
+    # every live edge appears exactly once, under its original endpoints
+    got = sorted(zip(seid[live], ssrc[live], sdst[live]))
+    want = sorted(zip(eid[eid >= 0], src[eid >= 0], dst[eid >= 0]))
+    assert got == want
+    # shard dst ranges are disjoint contiguous blocks, sorted within
+    lo = -1
+    for s in range(n):
+        d = sdst[s][live[s]]
+        assert np.all(np.diff(d) >= 0)
+        if d.size:
+            assert d.min() > lo or s == 0
+            lo = d.max()
+    # pad slots are inert: endpoints out of range, eid -1
+    assert np.all(ssrc[~live] == V) and np.all(sdst[~live] == V)
+
+
 def test_env_override_and_validation(monkeypatch):
     view = _chain_view()
     te = TraversalEngine()
@@ -73,7 +146,8 @@ def _reach_query(backend=None):
     return q
 
 
-@pytest.mark.parametrize("backend", ["xla_coo", "pallas_frontier", "reference"])
+@pytest.mark.parametrize(
+    "backend", ["xla_coo", "pallas_frontier", "reference", "sharded"])
 def test_engine_reachability_same_answer_on_every_backend(social, backend):
     base = social.run(_reach_query())
     r = social.run(_reach_query(backend))
@@ -83,7 +157,8 @@ def test_engine_reachability_same_answer_on_every_backend(social, backend):
     assert social.traversal.stats[f"backend_{backend}"] >= 1
 
 
-@pytest.mark.parametrize("backend", ["xla_coo", "pallas_frontier", "reference"])
+@pytest.mark.parametrize(
+    "backend", ["xla_coo", "pallas_frontier", "reference", "sharded"])
 def test_engine_sssp_same_answer_on_every_backend(social, backend):
     q = (Query().from_table("Users", "A").from_table("Users", "B")
          .from_paths("SocialNetwork", "PS")
