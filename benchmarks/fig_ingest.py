@@ -1,0 +1,253 @@
+"""Streaming-ingest benchmark: write throughput + warm queries under writes.
+
+Measures the full streaming write path added by the ingest/compaction work
+(``repro.data.ingest`` -> ``GRFusion.insert`` -> delta buffers ->
+merge compaction) on one synthetic ER graph:
+
+  * ``fig_ingest/bulk_load`` — edges/sec from cold catalog to the FIRST
+    CORRECT query: the ingest pipeline chunks the edge payload through the
+    engine, then one BFS must match the reference oracle bit-for-bit
+    (``first_query_correct`` is a hard gate — throughput to a wrong
+    answer is not throughput);
+  * ``fig_ingest/insert_p50`` / ``insert_p99`` — per-batch insert latency
+    under sustained writes. The p99/p50 ratio is the COMPACTION STALL
+    shape: most batches are one delta append, the p99 batch pays the
+    scheduled merge;
+  * ``fig_ingest/warm_query_quiescent`` / ``warm_query_under_writes`` —
+    BFS latency on the packed backend with and without concurrent delta
+    writes. Their ratio is the stored-threshold gate quantity
+    (``REPRO_INGEST_QUERY_MAX``, default 8.0): delta-only inserts must
+    leave the packing caches warm, so a query mid-load costs at most a
+    small constant over the quiescent warm query — if inserts invalidated
+    packs, every query would pay a re-sort and the ratio would blow up;
+  * ``warm_zero_repacks`` (hard gate) — across the sustained-write phase,
+    pack builds grew by AT MOST the number of compactions: zero re-packs
+    attributable to delta inserts.
+
+``benchmarks.run`` (and the standalone ``main``) writes
+``BENCH_ingest.json`` and FAILS on the ratio gate or either hard gate.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+import jax
+import numpy as np
+
+from repro.core.engine import GRFusion
+from repro.data.ingest import IngestPipeline, IngestSchema, SourceSpec
+
+from .common import time_call
+
+QUERY_RATIO_THRESHOLD = 8.0  # stored threshold: under-writes vs quiescent
+RECORD_PATH = "BENCH_ingest.json"
+
+#: last run's record, consumed by benchmarks.run (or main) for the JSON gate
+RECORD = None
+
+
+def _payload(v, e, seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "V": {"user_id": np.arange(v, dtype=np.int32)},
+        "E": {
+            "follower": rng.integers(0, v, e).astype(np.int32),
+            "followee": rng.integers(0, v, e).astype(np.int32),
+            "weight": rng.uniform(0.1, 2.0, e).astype(np.float32),
+        },
+    }
+
+
+def _engine(v, e):
+    eng = GRFusion()
+    eng.create_table("V", {"vid": np.zeros(0, np.int32)}, capacity=v)
+    eng.create_table(
+        "E",
+        {"src": np.zeros(0, np.int32), "dst": np.zeros(0, np.int32),
+         "w": np.zeros(0, np.float32)},
+        capacity=2 * e,
+    )
+    eng.create_graph_view(
+        "G", vertexes="V", edges="E", v_id="vid", e_src="src", e_dst="dst",
+        delta_capacity=256,
+    )
+    return eng
+
+
+def run(quick: bool = False):
+    global RECORD
+    import jax.numpy as jnp
+
+    v = 1 << 11 if quick else 1 << 14
+    e = 4 * v
+    s, max_hops = 8, 8
+    rng = np.random.default_rng(1)
+    sp = jnp.asarray(rng.integers(0, v, s), jnp.int32)
+    schema = IngestSchema(
+        vertices=(SourceSpec("V", {"vid": "user_id"}),),
+        edges=(SourceSpec(
+            "E", {"src": "follower", "dst": "followee", "w": "weight"},
+        ),),
+    )
+
+    rows = []
+    # ---- phase A: cold catalog -> first correct query -------------------
+    eng = _engine(v, e)
+    te = eng.traversal
+    pipe = IngestPipeline(eng, schema, chunk_rows=256)
+    t0 = time.perf_counter()
+    report = pipe.run(_payload(v, e))
+    view = eng.views["G"].view
+    valid = eng.tables["E"].valid
+    d = te.bfs(view, sp, edge_mask_by_row=valid, max_hops=max_hops,
+               backend="xla_coo", graph="G")
+    jax.block_until_ready(d)
+    load_s = time.perf_counter() - t0
+    ref = np.asarray(
+        te.bfs(view, sp, edge_mask_by_row=valid, max_hops=max_hops,
+               backend="reference", graph="G")
+    )
+    stream_len = len(view.edge_stream(row_valid=valid)[2])
+    first_query_correct = bool(
+        (np.asarray(d) == ref).all() and stream_len == e
+    )
+    edges_per_sec = e / load_s
+    rows.append((
+        "fig_ingest/bulk_load", load_s * 1e6,
+        f"edges_per_sec={edges_per_sec:.0f} chunks={report.chunks} "
+        f"compactions={report.compactions} correct={first_query_correct}",
+    ))
+
+    # ---- phase B: sustained writes, per-batch latency -------------------
+    batches = 120 if quick else 400
+    k = 16
+    lat = []
+    for i in range(batches):
+        batch = {
+            "src": rng.integers(0, v, k).astype(np.int32),
+            "dst": rng.integers(0, v, k).astype(np.int32),
+            "w": rng.uniform(0.1, 2.0, k).astype(np.float32),
+        }
+        t0 = time.perf_counter()
+        eng.insert("E", batch)
+        lat.append(time.perf_counter() - t0)
+    lat_us = np.asarray(lat) * 1e6
+    p50 = float(np.percentile(lat_us, 50))
+    p99 = float(np.percentile(lat_us, 99))
+    rows.append(("fig_ingest/insert_p50", p50, f"batch={k}"))
+    rows.append((
+        "fig_ingest/insert_p99", p99,
+        f"stall_ratio={p99 / max(p50, 1e-9):.1f}x",
+    ))
+
+    # ---- phase C: warm queries during sustained writes ------------------
+    eng.compact("G")
+
+    def query():
+        vw = eng.views["G"].view
+        return te.bfs(vw, sp, edge_mask_by_row=eng.tables["E"].valid,
+                      max_hops=max_hops, backend="pallas_frontier",
+                      graph="G")
+
+    t_quiescent = time_call(query, agg="min")
+    builds0 = te.stats["pack_builds"]
+    compactions0 = (
+        eng.events["compactions_merge"] + eng.events["compactions_full"]
+    )
+    t_under = []
+    for i in range(24):
+        eng.insert("E", {
+            "src": rng.integers(0, v, 4).astype(np.int32),
+            "dst": rng.integers(0, v, 4).astype(np.int32),
+            "w": rng.uniform(0.1, 2.0, 4).astype(np.float32),
+        })
+        t0 = time.perf_counter()
+        jax.block_until_ready(query())
+        t_under.append(time.perf_counter() - t0)
+    t_under_us = min(t_under) * 1e6
+    query_ratio = t_under_us / max(t_quiescent, 1e-9)
+    compactions1 = (
+        eng.events["compactions_merge"] + eng.events["compactions_full"]
+    )
+    warm_zero_repacks = (
+        te.stats["pack_builds"] - builds0 <= compactions1 - compactions0
+    )
+    rows.append(("fig_ingest/warm_query_quiescent", t_quiescent, "S=8"))
+    rows.append((
+        "fig_ingest/warm_query_under_writes", t_under_us,
+        f"ratio={query_ratio:.2f}x zero_repacks={warm_zero_repacks}",
+    ))
+
+    RECORD = {
+        "edges_per_sec": round(edges_per_sec, 1),
+        "bulk_load_us": round(load_s * 1e6, 1),
+        "first_query_correct": first_query_correct,
+        "insert_p50_us": round(p50, 1),
+        "insert_p99_us": round(p99, 1),
+        "stall_p99_ratio": round(p99 / max(p50, 1e-9), 4),
+        "warm_query_quiescent_us": round(t_quiescent, 1),
+        "warm_query_under_writes_us": round(t_under_us, 1),
+        "under_writes_ratio": round(query_ratio, 4),
+        "warm_zero_repacks": bool(warm_zero_repacks),
+        "load_compactions": report.compactions,
+        "quick": quick,
+    }
+    return rows
+
+
+def publish(record, failures=0) -> int:
+    """Write BENCH_ingest.json and apply the gates. Returns the updated
+    failure count (shared by run.py and main)."""
+    threshold = float(
+        os.environ.get("REPRO_INGEST_QUERY_MAX", QUERY_RATIO_THRESHOLD)
+    )
+    record = dict(record, threshold=threshold)
+    path = os.environ.get("REPRO_BENCH_INGEST_JSON", RECORD_PATH)
+    with open(path, "w") as f:
+        json.dump(record, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(
+        f"ingest/under_writes,0.0,ratio={record['under_writes_ratio']:.2f}x "
+        f"(threshold {threshold:.2f}x) -> {path}",
+        flush=True,
+    )
+    if record["under_writes_ratio"] > threshold:
+        print(
+            f"ingest/REGRESSION,0.0,warm query under writes "
+            f"{record['under_writes_ratio']:.2f}x exceeds stored threshold "
+            f"{threshold:.2f}x",
+            flush=True,
+        )
+        failures += 1
+    if not record["warm_zero_repacks"]:
+        print(
+            "ingest/REGRESSION,0.0,delta inserts re-packed the frontier "
+            "layout instead of keeping the packing caches warm",
+            flush=True,
+        )
+        failures += 1
+    if not record["first_query_correct"]:
+        print(
+            "ingest/REGRESSION,0.0,first query after the bulk load did not "
+            "match the reference oracle",
+            flush=True,
+        )
+        failures += 1
+    return failures
+
+
+def main() -> None:
+    quick = os.environ.get("REPRO_BENCH_QUICK", "0") == "1"
+    print("name,us_per_call,derived")
+    rows = run(quick=quick)
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+    if publish(RECORD):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,14 @@ traversal backend vs ``xla_coo`` (gated by ``REPRO_SHARDED_OVERHEAD_MAX``
 scaling curve at whatever device counts are visible, and
 ``warm_zero_repacks`` (warm queries hit the per-(epoch, shard) pack and
 trace caches exclusively).
+
+The fig_ingest module publishes the **streaming-ingest record**
+(``BENCH_ingest.json``): bulk-load edges/sec to the first correct query,
+per-batch insert p50/p99 (the p99 is the compaction stall), and warm-query
+latency during sustained writes — gated by ``REPRO_INGEST_QUERY_MAX``
+(under-writes / quiescent warm-query ratio; delta inserts must leave the
+packing caches warm) plus the ``warm_zero_repacks`` and
+``first_query_correct`` hard gates.
 """
 from __future__ import annotations
 
@@ -79,6 +87,7 @@ def main() -> None:
         fig11_sssp,
         fig12_pathjoin,
         fig13_serving,
+        fig_ingest,
         fig_sharded,
         table1_construction,
     )
@@ -91,6 +100,7 @@ def main() -> None:
         ("fig12", fig12_pathjoin),
         ("fig13", fig13_serving),
         ("fig_sharded", fig_sharded),
+        ("fig_ingest", fig_ingest),
         ("table1", table1_construction),
     ]
     print("name,us_per_call,derived")
@@ -160,6 +170,8 @@ def main() -> None:
             failures += 1
     if getattr(fig_sharded, "RECORD", None) is not None:
         failures = fig_sharded.publish(fig_sharded.RECORD, failures)
+    if getattr(fig_ingest, "RECORD", None) is not None:
+        failures = fig_ingest.publish(fig_ingest.RECORD, failures)
 
     if failures:
         sys.exit(1)

@@ -23,6 +23,13 @@
 #                 (REPRO_PLAN_OVERHEAD_MAX, 1.3; REPRO_SERVING_P99_MAX,
 #                 3.0; REPRO_SHARDED_OVERHEAD_MAX, 2.0) or a warm steady
 #                 state stops running purely from caches
+#   ingest        write-heavy path: the mutating differential family
+#                 (tests/differential/test_write_heavy.py — seeded
+#                 insert/tombstone/query/compact interleavings, four
+#                 backends + a mutation-log oracle) plus the streaming
+#                 ingest benchmark (writes BENCH_ingest.json; gated on
+#                 warm-query-under-writes ratio, zero re-packs from
+#                 delta inserts, and first-query correctness)
 #   analyze       static analysis — hot-path lint over src/repro against
 #                 scripts/lint_baseline.json (python -m repro.analysis);
 #                 fails on any fresh host-sync / device-loop /
@@ -38,7 +45,7 @@ cd "$(dirname "$0")/.."
 
 STAGES=("$@")
 if [ ${#STAGES[@]} -eq 0 ]; then
-  STAGES=(collect tier1 differential sharded analyze bench docs)
+  STAGES=(collect tier1 differential sharded ingest analyze bench docs)
 fi
 
 declare -a TIMINGS=()
@@ -64,6 +71,17 @@ bench_stage() {
   cat BENCH_serving.json
   echo "-- sharded record --"
   cat BENCH_sharded.json
+  echo "-- ingest record --"
+  cat BENCH_ingest.json
+}
+
+ingest_stage() {
+  # the write-heavy differential family on its own (it also rides the
+  # differential and sharded sweeps), then the streaming-ingest benchmark
+  # with its stored-threshold + hard gates
+  python -m pytest -q tests/differential/test_write_heavy.py
+  env REPRO_BENCH_QUICK=1 PYTHONPATH=src python -m benchmarks.fig_ingest
+  cat BENCH_ingest.json
 }
 
 sharded_stage() {
@@ -100,6 +118,9 @@ for stage in ${STAGES[@]+"${STAGES[@]}"}; do
       ;;
     sharded)
       run_stage sharded sharded_stage
+      ;;
+    ingest)
+      run_stage ingest ingest_stage
       ;;
     analyze)
       run_stage analyze env PYTHONPATH=src python -m repro.analysis

@@ -45,6 +45,7 @@ from repro.core import expr as X
 __all__ = [
     "EpochRegistry", "CompiledPredicate", "PlanRuntime",
     "query_shape_key", "PreparedPlanCache",
+    "table_key", "pack_key", "TABLE_PREFIX", "PACK_PREFIX",
 ]
 
 
@@ -52,10 +53,13 @@ class EpochRegistry:
     """Monotonic epoch counters for catalog objects.
 
     Keys are plain strings: graph-view names for topology epochs (bumped on
-    compaction / delta insert — the packing-cache key), ``table:<name>`` for
-    relational table state (bumped on insert / tombstone / update — the
-    predicate-mask key). Attribute reads never bump anything: the paper's
-    §3.2 decoupling holds at the cache layer too.
+    every topology change, delta inserts included — the query/value-cache
+    key), ``pack:<name>`` for a view's MAIN arrays (bumped only on
+    compaction / rebuild — the packing-cache key, so delta-only inserts
+    keep packs warm), ``table:<name>`` for relational table state (bumped
+    on insert / tombstone / update — the predicate-mask key). Attribute
+    reads never bump anything: the paper's §3.2 decoupling holds at the
+    cache layer too.
     """
 
     def __init__(self):
@@ -76,10 +80,24 @@ class EpochRegistry:
 
 
 TABLE_PREFIX = "table:"
+PACK_PREFIX = "pack:"
 
 
 def table_key(name: str) -> str:
     return TABLE_PREFIX + name
+
+
+def pack_key(name: str) -> str:
+    """Structural (packing) epoch of a graph view.
+
+    The plain graph-name epoch bumps on EVERY topology change, delta
+    inserts included — it keys query/value caches, which must see new
+    edges immediately. This key bumps only when the MAIN arrays change
+    (compaction, rebuild): packs and shard packs are built from main and
+    consult the delta stream at query time, so delta-only inserts leave
+    them warm.
+    """
+    return PACK_PREFIX + name
 
 
 def structural_key(e: X.Expr):

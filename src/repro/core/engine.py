@@ -6,11 +6,22 @@ and maintains graph views under online updates (§3.3):
 
   * attribute updates touch only the columnar tables (decoupling, §3.2),
   * edge inserts write the edge table AND the view's delta buffer in the
-    same call (the paper's transactional view maintenance),
+    same call (the paper's transactional view maintenance); delta-only
+    inserts bump just the plain topology epoch, so packing caches and
+    shard packs stay warm (every traversal backend consults the delta
+    stream at query time),
   * deletes are tombstones — traversals see them through the eid/position
     mask gathers with zero structural work,
-  * vertex inserts or delta overflow trigger ``compact_view`` (one
-    vectorized rebuild pass, like the paper's single-pass construction).
+  * compaction folds delta + tombstones into main: the scheduled path is
+    the GRAPHITE-style incremental merge (``compact`` /
+    ``merge_compact_view``, O(delta log delta + V + E)), taken when the
+    delta buffer reaches ``compact_threshold`` of capacity or an insert
+    batch would not fit — never silently dropping edges; the full
+    ``compact_view`` rebuild is reserved for structural invalidations
+    (vertex-set changes, id updates, tombstoned-row reuse). Both paths
+    produce bit-identical views, and either bumps the packing epoch
+    exactly once. ``events`` counts every transition for tests and the
+    ingest benchmark gate.
 """
 from __future__ import annotations
 
@@ -29,7 +40,7 @@ from repro.core.compiled import (
     EpochRegistry, PreparedPlanCache, query_shape_key, table_key,
 )
 from repro.core.executor import QueryResult  # re-export (public result type)
-from repro.core.graphview import GraphView, build_graph_view
+from repro.core.graphview import GraphView, build_graph_view, merge_compact_view
 from repro.core.logical import DEFAULT_MAX_LEN
 from repro.core.table import Table, TableStats
 from repro.core.traversal_engine import TraversalEngine
@@ -124,6 +135,7 @@ class GRFusion:
         result_capacity: int = 1 << 14,
         bfs_max_hops: int = 32,
         traversal_backend: str = "auto",
+        compact_threshold: float = 0.75,
     ):
         self.tables: Dict[str, Table] = {}
         self.views: Dict[str, ViewBundle] = {}
@@ -133,6 +145,16 @@ class GRFusion:
         self.max_work_capacity = max_work_capacity
         self.result_capacity = result_capacity
         self.bfs_max_hops = bfs_max_hops
+        # compaction policy: fold the delta into main once it fills past
+        # this fraction of capacity (plus whenever an incoming batch would
+        # not fit). Scheduled compaction keeps the write path from ever
+        # dropping edges AND bounds re-pack churn to once per compaction.
+        self.compact_threshold = compact_threshold
+        # ingest/compaction lifecycle counters (tests + BENCH_ingest gate):
+        # delta_inserts, compactions_merge, compactions_full,
+        # threshold_compactions, delta_overflow_compactions,
+        # stats_incremental
+        self.events = collections.Counter()
         # one epoch registry answers every "did this change?" question:
         # graph names key topology epochs (packing cache), table:<name>
         # keys relational state (compiled predicate-mask cache). Shared
@@ -179,7 +201,9 @@ class GRFusion:
         return self.epochs.get(table_key(name))
 
     def graph_epoch(self, name: str) -> int:
-        """Topology change counter for one graph view (packing-cache key)."""
+        """Topology change counter for one graph view — bumps on every
+        change, delta inserts included (query/value-cache key; the
+        coarser packing epoch lives under ``pack:<name>``)."""
         return self.epochs.get(name)
 
     def table_stats(self, name: str) -> TableStats:
@@ -269,7 +293,19 @@ class GRFusion:
 
     # ------------------------------------------------------------- updates
     def insert(self, table_name: str, rows: Mapping[str, np.ndarray]):
-        """Insert rows; graph views over this source update transactionally."""
+        """Insert rows; graph views over this source update transactionally.
+
+        Edge inserts take the streaming path: rows land in each view's
+        delta buffer under ``bump_delta_epoch`` (packs stay warm). When
+        the batch would not fit the remaining delta capacity, the engine
+        compacts FIRST-ish — the batch is already in the edge table, so
+        one merge compaction folds buffer + batch into main together and
+        no edge is ever dropped. Two hazards force the full rebuild
+        instead: a vertex-table insert (id index changes) and tombstoned-
+        row reuse (a stale main slot with the recycled eid would come
+        back to life; ``Table.used`` fresh-first allocation makes this
+        rare, and the ``prev_used`` check below makes it safe).
+        """
         t = self.tables[table_name]
         enc_rows = {}
         for k, v in rows.items():
@@ -278,32 +314,83 @@ class GRFusion:
                 enc_rows[k], _ = self._encode_column(table_name, k, v)
             else:
                 enc_rows[k] = v
+        prev_used = t.used
+        prev_epoch = self.table_epoch(table_name)
         t2, slots, overflow = t.insert(enc_rows)
         if bool(overflow):
             raise RuntimeError(f"table {table_name} capacity exceeded")
         self.tables[table_name] = t2
         self.epochs.bump(table_key(table_name))
+        self._update_stats_incremental(table_name, prev_epoch, enc_rows)
+        reused = bool(
+            jnp.any(
+                (slots >= 0)
+                & jnp.take(prev_used, jnp.clip(slots, 0, t.capacity - 1))
+            )
+        )
 
         for vname, vb in self.views.items():
             if vb.edge_table == table_name:
+                if reused:
+                    # resurrection hazard: the recycled rows' stale main
+                    # slots must be rewritten, which only a rebuild does
+                    self.compact_view(vname)
+                    continue
                 src_ids = jnp.asarray(enc_rows[vb.e_src], jnp.int32)
                 dst_ids = jnp.asarray(enc_rows[vb.e_dst], jnp.int32)
                 sp, sf = vb.view.id_index.lookup(src_ids)
                 dp, df = vb.view.id_index.lookup(dst_ids)
                 ok = sf & df & (slots >= 0)
-                view2, ovf = vb.view.insert_delta(sp, dp, slots, ok)
+                # capacity precheck: insert_delta placement is positional
+                # (entry j consumes the j-th free slot, valid or not), so
+                # the batch fits iff its LENGTH fits — and the undirected
+                # reverse pass starts after n_ok slots were consumed
+                k_len = int(slots.shape[0])
+                n_ok = int(jnp.sum(ok.astype(jnp.int32)))
+                free0 = vb.view.delta_capacity - int(
+                    jnp.sum(vb.view.delta_valid.astype(jnp.int32))
+                )
+                need = k_len if vb.directed else k_len + n_ok
+                if need > free0:
+                    # batch is already in the edge table: one merge folds
+                    # the current buffer AND this batch into main
+                    self.events["delta_overflow_compactions"] += 1
+                    self.compact(vname)
+                    continue
+                view2, _ = vb.view.insert_delta(sp, dp, slots, ok)
                 vb.view = view2
-                self.traversal.bump_epoch(vname)  # delta edges change topology
                 if vb.directed is False:
-                    view3, ovf2 = vb.view.insert_delta(dp, sp, slots, ok)
+                    view3, _ = vb.view.insert_delta(dp, sp, slots, ok)
                     vb.view = view3
-                    ovf = ovf | ovf2
-                if bool(ovf):
-                    self.compact_view(vname)
+                self.traversal.bump_delta_epoch(vname)
+                self.events["delta_inserts"] += 1
+                fill = int(jnp.sum(vb.view.delta_valid.astype(jnp.int32)))
+                if fill >= self.compact_threshold * vb.view.delta_capacity:
+                    self.events["threshold_compactions"] += 1
+                    self.compact(vname)
             if vb.vertex_table == table_name:
                 # vertex inserts change the id index: compact (rebuild) now
                 self.compact_view(vname)
         return np.asarray(slots)
+
+    def _update_stats_incremental(self, table_name, prev_epoch, enc_rows):
+        """Fold a pure-insert batch into cached sketch-bearing stats.
+
+        Only fires when the cache is exactly one epoch behind (the batch
+        is the only change) and the previous stats carry sketches; the
+        register max-merge then lands on the same registers a full rescan
+        would (see ``TableStats``), so the cache skips the O(rows) pass.
+        """
+        ent = self._table_stats.get(table_name)
+        if ent is None or ent[0] != prev_epoch or ent[1].sketches is None:
+            return
+        if not all(c in enc_rows for c in ent[1].sketches):
+            return
+        s2 = self.tables[table_name].compute_stats(
+            prev=ent[1], appended=enc_rows
+        )
+        self._table_stats[table_name] = (self.table_epoch(table_name), s2)
+        self.events["stats_incremental"] += 1
 
     def delete_where(self, table_name: str, predicate: X.Expr):
         """Tombstone deletes; views see them via validity-mask gathers."""
@@ -336,7 +423,33 @@ class GRFusion:
             if table_name == vb.edge_table and col in (vb.e_src, vb.e_dst):
                 self.compact_view(vname)
 
+    def compact(self, name: str, *, full: bool = False):
+        """Fold the delta buffer and tombstones into the view's main arrays.
+
+        The default path is the GRAPHITE-style incremental merge
+        (``merge_compact_view``): main stays sorted, only new rows sort,
+        tombstoned slots drop in the same pass — bit-identical to the
+        full rebuild (the property suite asserts it) at
+        O(delta log delta + V + E) instead of O(E log E). ``full=True``
+        forces the rebuild (``compact_view``). Either path bumps the
+        packing epoch exactly once.
+        """
+        if full:
+            return self.compact_view(name)
+        vb = self.views[name]
+        vb.view = merge_compact_view(
+            vb.view,
+            self.tables[vb.vertex_table],
+            self.tables[vb.edge_table],
+            v_id=vb.v_id, e_src=vb.e_src, e_dst=vb.e_dst,
+            directed=vb.directed,
+        )
+        self.events["compactions_merge"] += 1
+        self.traversal.bump_epoch(name)
+
     def compact_view(self, name: str):
+        """Full rebuild compaction (vertex-set changes, id updates, row
+        reuse — every case the incremental merge's preconditions exclude)."""
         vb = self.views[name]
         vb.view = build_graph_view(
             name,
@@ -345,6 +458,7 @@ class GRFusion:
             v_id=vb.v_id, e_src=vb.e_src, e_dst=vb.e_dst,
             directed=vb.directed, delta_capacity=vb.delta_capacity,
         )
+        self.events["compactions_full"] += 1
         self.traversal.bump_epoch(name)
 
     # ---------------------------------------------- interpreted mask path

@@ -649,7 +649,7 @@ class PathScanExec(ExecNode):
         )
         ctx.explain.append(f"enum work capacity: {wcap}")
         if bool(jnp.any(view.delta_valid)):
-            eng.compact_view(spec.graph)
+            eng.compact(spec.graph)
             vb = eng.views[spec.graph]
             view = vb.view
         et = eng.tables[vb.edge_table]

@@ -20,10 +20,23 @@ these arrays; edge predicates/deletions are masks **by edge-table row**
 gathered through ``*_eid`` at traversal time.
 
 Online updates (paper §3.3): inserts go to a bounded delta COO buffer that
-frontier ops consult alongside the main arrays; ``build_graph_view`` is the
-compaction (a single vectorized pass, like the paper's single-pass
-construction). Deletes are row tombstones in the edge table, visible through
-the eid gather with zero structural work.
+frontier ops consult alongside the main arrays. Compaction folds the delta
+into main and has two physical paths producing bit-identical views:
+
+  * ``build_graph_view`` — the full rebuild: one stable ``argsort`` over
+    all slots (O(E log E)). Required whenever the vertex side changed
+    (id-index rebuild) or a tombstoned edge row was resurrected.
+  * ``merge_compact_view`` — the incremental merge (GRAPHITE's delta/main
+    consolidation): the main CSR/CSC arrays are already sorted, so only
+    the new rows are sorted (O(delta log delta)) and spliced in with one
+    linear pass that simultaneously drops tombstoned entries
+    (O(V + E) scatters). The ``out_slot``/``in_slot`` arrays record each
+    entry's stable-sort position so the merge can reproduce the rebuild's
+    exact tie order without re-sorting anything.
+
+Deletes are row tombstones in the edge table, visible through the eid
+gather with zero structural work; compaction reconciles them (removes the
+dead slots) on either path.
 
 Undirected graphs are symmetrized (each edge appears in both directions with
 the same eid), matching the paper's UNDIRECTED views.
@@ -31,6 +44,7 @@ the same eid), matching the paper's UNDIRECTED views.
 from __future__ import annotations
 
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.index import IdIndex
 from repro.core.struct import pytree, field, static_field
@@ -56,10 +70,12 @@ class GraphView:
     out_offsets: jnp.ndarray = field()  # int32 [V+1]
     out_dst: jnp.ndarray = field()
     out_eid: jnp.ndarray = field()
+    out_slot: jnp.ndarray = field()  # int32 [E2] COO slot of each CSR entry
     # CSC (in-edges) --------------------------------------------------------
     in_offsets: jnp.ndarray = field()
     in_src: jnp.ndarray = field()
     in_eid: jnp.ndarray = field()
+    in_slot: jnp.ndarray = field()  # int32 [E2] COO slot of each CSC entry
     # delta buffer (online inserts, consulted by frontier ops) --------------
     delta_src: jnp.ndarray = field()  # int32 [delta_cap]
     delta_dst: jnp.ndarray = field()
@@ -86,15 +102,31 @@ class GraphView:
 
     # ------------------------------------------------------------- updates
     def insert_delta(self, src_pos, dst_pos, eids, valid):
-        """Append edges (vertex positions + edge rows) into the delta buffer."""
+        """Append edges (vertex positions + edge rows) into the delta buffer.
+
+        Returns ``(new_view, dropped)`` where ``dropped`` is the number of
+        *valid* incoming entries that did not fit (entry j consumes the
+        j-th free placement slot whether or not it is valid, so a valid
+        entry drops exactly when its index lands past the free count).
+        Callers must not ignore a nonzero ``dropped``: either surface it
+        or compact first — the engine path (``GRFusion.insert``) checks
+        capacity up front and compacts instead of ever dropping.
+        """
         free = ~self.delta_valid
         k = src_pos.shape[0]
+        if k == 0:  # empty batch: nothing placed, nothing dropped
+            return self, jnp.asarray(0, jnp.int32)
         rank = jnp.cumsum(free.astype(jnp.int32)) - 1
         take = free & (rank < k)
         ti = jnp.clip(rank, 0, max(k - 1, 0))
         pick = lambda buf, new: jnp.where(take, jnp.take(new, ti), buf)
         newv = jnp.where(take, jnp.take(valid, ti), self.delta_valid & take)
-        overflow = jnp.sum(free.astype(jnp.int32)) < jnp.sum(valid.astype(jnp.int32))
+        n_free = jnp.sum(free.astype(jnp.int32))
+        dropped = jnp.sum(
+            ((jnp.arange(k, dtype=jnp.int32) >= n_free) & valid).astype(
+                jnp.int32
+            )
+        )
         return (
             self.replace(
                 delta_src=pick(self.delta_src, src_pos),
@@ -102,7 +134,7 @@ class GraphView:
                 delta_eid=pick(self.delta_eid, eids),
                 delta_valid=self.delta_valid | (take & newv),
             ),
-            overflow,
+            dropped,
         )
 
     def all_coo(self):
@@ -111,6 +143,27 @@ class GraphView:
         dst = jnp.concatenate([self.coo_dst, jnp.where(self.delta_valid, self.delta_dst, self.n_vertices)])
         eid = jnp.concatenate([self.coo_eid, jnp.where(self.delta_valid, self.delta_eid, -1)])
         return src, dst, eid
+
+    def edge_stream(self, row_valid=None):
+        """Canonical live edge multiset as sorted numpy ``(src, dst, eid)``.
+
+        The physical encoding (main vs delta, slot order) is deliberately
+        erased: entries are lexicographically sorted by (src, dst, eid), so
+        the stream is invariant across a compaction boundary — the property
+        suite asserts ``edge_stream`` before a compact equals the one
+        after. Pass the edge table's validity as ``row_valid`` to drop
+        tombstoned rows (the view itself keeps them mask-visible in main
+        until compaction reconciles them).
+        """
+        V = self.n_vertices
+        src, dst, eid = (np.asarray(a) for a in self.all_coo())
+        ok = (eid >= 0) & (src < V) & (dst < V)
+        if row_valid is not None:
+            rv = np.asarray(row_valid)
+            ok = ok & rv[np.clip(eid, 0, rv.shape[0] - 1)]
+        src, dst, eid = src[ok], dst[ok], eid[ok]
+        order = np.lexsort((eid, dst, src))
+        return src[order], dst[order], eid[order]
 
     def gather_edge_mask(self, mask_by_row: jnp.ndarray, eid: jnp.ndarray) -> jnp.ndarray:
         """Mask-by-edge-table-row -> mask aligned with an eid array."""
@@ -163,6 +216,9 @@ def build_graph_view(
         eid = jnp.concatenate([jnp.where(e_ok, rows, -1)] * 2)
 
     # CSR: sort by src (invalid slots have src == V and sort to the end).
+    # The stable argsort order IS each entry's slot; storing it lets
+    # merge_compact_view splice new entries at the rebuild's exact tie
+    # positions without ever re-sorting main.
     order_out = jnp.argsort(src)  # stable sort by src
     out_src_sorted = jnp.take(src, order_out)
     out_dst = jnp.take(dst, order_out)
@@ -198,9 +254,167 @@ def build_graph_view(
         out_offsets=out_offsets,
         out_dst=out_dst.astype(jnp.int32),
         out_eid=out_eid.astype(jnp.int32),
+        out_slot=order_out.astype(jnp.int32),
         in_offsets=in_offsets,
         in_src=in_src.astype(jnp.int32),
         in_eid=in_eid.astype(jnp.int32),
+        in_slot=order_in.astype(jnp.int32),
+        delta_src=jnp.full((dc,), V, jnp.int32),
+        delta_dst=jnp.full((dc,), V, jnp.int32),
+        delta_eid=jnp.full((dc,), -1, jnp.int32),
+        delta_valid=jnp.zeros((dc,), jnp.bool_),
+        avg_fan_out=avg_fan_out,
+    )
+
+
+def merge_compact_view(
+    view: GraphView,
+    vertex_table: Table,
+    edge_table: Table,
+    *,
+    v_id: str,
+    e_src: str,
+    e_dst: str,
+    directed: bool = True,
+) -> GraphView:
+    """Incremental compaction: fold inserts/tombstones into sorted main.
+
+    Produces a view bit-identical to ``build_graph_view`` over the same
+    tables, but does O(delta log delta + V + E) host work instead of a full
+    O(E log E) re-argsort: the main CSR/CSC arrays are already sorted by
+    (src, slot) / (dst, slot), so new entries are sorted alone and spliced
+    in with a two-sorted-list ``searchsorted`` merge, while tombstoned
+    entries drop out in the same pass. ``out_slot``/``in_slot`` carry each
+    main entry's COO slot, which is exactly the rebuild's stable-argsort
+    tiebreaker — that is what makes the tie order (including a self-loop's
+    two identical undirected keys) reproducible without re-sorting.
+
+    Preconditions (the engine enforces both, falling back to the full
+    rebuild otherwise): the vertex table is unchanged since ``view``'s main
+    arrays were built, and no tombstoned edge row has been resurrected by
+    an insert (``Table.used`` fresh-first allocation makes reuse rare).
+    """
+    V = view.n_vertices
+    Ecap = edge_table.capacity
+    n_slots = view.n_slots
+
+    coo_src = np.asarray(view.coo_src)
+    coo_dst = np.asarray(view.coo_dst)
+    coo_eid = np.asarray(view.coo_eid)
+    valid = np.asarray(edge_table.valid)
+
+    # Classify edge-table rows against main (slot r <-> row r; undirected
+    # views also mirror row r at slot Ecap + r with the same eid).
+    in_main = coo_eid[:Ecap] >= 0
+    new_rows = np.flatnonzero(valid & ~in_main)
+    dead_rows = np.flatnonzero(in_main & ~valid)
+
+    # Resolve new endpoints through the (unchanged) id index, mirroring
+    # IdIndex.lookup on the host.
+    sorted_ids = np.asarray(view.id_index.sorted_ids)
+    row_of = np.asarray(view.id_index.order)
+
+    def _lookup(ids):
+        q = np.asarray(ids).astype(np.int32)
+        pos = np.clip(np.searchsorted(sorted_ids, q), 0, sorted_ids.shape[0] - 1)
+        found = sorted_ids[pos] == q
+        return row_of[pos], found
+
+    sp, s_found = _lookup(np.asarray(edge_table.col(e_src))[new_rows])
+    dp, d_found = _lookup(np.asarray(edge_table.col(e_dst))[new_rows])
+    ok = s_found & d_found
+    new_ok = new_rows[ok].astype(np.int32)
+    sp, dp = sp[ok].astype(np.int32), dp[ok].astype(np.int32)
+
+    # --- COO: scatter deads out and news in (both halves if undirected).
+    coo_src_n, coo_dst_n, coo_eid_n = coo_src.copy(), coo_dst.copy(), coo_eid.copy()
+    for half in range(1 if directed else 2):
+        off = half * Ecap
+        coo_src_n[dead_rows + off] = V
+        coo_dst_n[dead_rows + off] = V
+        coo_eid_n[dead_rows + off] = -1
+        coo_src_n[new_ok + off] = sp if half == 0 else dp
+        coo_dst_n[new_ok + off] = dp if half == 0 else sp
+        coo_eid_n[new_ok + off] = new_ok
+
+    # Delta entry list: (slot, sort key vertex) per new entry per half.
+    if directed:
+        d_slot = new_ok
+        d_src, d_dst = sp, dp
+    else:
+        d_slot = np.concatenate([new_ok, new_ok + Ecap])
+        d_src = np.concatenate([sp, dp])
+        d_dst = np.concatenate([dp, sp])
+    d_slot = d_slot.astype(np.int32)
+
+    # Trailing invalid region of a stable argsort = all src==V slots in
+    # ascending slot order.
+    inv_slot = np.flatnonzero(coo_eid_n < 0).astype(np.int32)
+
+    K = np.int64(n_slots + 1)
+
+    def _merge(key_vtx, old_slot, old_eid, d_key_vtx):
+        """Splice sorted delta entries into the sorted kept-main entries.
+
+        ``key_vtx`` is the per-slot sort vertex (coo src for CSR, dst for
+        CSC); composite key = vertex * K + slot, which is the rebuild's
+        stable (vertex, slot) order. Returns (slot, eid, offsets) arrays.
+        """
+        old_slot = np.asarray(old_slot)
+        keep = (np.asarray(old_eid) >= 0) & (coo_eid_n[old_slot] >= 0)
+        k_slot = old_slot[keep]
+        k_key = key_vtx[k_slot].astype(np.int64) * K + k_slot
+
+        d_order = np.argsort(d_key_vtx.astype(np.int64) * K + d_slot, kind="stable")
+        ds, dk = d_slot[d_order], (d_key_vtx.astype(np.int64) * K + d_slot)[d_order]
+
+        nk, nd = k_slot.shape[0], ds.shape[0]
+        pos_k = np.arange(nk, dtype=np.int64) + np.searchsorted(dk, k_key)
+        pos_d = np.searchsorted(k_key, dk) + np.arange(nd, dtype=np.int64)
+
+        slot = np.empty(n_slots, np.int32)
+        slot[pos_k] = k_slot
+        slot[pos_d] = ds
+        slot[nk + nd :] = inv_slot
+
+        eid = coo_eid_n[slot]
+        vtx_sorted = key_vtx[slot]
+        offsets = np.searchsorted(vtx_sorted, np.arange(V + 1, dtype=np.int64))
+        return slot, eid, offsets.astype(np.int32)
+
+    out_slot, out_eid, out_offsets = _merge(
+        coo_src_n, view.out_slot, view.out_eid, d_src
+    )
+    in_slot, in_eid, in_offsets = _merge(
+        coo_dst_n, view.in_slot, view.in_eid, d_dst
+    )
+    out_dst = coo_dst_n[out_slot]
+    in_src = coo_src_n[in_slot]
+
+    # Stats: same jnp expressions as the rebuild for bitwise equality.
+    out_offsets = jnp.asarray(out_offsets)
+    in_offsets = jnp.asarray(in_offsets)
+    fan_out = (out_offsets[1:] - out_offsets[:-1]).astype(jnp.int32)
+    fan_in = (in_offsets[1:] - in_offsets[:-1]).astype(jnp.int32)
+    n_live = jnp.maximum(jnp.sum(vertex_table.valid.astype(jnp.int32)), 1)
+    avg_fan_out = jnp.sum(fan_out.astype(jnp.float32)) / n_live.astype(jnp.float32)
+
+    dc = view.delta_capacity
+    return view.replace(
+        v_valid=vertex_table.valid,
+        fan_out=fan_out,
+        fan_in=fan_in,
+        coo_src=jnp.asarray(coo_src_n),
+        coo_dst=jnp.asarray(coo_dst_n),
+        coo_eid=jnp.asarray(coo_eid_n),
+        out_offsets=out_offsets,
+        out_dst=jnp.asarray(out_dst),
+        out_eid=jnp.asarray(out_eid),
+        out_slot=jnp.asarray(out_slot),
+        in_offsets=in_offsets,
+        in_src=jnp.asarray(in_src),
+        in_eid=jnp.asarray(in_eid),
+        in_slot=jnp.asarray(in_slot),
         delta_src=jnp.full((dc,), V, jnp.int32),
         delta_dst=jnp.full((dc,), V, jnp.int32),
         delta_eid=jnp.full((dc,), -1, jnp.int32),

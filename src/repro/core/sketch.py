@@ -95,6 +95,12 @@ class HyperLogLog:
         np.maximum.at(self.registers, idx, rank)
         return self
 
+    def copy(self) -> "HyperLogLog":
+        """Independent register copy (incremental stats mutate the clone)."""
+        c = HyperLogLog(self.p)
+        c.registers = self.registers.copy()
+        return c
+
     def merge(self, other: "HyperLogLog") -> "HyperLogLog":
         if other.p != self.p:
             raise ValueError("cannot merge sketches with different precision")

@@ -15,8 +15,8 @@ mask, so all programs compile once per capacity.
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass
-from typing import Dict, Mapping
+from dataclasses import dataclass, field as dfield
+from typing import Any, Dict, Mapping, Optional
 
 import jax.numpy as jnp
 import numpy as np
@@ -33,12 +33,22 @@ class TableStats:
     estimates (``core/sketch.py``, ~2.3% relative error) above it; the
     optimizer's cost-based join-ordering rule reads them as equi-join
     selectivity denominators, where that error is immaterial.
+
+    On the sketch path the stats also carry their ``sketches`` (one
+    HyperLogLog per column). Register max-merge is batch-order
+    independent, so ``compute_stats(prev=..., appended=...)`` can fold an
+    insert batch into the previous epoch's sketches and land on the exact
+    registers a full rebuild over the same live rows would produce — the
+    incremental path is bit-identical, not merely within error bounds.
+    Deletes cannot decrement a register; engines only take the
+    incremental path on pure-insert epoch transitions.
     """
 
     name: str
     capacity: int
     row_count: int
     distinct: Dict[str, int]
+    sketches: Optional[Dict[str, Any]] = dfield(default=None, repr=False)
 
     def distinct_of(self, column: str, default: int = 10) -> int:
         return max(self.distinct.get(column, default), 1)
@@ -67,6 +77,15 @@ class Table:
     colnames: tuple = static_field()
     columns: Dict[str, jnp.ndarray] = field()
     valid: jnp.ndarray = field()  # bool [capacity]
+    # Rows that have EVER held a tuple (never cleared by delete). Inserts
+    # prefer never-used slots, so row indices stay fresh under
+    # append-mostly traffic and graph views can fold delta inserts into
+    # their sorted main arrays by merge; only when fresh slots run out does
+    # an insert resurrect a tombstoned row (the engine detects that via
+    # this bitmap and routes affected views through a full rebuild —
+    # stale topology slots still referencing the reused row would
+    # otherwise come back to life).
+    used: jnp.ndarray = field()  # bool [capacity]
 
     # ------------------------------------------------------------------ meta
     @property
@@ -91,7 +110,10 @@ class Table:
         capacity = int(capacity if capacity is not None else max(n, 1))
         cols = {k: _pad_to(jnp.asarray(v), capacity) for k, v in data.items()}
         valid = _pad_to(jnp.ones((n,), jnp.bool_), capacity)
-        return Table(name=name, colnames=tuple(sorted(cols)), columns=cols, valid=valid)
+        return Table(
+            name=name, colnames=tuple(sorted(cols)), columns=cols,
+            valid=valid, used=valid,
+        )
 
     @staticmethod
     def empty(name: str, schema: Mapping[str, jnp.dtype], capacity: int) -> "Table":
@@ -101,6 +123,7 @@ class Table:
             colnames=tuple(sorted(cols)),
             columns=cols,
             valid=jnp.zeros((capacity,), jnp.bool_),
+            used=jnp.zeros((capacity,), jnp.bool_),
         )
 
     # ----------------------------------------------------------------- access
@@ -116,15 +139,30 @@ class Table:
 
     # ---------------------------------------------------------------- mutate
     def insert(self, rows: Mapping[str, jnp.ndarray]):
-        """Insert rows into the first free slots.
+        """Insert rows into free slots, never-used slots first.
 
         Returns (new_table, slot_indices [k], overflow_flag). Row j lands at
         slot_indices[j]; if there are fewer than k free slots the extra rows
-        are dropped and overflow is True.
+        are dropped and overflow is True. Fresh (never-used) slots are
+        consumed in slot order before tombstoned ones, so append-mostly
+        workloads keep taking fresh row indices and graph views can absorb
+        the inserts through their delta buffers instead of rebuilding
+        (see ``used``).
         """
         k = next(iter(rows.values())).shape[0]
+        if k == 0:
+            return self, jnp.zeros((0,), jnp.int32), jnp.asarray(False)
         free = ~self.valid
-        free_rank = jnp.cumsum(free.astype(jnp.int32)) - 1  # rank among free slots
+        fresh = free & ~self.used
+        stale = free & self.used
+        n_fresh = jnp.sum(fresh.astype(jnp.int32))
+        # rank among free slots: all fresh slots (slot order) before all
+        # tombstoned ones (slot order)
+        free_rank = jnp.where(
+            fresh,
+            jnp.cumsum(fresh.astype(jnp.int32)) - 1,
+            n_fresh + jnp.cumsum(stale.astype(jnp.int32)) - 1,
+        )
         take = free & (free_rank < k)
         take_idx = jnp.clip(free_rank, 0, max(k - 1, 0))
         new_cols = {}
@@ -135,11 +173,21 @@ class Table:
                 take.reshape((-1,) + (1,) * (col.ndim - 1)), picked, col
             )
         new_valid = self.valid | take
-        slot_of_row = jnp.full((k,), -1, jnp.int32)
-        slots = jnp.nonzero(take, size=k, fill_value=-1)[0].astype(jnp.int32)
-        slot_of_row = slots
+        # row j -> the slot whose free_rank is j (NOT slot order: a
+        # tombstoned slot with a low index ranks after every fresh slot)
+        slot_of_row = (
+            jnp.full((k,), -1, jnp.int32)
+            .at[jnp.where(take, take_idx, k)]
+            .set(jnp.arange(self.capacity, dtype=jnp.int32), mode="drop")
+        )
         overflow = jnp.sum(free.astype(jnp.int32)) < k
-        return self.replace(columns=new_cols, valid=new_valid), slot_of_row, overflow
+        return (
+            self.replace(
+                columns=new_cols, valid=new_valid, used=self.used | take
+            ),
+            slot_of_row,
+            overflow,
+        )
 
     def delete(self, row_mask: jnp.ndarray) -> "Table":
         return self.replace(valid=self.valid & ~row_mask)
@@ -163,7 +211,12 @@ class Table:
         return self.replace(columns=cols, colnames=tuple(sorted(cols)))
 
     # ----------------------------------------------------------------- stats
-    def compute_stats(self) -> TableStats:
+    def compute_stats(
+        self,
+        *,
+        prev: Optional[TableStats] = None,
+        appended: Optional[Mapping[str, np.ndarray]] = None,
+    ) -> TableStats:
         """Host-side statistics pass over live rows (planning-time only).
 
         Engines cache the result per table epoch (``GRFusion.table_stats``);
@@ -173,13 +226,43 @@ class Table:
         (``core/sketch.py``) so the stats pass stays linear-time at
         sharded-graph scale. Estimates are clamped to ``[1, row_count]`` —
         the optimizer only consumes them as selectivity denominators.
+
+        With ``prev`` (sketch-bearing stats from the previous epoch) and
+        ``appended`` (the rows inserted since — and the ONLY change since:
+        no deletes, no updates), the sketches absorb just the new rows
+        instead of rescanning every live one. Appended values are coerced
+        to the column dtypes first, exactly as ``insert`` stores them, so
+        the incremental registers match a full rebuild's bit-for-bit.
         """
-        from repro.core.sketch import approx_distinct
+        from repro.core.sketch import HyperLogLog
+
+        if (
+            prev is not None
+            and appended is not None
+            and prev.sketches is not None
+            and all(c in appended for c in prev.sketches)
+        ):
+            k = int(np.asarray(next(iter(appended.values()))).shape[0])
+            n = prev.row_count + k
+            sketches: Dict[str, Any] = {}
+            distinct: Dict[str, int] = {}
+            for cname, sk in prev.sketches.items():
+                vals = np.asarray(appended[cname]).astype(
+                    self.columns[cname].dtype
+                )
+                sk2 = sk.copy().add(vals)
+                sketches[cname] = sk2
+                distinct[cname] = max(1, min(sk2.estimate(), n))
+            return TableStats(
+                name=self.name, capacity=self.capacity, row_count=n,
+                distinct=distinct, sketches=sketches,
+            )
 
         mask = np.asarray(self.valid)
         n = int(mask.sum())
         exact_max = int(os.environ.get("REPRO_STATS_EXACT_MAX", 1 << 15))
-        distinct: Dict[str, int] = {}
+        distinct = {}
+        sketches = None
         for k, v in self.columns.items():
             arr = np.asarray(v)
             if arr.ndim != 1:
@@ -187,11 +270,14 @@ class Table:
             if n <= exact_max:
                 distinct[k] = int(np.unique(arr[mask]).size)
             else:
-                est = approx_distinct(arr[mask])
-                distinct[k] = max(1, min(est, n))
+                sk = HyperLogLog().add(arr[mask])
+                if sketches is None:
+                    sketches = {}
+                sketches[k] = sk
+                distinct[k] = max(1, min(sk.estimate(), n))
         return TableStats(
             name=self.name, capacity=self.capacity, row_count=n,
-            distinct=distinct,
+            distinct=distinct, sketches=sketches,
         )
 
     # ----------------------------------------------------------------- numpy

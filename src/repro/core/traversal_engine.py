@@ -45,19 +45,23 @@ identical distances imply identical parent slots.
 
 Caches
 ------
-  * **Shard-pack cache** — key ``(topology_key, n_shards, pad_block)``,
+  * **Shard-pack cache** — key ``(packing_key, n_shards, pad_block)``,
     value the per-shard edge-cut ``(shard_src, shard_dst, shard_eid)``
     arrays. Same epoch lifecycle as the packing cache below: the edge-cut
-    partition is paid once per (topology epoch, mesh width), warm queries
+    partition is paid once per (packing epoch, mesh width), warm queries
     hit it with zero re-packs (the BENCH_sharded gate asserts this), and
     ``bump_epoch`` invalidates it alongside the dst-sort packs.
-  * **Packing cache** — key ``(topology_key, block_rows, block_edges)``,
-    value the packed ``(packed_src, packed_eid, ldst)`` arrays. The
-    topology key is ``(graph_name, epoch)`` when the owning engine
-    registers the view and bumps the epoch on every compaction / delta
-    insert (the cheap path), or a content fingerprint of the COO + delta
-    arrays for standalone views. Edge sorting is therefore paid once per
-    compaction, not per query. Attribute updates (weights, tombstones,
+  * **Packing cache** — key ``(packing_key, block_rows, block_edges)``,
+    value the packed ``(packed_src, packed_eid, ldst)`` arrays built from
+    the MAIN coo stream only. The packing key is ``(graph_name,
+    pack-epoch)`` when the owning engine registers the view — the
+    ``pack:<name>`` epoch bumps ONLY on compaction / rebuild
+    (``bump_epoch``); delta-only inserts take ``bump_delta_epoch``, which
+    bumps just the plain topology epoch (query/value caches) and leaves
+    every pack warm, since all backends consult the delta buffer at query
+    time. Standalone views key on a content fingerprint of the main COO
+    arrays. Edge sorting is therefore paid once per compaction, not per
+    query or per insert. Attribute updates (weights, tombstones,
     predicate masks) never touch the key — the paper's §3.2 decoupling.
   * **Plan (trace) cache** — module-level jitted entry points shared by
     every engine instance; XLA traces are keyed on array shapes only, so
@@ -86,7 +90,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import traversal as T
-from repro.core.compiled import EpochRegistry
+from repro.core.compiled import EpochRegistry, pack_key
 from repro.core.graphview import GraphView
 from repro.kernels.frontier import shard as FS
 from repro.kernels.frontier.ops import bfs_pallas, pack_edges_by_dst
@@ -259,34 +263,57 @@ class TraversalEngine:
     def register_view(self, name: str):
         """Start epoch tracking for a named graph (owning-engine path)."""
         self.epochs.ensure(name)
+        self.epochs.ensure(pack_key(name))
 
     def bump_epoch(self, name: str):
-        """Topology changed (compaction / delta insert): invalidate packs."""
+        """MAIN arrays changed (compaction / rebuild): invalidate packs
+        and every downstream cache keyed on the plain topology epoch."""
         self.epochs.bump(name)
+        self.epochs.bump(pack_key(name))
         for packs in (self._packs, self._shard_packs):
             stale = [k for k in packs if k[0][0] == name]
             for k in stale:
                 del packs[k]
+
+    def bump_delta_epoch(self, name: str):
+        """Delta-only insert: topology changed (query/value caches must
+        see the new edges) but MAIN is untouched — packs and shard packs
+        stay warm, because every backend consults the delta stream at
+        query time. Only ``bump_epoch`` (compaction) drops packs."""
+        self.epochs.bump(name)
 
     def topology_key(self, view: GraphView, graph: Optional[str] = None):
         if graph is not None and self.epochs.known(graph):
             return (graph, self.epochs.get(graph))
         return self._fingerprint(view)
 
-    def _fingerprint(self, view: GraphView):
+    def packing_key(self, view: GraphView, graph: Optional[str] = None):
+        """Cache key for packs/shard packs: the ``pack:<name>`` epoch for
+        registered views (bumped on compaction only), or a MAIN-arrays-only
+        fingerprint for standalone views — either way, delta inserts leave
+        the key (and the cache entry) untouched."""
+        if graph is not None and self.epochs.known(graph):
+            return (graph, self.epochs.get(pack_key(graph)))
+        return self._fingerprint(view, main_only=True)
+
+    def _fingerprint(self, view: GraphView, main_only: bool = False):
         """Content key for standalone views (identity-memoized per object)."""
-        ent = self._fp_cache.get(id(view))
+        ck = (id(view), main_only)
+        ent = self._fp_cache.get(ck)
         if ent is not None and ent[0] is view:
-            self._fp_cache.move_to_end(id(view))
+            self._fp_cache.move_to_end(ck)
             return ent[1]
+        arrays = (view.coo_src, view.coo_dst, view.coo_eid)
+        if not main_only:
+            arrays = arrays + (
+                view.delta_src, view.delta_dst, view.delta_eid,
+                view.delta_valid,
+            )
         h = hashlib.blake2b(digest_size=16)
-        for a in (
-            view.coo_src, view.coo_dst, view.coo_eid,
-            view.delta_src, view.delta_dst, view.delta_eid, view.delta_valid,
-        ):
+        for a in arrays:
             h.update(np.asarray(a).tobytes())
         key = ("#fp", h.hexdigest())
-        self._fp_cache[id(view)] = (view, key)
+        self._fp_cache[ck] = (view, key)
         while len(self._fp_cache) > 64:
             self._fp_cache.popitem(last=False)
         return key
@@ -294,14 +321,16 @@ class TraversalEngine:
     # --------------------------------------------------------- packing cache
     def get_pack(self, view: GraphView, graph: Optional[str] = None):
         """Packed dst-sorted streams for the frontier kernel, cached per
-        (topology epoch, block shape)."""
-        key = (self.topology_key(view, graph), self.block_rows, self.block_edges)
+        (packing epoch, block shape). Packs cover the MAIN arrays only —
+        the delta buffer is consulted at query time — so delta-only
+        inserts hit the cached pack unchanged."""
+        key = (self.packing_key(view, graph), self.block_rows, self.block_edges)
         hit = self._packs.get(key)
         if hit is not None:
             self._stats["pack_hits"] += 1
             self._packs.move_to_end(key)
             return hit
-        src, dst, eid = view.all_coo()
+        src, dst, eid = view.coo_src, view.coo_dst, view.coo_eid
         ps, pstream, ldst = pack_edges_by_dst(
             np.asarray(src), np.asarray(dst), view.n_vertices,
             block_rows=self.block_rows, block_edges=self.block_edges,
@@ -331,18 +360,20 @@ class TraversalEngine:
         n_shards: Optional[int] = None,
     ):
         """Per-shard edge-cut streams for the sharded backend, cached per
-        (topology epoch, mesh width). The pad granularity reuses the
-        adaptive ``_block_for`` machinery so similarly-sized topologies
-        share shapes (and therefore XLA traces) across epochs."""
+        (packing epoch, mesh width), MAIN arrays only (the delta buffer
+        rides along replicated at query time, so delta inserts never
+        re-partition). The pad granularity reuses the adaptive
+        ``_block_for`` machinery so similarly-sized topologies share
+        shapes (and therefore XLA traces) across epochs."""
         n = n_shards if n_shards is not None else self.device_count()
         pad_block = self._block_for(view)
-        key = (self.topology_key(view, graph), n, pad_block)
+        key = (self.packing_key(view, graph), n, pad_block)
         hit = self._shard_packs.get(key)
         if hit is not None:
             self._stats["shard_pack_hits"] += 1
             self._shard_packs.move_to_end(key)
             return hit
-        src, dst, eid = view.all_coo()
+        src, dst, eid = view.coo_src, view.coo_dst, view.coo_eid
         ssrc, sdst, seid = FS.partition_edges_by_dst_block(
             np.asarray(src), np.asarray(dst), np.asarray(eid),
             view.n_vertices, n,
@@ -354,6 +385,19 @@ class TraversalEngine:
             self._shard_packs.popitem(last=False)
         self._stats["shard_pack_builds"] += 1
         return pack
+
+    @staticmethod
+    def _delta_stream(view: GraphView):
+        """The delta buffer in stream convention (invalid: V, V, -1), the
+        shape the sharded bodies and packed relaxation concatenate onto
+        their main slices. Fixed [delta_capacity] shape, so passing it on
+        every call keeps one XLA trace across empty/non-empty deltas."""
+        V = view.n_vertices
+        return (
+            jnp.where(view.delta_valid, view.delta_src, V),
+            jnp.where(view.delta_valid, view.delta_dst, V),
+            jnp.where(view.delta_valid, view.delta_eid, -1),
+        )
 
     def _block_for(self, view: GraphView) -> int:
         """Effective COO block size for one view: the configured block,
@@ -437,23 +481,30 @@ class TraversalEngine:
             vmask = view.v_valid if vertex_mask is None else (
                 view.v_valid & vertex_mask
             )
+            has_delta = bool(jnp.any(view.delta_valid))
             return bfs_pallas(
                 source_pos, ps, pe, ldst, view.n_vertices,
                 edge_mask_by_row=edge_mask_by_row,
                 vertex_mask=vmask, target_pos=target_pos,
                 block_rows=self.block_rows, max_hops=max_hops,
                 interpret=self.interpret,
+                delta_src=view.delta_src if has_delta else None,
+                delta_dst=view.delta_dst if has_delta else None,
+                delta_eid=view.delta_eid if has_delta else None,
+                delta_valid=view.delta_valid if has_delta else None,
             )
         if b == "sharded":
             ssrc, sdst, seid = self.get_shard_pack(view, graph)
             vmask = view.v_valid if vertex_mask is None else (
                 view.v_valid & vertex_mask
             )
+            dsrc, ddst, deid = self._delta_stream(view)
             return FS.sharded_bfs(
                 ssrc, sdst, seid, source_pos, view.n_vertices,
                 edge_mask_by_row=edge_mask_by_row,
                 vertex_mask=vmask, target_pos=target_pos,
                 max_hops=max_hops,
+                delta_src=dsrc, delta_dst=ddst, delta_eid=deid,
             )
         return jnp.asarray(
             self._bfs_reference(
@@ -539,10 +590,12 @@ class TraversalEngine:
             vmask = view.v_valid if vertex_mask is None else (
                 view.v_valid & vertex_mask
             )
+            dsrc, ddst, deid = self._delta_stream(view)
             dist = FS.sharded_sssp_dist(
                 ssrc, sdst, seid, source_pos, weight_by_row,
                 view.n_vertices, edge_mask_by_row=edge_mask_by_row,
                 vertex_mask=vmask, max_iters=max_iters,
+                delta_src=dsrc, delta_dst=ddst, delta_eid=deid,
             )
         else:
             dist = jnp.asarray(
@@ -577,6 +630,22 @@ class TraversalEngine:
         )
         gdst = jnp.where(ldst >= 0, gdst, VP).reshape(-1)
         src_safe = jnp.clip(ps, 0, VP - 1).reshape(-1)
+        w = w.reshape(-1)
+        # delta candidates ride along flat (pack covers MAIN only); the
+        # fixpoint min runs over the same edge multiset as all_coo, so
+        # distances stay bit-identical to the blocked-COO sweep
+        dsrc, ddst, deid = self._delta_stream(view)
+        d_ok = deid >= 0
+        if edge_mask_by_row is not None:
+            d_ok = d_ok & jnp.take(
+                edge_mask_by_row, jnp.clip(deid, 0, ecap - 1)
+            )
+        d_w = jnp.where(
+            d_ok, jnp.take(weight_by_row, jnp.clip(deid, 0, ecap - 1)), _INF
+        )
+        src_safe = jnp.concatenate([src_safe, jnp.clip(dsrc, 0, VP - 1)])
+        gdst = jnp.concatenate([gdst, jnp.where(d_ok, ddst, VP)])
+        w = jnp.concatenate([w, d_w])
         vmask = view.v_valid if vertex_mask is None else (
             view.v_valid & vertex_mask
         )
@@ -586,7 +655,7 @@ class TraversalEngine:
         dist0 = dist0.at[jnp.arange(S), source_pos].set(0.0, mode="drop")
         dist0 = jnp.where(vmask_p[None, :], dist0, _INF)
         dist = _packed_sssp_dist(
-            dist0, src_safe, gdst, w.reshape(-1), vmask_p,
+            dist0, src_safe, gdst, w, vmask_p,
             jnp.int32(max_iters),
         )
         return dist[:, :V]

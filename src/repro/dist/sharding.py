@@ -116,6 +116,12 @@ def edge_stream_specs(mesh_axes: Sequence[str] = (TRAVERSAL_AXIS,)):
         "shard_src": P(s, None),
         "shard_dst": P(s, None),
         "shard_eid": P(s, None),
+        # the view's delta COO buffer rides along replicated: every shard
+        # applies all delta edges, and the OR/MIN combine is idempotent,
+        # so delta-only inserts never force a re-partition of main
+        "delta_src": P(),
+        "delta_dst": P(),
+        "delta_eid": P(),
         "source_pos": P(),
         "target_pos": P(),
         "weight_by_row": P(),

@@ -50,6 +50,10 @@ def bfs_pallas(
     block_rows: int = 128,
     max_hops: int = 8,
     interpret: bool = True,
+    delta_src=None,  # int32 [D] delta COO buffer (uncompacted inserts)
+    delta_dst=None,
+    delta_eid=None,
+    delta_valid=None,  # bool [D]
 ):
     """Returns dist int32 [S, V] (-1 unreachable).
 
@@ -58,6 +62,13 @@ def bfs_pallas(
     semantics exactly. With ``target_pos`` the host hop loop stops once
     every lane has reached its target (or its lane is inactive), mirroring
     the XLA sweep's while-loop condition.
+
+    The optional ``delta_*`` arrays carry a view's uncompacted insert
+    buffer. Each hop unions their contribution into the kernel's frontier
+    (same prev-frontier, same not-yet-visited gate), so the packed layout
+    — built from the MAIN stream only — stays warm across delta inserts
+    while results match the all-edges sweep exactly: a hop's reachable set
+    is a union over edges, and union is order-independent.
     """
     packed_src = jnp.asarray(packed_src)
     packed_eid = jnp.asarray(packed_eid)
@@ -90,6 +101,30 @@ def bfs_pallas(
         )
     ldst_m = jnp.where(src_ok, ldst, -1)
 
+    # delta-edge lanes: validity folds in the row mask and both vertex
+    # masks, exactly as packed-edge validity does above
+    d_s = d_ok = d_dst_idx = None
+    if delta_src is not None:
+        delta_src = jnp.asarray(delta_src, jnp.int32)
+        delta_dst = jnp.asarray(delta_dst, jnp.int32)
+        delta_eid = jnp.asarray(delta_eid, jnp.int32)
+        d_ok = jnp.asarray(delta_valid, jnp.bool_) & (delta_eid >= 0)
+        if edge_mask_by_row is not None:
+            d_ok = d_ok & jnp.take(
+                edge_mask_by_row,
+                jnp.clip(delta_eid, 0, edge_mask_by_row.shape[0] - 1),
+            )
+        d_ok = d_ok & (delta_src >= 0) & (delta_src < n_vertices)
+        d_ok = d_ok & (delta_dst >= 0) & (delta_dst < n_vertices)
+        d_s = jnp.clip(delta_src, 0, VP - 1)
+        if vertex_mask is not None:
+            d_ok = (
+                d_ok
+                & jnp.take(vmask_p, d_s)
+                & jnp.take(vmask_p, jnp.clip(delta_dst, 0, VP - 1))
+            )
+        d_dst_idx = jnp.where(d_ok, delta_dst, VP)  # VP -> dropped
+
     frontier = (
         jnp.zeros((VP, S), jnp.float32)
         .at[sources, jnp.arange(S)]
@@ -114,6 +149,7 @@ def bfs_pallas(
             found = found | (target_pos < 0) | (sources < 0)
             if bool(jnp.all(found)):
                 break
+        prev = frontier
         msgs = jnp.take(frontier, src_safe.reshape(-1), axis=0).reshape(T, J, BE, S)
         msgs = msgs * src_ok[..., None]
         frontier, dist, visited = frontier_hop(
@@ -121,4 +157,21 @@ def bfs_pallas(
             jnp.full((1, 1), h, jnp.int32),
             block_rows=block_rows, interpret=interpret,
         )
+        if d_s is not None:
+            # union in the delta edges' contribution to this hop: messages
+            # read the SAME pre-hop frontier the kernel consumed, and the
+            # not-yet-visited gate uses the kernel-updated visited set, so
+            # a vertex reached by both main and delta gets hop h exactly
+            # once — identical to one sweep over the concatenated stream
+            dmsg = jnp.take(prev, d_s, axis=0) * d_ok.astype(jnp.float32)[:, None]
+            dscat = (
+                jnp.zeros((VP, S), jnp.float32)
+                .at[d_dst_idx]
+                .max(dmsg, mode="drop")
+            )
+            add = (dscat > 0) & (visited == 0)
+            addf = add.astype(jnp.float32)
+            frontier = jnp.maximum(frontier, addf)
+            visited = jnp.maximum(visited, addf)
+            dist = jnp.where(add, h, dist)
     return dist[:n_vertices].T

@@ -129,13 +129,18 @@ def _specs(*names):
 # --------------------------------------------------------------------------
 def _bfs_body(
     src_l, dst_l, eid_l,  # [1, Epad] local edge slice (leading shard dim)
+    d_src, d_dst, d_eid,  # [D] replicated delta COO (invalid: V, V, -1)
     source_pos,  # int32 [S] replicated
     emask_rows,  # bool [ecap] replicated (ones((1,)) = no mask)
     vmask,  # bool [V] replicated
     target_pos,  # int32 [S] replicated (ignored unless has_targets)
     *, max_hops: int, has_targets: bool,
 ):
-    src_l, dst_l, eid_l = src_l[0], dst_l[0], eid_l[0]
+    # every shard sweeps its slice plus the whole (tiny) delta buffer; the
+    # OR combine is idempotent, so the duplicated delta work is exact
+    src_l = jnp.concatenate([src_l[0], d_src])
+    dst_l = jnp.concatenate([dst_l[0], d_dst])
+    eid_l = jnp.concatenate([eid_l[0], d_eid])
     V = vmask.shape[0]
     S = source_pos.shape[0]
     ecap = emask_rows.shape[0]
@@ -185,11 +190,12 @@ def _sharded_bfs_fn(n_shards: int):
     mesh = traversal_mesh(n_shards)
     in_specs = _specs(
         "shard_src", "shard_dst", "shard_eid",
+        "delta_src", "delta_dst", "delta_eid",
         "source_pos", "edge_mask_by_row", "vertex_mask", "target_pos",
     )
 
-    def call(ssrc, sdst, seid, source_pos, emask_rows, vmask, target_pos,
-             *, max_hops, has_targets):
+    def call(ssrc, sdst, seid, dsrc, ddst, deid, source_pos, emask_rows,
+             vmask, target_pos, *, max_hops, has_targets):
         TRACE_COUNTS["traces_bfs_sharded"] += 1  # runs at trace time only
         body = functools.partial(
             _bfs_body, max_hops=max_hops, has_targets=has_targets
@@ -197,7 +203,8 @@ def _sharded_bfs_fn(n_shards: int):
         return shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=P(),
             check_rep=False,  # ring ppermute combine defeats rep inference
-        )(ssrc, sdst, seid, source_pos, emask_rows, vmask, target_pos)
+        )(ssrc, sdst, seid, dsrc, ddst, deid, source_pos, emask_rows,
+          vmask, target_pos)
 
     return jax.jit(call, static_argnames=("max_hops", "has_targets"))
 
@@ -211,11 +218,16 @@ def sharded_bfs(
     target_pos=None,  # int32 [S] early-exit targets
     *,
     max_hops: int = 32,
+    delta_src=None,  # int32 [D] replicated delta COO (invalid: V, V, -1)
+    delta_dst=None,
+    delta_eid=None,
 ):
     """Multi-device BFS over an edge-cut stream. Returns dist int32 [S, V].
 
     Semantics (loop conditions, masks, early exit) mirror ``traversal.bfs``
-    exactly; the only difference is *where* each scatter runs.
+    exactly; the only difference is *where* each scatter runs. The optional
+    delta arrays carry the view's uncompacted insert buffer, replicated to
+    every shard — delta-only inserts stay visible without re-partitioning.
     """
     n_shards = int(shard_src.shape[0])
     source_pos = jnp.asarray(source_pos, jnp.int32)
@@ -224,8 +236,13 @@ def sharded_bfs(
     has_targets = target_pos is not None
     if target_pos is None:
         target_pos = jnp.full(source_pos.shape, -1, jnp.int32)
+    if delta_src is None:
+        delta_src = delta_dst = jnp.zeros((0,), jnp.int32)
+        delta_eid = jnp.full((0,), -1, jnp.int32)
     return _sharded_bfs_fn(n_shards)(
         jnp.asarray(shard_src), jnp.asarray(shard_dst), jnp.asarray(shard_eid),
+        jnp.asarray(delta_src, jnp.int32), jnp.asarray(delta_dst, jnp.int32),
+        jnp.asarray(delta_eid, jnp.int32),
         source_pos, jnp.asarray(edge_mask_by_row, jnp.bool_),
         jnp.asarray(vertex_mask, jnp.bool_),
         jnp.asarray(target_pos, jnp.int32),
@@ -238,13 +255,18 @@ def sharded_bfs(
 # --------------------------------------------------------------------------
 def _sssp_body(
     src_l, dst_l, eid_l,  # [1, Epad] local edge slice
+    d_src, d_dst, d_eid,  # [D] replicated delta COO (invalid: V, V, -1)
     source_pos,  # int32 [S]
     weight_by_row,  # f32 [ecap]
     emask_rows,  # bool [ecap]
     vmask,  # bool [V]
     *, max_iters: int,
 ):
-    src_l, dst_l, eid_l = src_l[0], dst_l[0], eid_l[0]
+    # replicated delta edges relax on every shard; the MIN combine is
+    # idempotent, so the duplicate candidates are exact
+    src_l = jnp.concatenate([src_l[0], d_src])
+    dst_l = jnp.concatenate([dst_l[0], d_dst])
+    eid_l = jnp.concatenate([eid_l[0], d_eid])
     V = vmask.shape[0]
     S = source_pos.shape[0]
     ecap = weight_by_row.shape[0]
@@ -283,17 +305,19 @@ def _sharded_sssp_fn(n_shards: int):
     mesh = traversal_mesh(n_shards)
     in_specs = _specs(
         "shard_src", "shard_dst", "shard_eid",
+        "delta_src", "delta_dst", "delta_eid",
         "source_pos", "weight_by_row", "edge_mask_by_row", "vertex_mask",
     )
 
-    def call(ssrc, sdst, seid, source_pos, weight_by_row, emask_rows, vmask,
-             *, max_iters):
+    def call(ssrc, sdst, seid, dsrc, ddst, deid, source_pos, weight_by_row,
+             emask_rows, vmask, *, max_iters):
         TRACE_COUNTS["traces_sssp_sharded"] += 1  # runs at trace time only
         body = functools.partial(_sssp_body, max_iters=max_iters)
         return shard_map(
             body, mesh=mesh, in_specs=in_specs, out_specs=P(),
             check_rep=False,
-        )(ssrc, sdst, seid, source_pos, weight_by_row, emask_rows, vmask)
+        )(ssrc, sdst, seid, dsrc, ddst, deid, source_pos, weight_by_row,
+          emask_rows, vmask)
 
     return jax.jit(call, static_argnames=("max_iters",))
 
@@ -307,19 +331,29 @@ def sharded_sssp_dist(
     vertex_mask=None,  # bool [V]; REQUIRED live-vertex mask from the view
     *,
     max_iters: int = 64,
+    delta_src=None,  # int32 [D] replicated delta COO (invalid: V, V, -1)
+    delta_dst=None,
+    delta_eid=None,
 ):
     """Multi-device Bellman-Ford distances over an edge-cut stream.
 
     Returns dist f32 [S, V]; parents come from the engine's canonical
-    single-pass parent extraction, shared with every other backend.
+    single-pass parent extraction, shared with every other backend. The
+    optional delta arrays carry the view's uncompacted insert buffer,
+    replicated to every shard.
     """
     n_shards = int(shard_src.shape[0])
     source_pos = jnp.asarray(source_pos, jnp.int32)
     weight_by_row = jnp.asarray(weight_by_row, jnp.float32)
     if edge_mask_by_row is None:
         edge_mask_by_row = jnp.ones((1,), jnp.bool_)
+    if delta_src is None:
+        delta_src = delta_dst = jnp.zeros((0,), jnp.int32)
+        delta_eid = jnp.full((0,), -1, jnp.int32)
     return _sharded_sssp_fn(n_shards)(
         jnp.asarray(shard_src), jnp.asarray(shard_dst), jnp.asarray(shard_eid),
+        jnp.asarray(delta_src, jnp.int32), jnp.asarray(delta_dst, jnp.int32),
+        jnp.asarray(delta_eid, jnp.int32),
         source_pos, weight_by_row,
         jnp.asarray(edge_mask_by_row, jnp.bool_),
         jnp.asarray(vertex_mask, jnp.bool_),

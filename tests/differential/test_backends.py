@@ -289,7 +289,10 @@ def test_packing_cache_hit_on_repeated_query():
     assert te.stats["traces_bfs_xla"] == t1  # no re-trace
 
 
-def test_epoch_bump_invalidates_pack():
+def test_delta_insert_keeps_pack_warm_compaction_invalidates():
+    """Epoch split: a delta-only insert must be visible to queries WITHOUT
+    rebuilding the dst-sort pack (backends consult the delta stream at
+    query time); only compaction bumps the packing epoch and re-packs."""
     eng = GRFusion()
     n = 16
     eng.create_table("V", {"vid": np.arange(n, dtype=np.int32)})
@@ -309,14 +312,23 @@ def test_epoch_bump_invalidates_pack():
                            backend="pallas_frontier", graph="G"))
     assert d0[0, n - 1] == n - 1
     assert te.stats["pack_builds"] == 1
-    # shortcut edge 0 -> n-1 lands in the delta buffer and bumps the epoch
+    # shortcut edge 0 -> n-1 lands in the delta buffer; the pack stays warm
     eng.insert("E", {"src": np.array([0], np.int32),
                      "dst": np.array([n - 1], np.int32),
                      "w": np.array([1.0], np.float32)})
     view2 = eng.views["G"].view
+    assert bool(jnp.any(view2.delta_valid))  # still uncompacted
     d1 = np.asarray(te.bfs(view2, srcs, max_hops=20,
                            backend="pallas_frontier", graph="G"))
-    assert d1[0, n - 1] == 1  # new topology visible => pack was rebuilt
+    assert d1[0, n - 1] == 1  # new edge visible from the delta stream...
+    assert te.stats["pack_builds"] == 1  # ...with ZERO re-packs
+    # compaction folds the delta into main and DOES invalidate the pack
+    eng.compact("G")
+    view3 = eng.views["G"].view
+    assert not bool(jnp.any(view3.delta_valid))
+    d2 = np.asarray(te.bfs(view3, srcs, max_hops=20,
+                           backend="pallas_frontier", graph="G"))
+    assert d2[0, n - 1] == 1
     assert te.stats["pack_builds"] == 2
 
 
