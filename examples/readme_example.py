@@ -141,6 +141,29 @@ def main():
     print("after bulk load, reachable<=2 from 2:", ends_from_2)
     assert 5 in ends_from_2  # the freshly ingested 2-5 edge is queryable
 
+    # -- graceful degradation: backend failover under injected faults -----
+    # the traversal backends are bit-identical by construction, so a query
+    # whose backend dies falls down the failover chain (ending at the
+    # reference backend) without changing its answer — and the result
+    # says it degraded. `fault_scope` activates a seeded/scheduled fault
+    # plan lexically; with no plan active the seams cost nothing.
+    from repro.robust import faults
+    from repro.robust.faults import FaultPlan
+
+    linked = (Query()
+              .from_paths("SocialNetwork", "PS")
+              .where((PS.start.id == 1) & (PS.end.id == 4))
+              .select(exists=col("PS.exists"), hops=col("PS.length"))
+              .limit(1))
+    clean = eng.run(linked)
+    assert clean.degraded_backend is None
+    with faults.fault_scope(FaultPlan({"traversal.dispatch.xla_coo": "*"})):
+        degraded = eng.run(linked)  # engine's default backend is dead
+    print("\nbackend dead, degraded to:", degraded.degraded_backend)
+    assert degraded.degraded_backend == "reference"
+    assert degraded.rows() == clean.rows()  # same bytes, worse backend
+    assert eng.events["traversal_failovers"] >= 1
+
     print("\nreadme example OK")
 
 

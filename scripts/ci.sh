@@ -30,6 +30,15 @@
 #                 ingest benchmark (writes BENCH_ingest.json; gated on
 #                 warm-query-under-writes ratio, zero re-packs from
 #                 delta inserts, and first-query correctness)
+#   chaos         fault-injection suite (tests/robust, -m chaos): backend
+#                 failover bit-identity, the crash-point sweep over every
+#                 registered injection site vs the mutation-log oracle,
+#                 serving-loop hardening (deadlines / retry / circuit
+#                 breaker), ingest quarantine, and the disabled-injector
+#                 zero-overhead pins; the crash sweep + failover files
+#                 re-run at 2 forced host devices so the sharded
+#                 backend's failover and shard-pack seams are exercised
+#                 multi-device
 #   analyze       static analysis — hot-path lint over src/repro against
 #                 scripts/lint_baseline.json (python -m repro.analysis);
 #                 fails on any fresh host-sync / device-loop /
@@ -45,7 +54,7 @@ cd "$(dirname "$0")/.."
 
 STAGES=("$@")
 if [ ${#STAGES[@]} -eq 0 ]; then
-  STAGES=(collect tier1 differential sharded ingest analyze bench docs)
+  STAGES=(collect tier1 differential sharded ingest chaos analyze bench docs)
 fi
 
 declare -a TIMINGS=()
@@ -84,6 +93,18 @@ ingest_stage() {
   cat BENCH_ingest.json
 }
 
+chaos_stage() {
+  # the full fault-injection suite on the default host topology (1
+  # device), then the crash-point sweep and failover family again at 2
+  # forced host devices — XLA fixes the device count at process start,
+  # so the multi-device run is its own pytest process
+  python -m pytest -q -m chaos
+  echo "-- chaos: crash sweep + failover at 2 forced host devices --"
+  env XLA_FLAGS="--xla_force_host_platform_device_count=2" \
+    python -m pytest -q tests/robust/test_crash_sweep.py \
+      tests/robust/test_failover.py
+}
+
 sharded_stage() {
   # XLA fixes the device count at process start, so each forced count is
   # its own pytest process; the family sweep (-m differential, which now
@@ -111,7 +132,7 @@ for stage in ${STAGES[@]+"${STAGES[@]}"}; do
       ;;
     tier1)
       run_stage tier1 python -m pytest -q \
-        -m "not slow and not differential and not sharded"
+        -m "not slow and not differential and not sharded and not chaos"
       ;;
     differential)
       run_stage differential python -m pytest -q -m differential
@@ -121,6 +142,9 @@ for stage in ${STAGES[@]+"${STAGES[@]}"}; do
       ;;
     ingest)
       run_stage ingest ingest_stage
+      ;;
+    chaos)
+      run_stage chaos chaos_stage
       ;;
     analyze)
       run_stage analyze env PYTHONPATH=src python -m repro.analysis

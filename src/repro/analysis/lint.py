@@ -32,6 +32,14 @@ the executor/serving hot path, structural shape keys built from reprs):
                     loops must stay inside one jitted ``shard_map`` call
                     (host-loop drivers like ``ops.bfs_pallas`` are a
                     different, unregistered execution model).
+``swallowed-fault`` an ``except`` block in a hot-path module (any module
+                    registered in ``HOT_PATH_FUNCS``/``SHARD_HOP_FUNCS``)
+                    that neither re-raises nor records the failure to a
+                    stats/events counter (or quarantines it to a
+                    dead-letter list) — graceful degradation is only safe
+                    when every absorbed fault stays observable; a bare
+                    ``pass``/``continue`` handler is how a failing warm
+                    loop goes silent.
 =================== ======================================================
 
 Suppression is explicit and reviewable: a ``# lint: allow-<rule>``
@@ -57,6 +65,7 @@ __all__ = [
     "save_baseline",
     "HOT_PATH_FUNCS",
     "SHARD_HOP_FUNCS",
+    "FAULT_MODULES",
 ]
 
 
@@ -86,8 +95,23 @@ SHARD_HOP_FUNCS: Dict[str, Set[str]] = {
     "core/traversal_engine.py": {"bfs", "sssp"},
 }
 
+# Modules whose except handlers the swallowed-fault rule audits: every
+# registered hot-path / hop module, plus the ingest front end (its
+# quarantine handlers are exactly the pattern the rule enforces).
+FAULT_MODULES: Set[str] = (
+    set(HOT_PATH_FUNCS) | set(SHARD_HOP_FUNCS) | {"data/ingest.py"}
+)
+
 # jnp calls that allocate fresh device arrays (the pump-alloc rule)
 _JNP_ALLOC = {"asarray", "array", "zeros", "ones", "full", "arange", "empty"}
+
+# name fragments that make an except handler count as *recording* the
+# fault (the swallowed-fault rule): counter subscripts like
+# `self.stats[...] += 1` / `engine.events[...] += 1`, counting helpers
+# like `self._count(...)`, and dead-letter quarantine appends
+_COUNTER_TOKENS = ("stats", "events")
+_RECORD_CALL_TOKENS = ("count", "record", "quarantine")
+_DEAD_LETTER_TOKENS = ("dead_letter", "quarantin")
 
 _PRAGMA_RE = re.compile(r"#\s*lint:\s*([a-z0-9_,\- ]+)")
 
@@ -134,15 +158,52 @@ def _is_jnp_call(node: ast.AST) -> bool:
     )
 
 
+def _attr_parts(node: ast.AST) -> List[str]:
+    """Every name in an attribute chain: self.engine.events ->
+    ['events', 'engine', 'self'] (attr-first order)."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts
+
+
+def _handler_records(handler: ast.ExceptHandler) -> bool:
+    """Does this except block keep its fault observable? True for a
+    re-raise, a stats/events counter bump, a counting/recording helper
+    call, or a dead-letter quarantine append."""
+    for n in ast.walk(handler):
+        if isinstance(n, ast.Raise):
+            return True
+        if isinstance(n, ast.AugAssign) and isinstance(n.target, ast.Subscript):
+            parts = _attr_parts(n.target.value)
+            if any(tok in p for p in parts for tok in _COUNTER_TOKENS):
+                return True
+        if isinstance(n, ast.Call):
+            parts = _attr_parts(n.func)
+            head = parts[0] if parts else ""
+            if any(tok in head for tok in _RECORD_CALL_TOKENS):
+                return True
+            if head == "append" and any(
+                tok in p for p in parts[1:] for tok in _DEAD_LETTER_TOKENS
+            ):
+                return True
+    return False
+
+
 class _HotPathVisitor(ast.NodeVisitor):
     """host-sync / device-loop / pump-alloc over one module."""
 
     def __init__(self, path: str, hot_funcs: Set[str], in_serve: bool,
-                 shard_funcs: Optional[Set[str]] = None):
+                 shard_funcs: Optional[Set[str]] = None,
+                 fault_module: bool = False):
         self.path = path
         self.hot_funcs = hot_funcs
         self.in_serve = in_serve
         self.shard_funcs = shard_funcs or set()
+        self.fault_module = fault_module
         self.scope: List[str] = []  # class/function qualname parts
         # per-function state stacks
         self.hot: List[bool] = [False]
@@ -195,6 +256,17 @@ class _HotPathVisitor(ast.NodeVisitor):
     visit_AsyncFunctionDef = _visit_func
 
     # -- rules -------------------------------------------------------------
+    def visit_ExceptHandler(self, node: ast.ExceptHandler):
+        if self.fault_module and not _handler_records(node):
+            self._flag(
+                "swallowed-fault", node,
+                "except block neither re-raises nor records the failure "
+                "to a stats/events counter (or dead-letter list) — an "
+                "absorbed fault must stay observable; count it or "
+                "annotate `# lint: allow-swallowed-fault`",
+            )
+        self.generic_visit(node)
+
     def visit_Assign(self, node: ast.Assign):
         if self.hot[-1] and _is_jnp_call(node.value):
             for t in node.targets:
@@ -354,8 +426,10 @@ def lint_source(src: str, path: str) -> List[Finding]:
     for suffix, funcs in SHARD_HOP_FUNCS.items():
         if path.endswith(suffix):
             shard_funcs |= funcs
+    fault_module = any(path.endswith(s) for s in FAULT_MODULES)
     v = _HotPathVisitor(
-        path, hot_funcs, in_serve="serve/" in path, shard_funcs=shard_funcs
+        path, hot_funcs, in_serve="serve/" in path, shard_funcs=shard_funcs,
+        fault_module=fault_module,
     )
     v.visit(tree)
     findings = v.findings + _structural_repr_findings(tree, path)

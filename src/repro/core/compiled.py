@@ -41,6 +41,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import expr as X
+from repro.robust import faults
+
+# fault-injection seam: the epoch-keyed mask rebuild (cache misses only —
+# warm hits never reach it, so a disabled plan costs one global read)
+SITE_MASK_BUILD = faults.register_site("compiled.mask_build")
 
 __all__ = [
     "EpochRegistry", "CompiledPredicate", "PlanRuntime",
@@ -426,6 +431,7 @@ class PlanRuntime:
                     slots.insert(0, slots.pop(i))
                 self.stats["mask_hits"] += 1
                 return m
+        faults.check(SITE_MASK_BUILD)
         m = cp.evaluate(base, resolve, enc, pvals)
         slots.insert(0, (epoch, pvals, m))
         del slots[self.VARIANTS_PER_SITE:]

@@ -162,9 +162,12 @@ class GRFusion:
         self.epochs = EpochRegistry()
         # all BFS/SSSP/path dispatch goes through the TraversalEngine; the
         # backend knob here is the engine-wide default ('auto' = planner
-        # density policy), overridable per query via Query.traversal_backend
+        # density policy), overridable per query via Query.traversal_backend.
+        # `events` is shared so backend faults/failovers/retries surface in
+        # engine.events alongside the compaction lifecycle counters.
         self.traversal = TraversalEngine(
-            default_backend=traversal_backend, epochs=self.epochs
+            default_backend=traversal_backend, epochs=self.epochs,
+            events=self.events,
         )
         # per-epoch catalog statistics caches (cost-based optimizer rules)
         self._table_stats: Dict[str, Tuple[int, TableStats]] = {}
@@ -292,19 +295,74 @@ class GRFusion:
         return view
 
     # ------------------------------------------------------------- updates
+    #
+    # Atomicity contract (tests/robust crash-point sweep): every mutation
+    # below is STAGE-THEN-COMMIT. All risky work — table copies, delta
+    # placement, merge compaction, full rebuilds, and therefore every
+    # registered fault-injection site — runs against pure inputs with the
+    # catalog untouched; the new state then lands through ``_commit``,
+    # which is plain assignments and counter bumps only. A fault at any
+    # step index leaves the old tables/views queryable and bit-identical
+    # to the mutation log with the failed mutation excluded.
+    def _commit(
+        self,
+        *,
+        tables: Mapping[str, Table] = {},
+        views: Mapping[str, GraphView] = {},
+        events: Optional[Mapping[str, int]] = None,
+        epoch_ops: Tuple[Tuple[str, str], ...] = (),
+    ) -> None:
+        """The atomic swap. No compute, no fault sites, nothing that can
+        raise — staged state either commits in full or (a staging fault)
+        not at all. Keep it that way."""
+        for name, t in tables.items():
+            self.tables[name] = t
+            self.epochs.bump(table_key(name))
+        for vname, v in views.items():
+            self.views[vname].view = v
+        for kind, vname in epoch_ops:
+            if kind == "main":
+                self.traversal.bump_epoch(vname)
+            else:
+                self.traversal.bump_delta_epoch(vname)
+        if events:
+            self.events.update(events)
+
+    def _stage_rebuild(self, vname: str, vb: ViewBundle, table_of) -> GraphView:
+        """Full view rebuild against (possibly staged) source tables."""
+        return build_graph_view(
+            vname, table_of(vb.vertex_table), table_of(vb.edge_table),
+            v_id=vb.v_id, e_src=vb.e_src, e_dst=vb.e_dst,
+            directed=vb.directed, delta_capacity=vb.delta_capacity,
+        )
+
+    def _stage_merge(self, vb: ViewBundle, view: GraphView, table_of) -> GraphView:
+        """Incremental merge compaction of ``view`` against (possibly
+        staged) source tables."""
+        return merge_compact_view(
+            view, table_of(vb.vertex_table), table_of(vb.edge_table),
+            v_id=vb.v_id, e_src=vb.e_src, e_dst=vb.e_dst,
+            directed=vb.directed,
+        )
+
     def insert(self, table_name: str, rows: Mapping[str, np.ndarray]):
         """Insert rows; graph views over this source update transactionally.
 
         Edge inserts take the streaming path: rows land in each view's
         delta buffer under ``bump_delta_epoch`` (packs stay warm). When
         the batch would not fit the remaining delta capacity, the engine
-        compacts FIRST-ish — the batch is already in the edge table, so
-        one merge compaction folds buffer + batch into main together and
-        no edge is ever dropped. Two hazards force the full rebuild
-        instead: a vertex-table insert (id index changes) and tombstoned-
-        row reuse (a stale main slot with the recycled eid would come
-        back to life; ``Table.used`` fresh-first allocation makes this
-        rare, and the ``prev_used`` check below makes it safe).
+        compacts FIRST-ish — the batch is already in the staged edge
+        table, so one merge compaction folds buffer + batch into main
+        together and no edge is ever dropped. Two hazards force the full
+        rebuild instead: a vertex-table insert (id index changes) and
+        tombstoned-row reuse (a stale main slot with the recycled eid
+        would come back to life; ``Table.used`` fresh-first allocation
+        makes this rare, and the ``prev_used`` check below makes it safe).
+
+        The whole update is staged off to the side and committed in one
+        swap (see the atomicity contract above): a fault anywhere in the
+        staging — including inside a merge compaction — leaves table AND
+        views exactly as they were.
         """
         t = self.tables[table_name]
         enc_rows = {}
@@ -319,9 +377,6 @@ class GRFusion:
         t2, slots, overflow = t.insert(enc_rows)
         if bool(overflow):
             raise RuntimeError(f"table {table_name} capacity exceeded")
-        self.tables[table_name] = t2
-        self.epochs.bump(table_key(table_name))
-        self._update_stats_incremental(table_name, prev_epoch, enc_rows)
         reused = bool(
             jnp.any(
                 (slots >= 0)
@@ -329,12 +384,20 @@ class GRFusion:
             )
         )
 
+        def table_of(name: str) -> Table:
+            return t2 if name == table_name else self.tables[name]
+
+        staged: Dict[str, GraphView] = {}
+        ev: collections.Counter = collections.Counter()
+        epoch_ops: List[Tuple[str, str]] = []
         for vname, vb in self.views.items():
             if vb.edge_table == table_name:
                 if reused:
                     # resurrection hazard: the recycled rows' stale main
                     # slots must be rewritten, which only a rebuild does
-                    self.compact_view(vname)
+                    staged[vname] = self._stage_rebuild(vname, vb, table_of)
+                    ev["compactions_full"] += 1
+                    epoch_ops.append(("main", vname))
                     continue
                 src_ids = jnp.asarray(enc_rows[vb.e_src], jnp.int32)
                 dst_ids = jnp.asarray(enc_rows[vb.e_dst], jnp.int32)
@@ -352,25 +415,37 @@ class GRFusion:
                 )
                 need = k_len if vb.directed else k_len + n_ok
                 if need > free0:
-                    # batch is already in the edge table: one merge folds
-                    # the current buffer AND this batch into main
-                    self.events["delta_overflow_compactions"] += 1
-                    self.compact(vname)
+                    # batch is already in the staged edge table: one merge
+                    # folds the current buffer AND this batch into main
+                    ev["delta_overflow_compactions"] += 1
+                    staged[vname] = self._stage_merge(vb, vb.view, table_of)
+                    ev["compactions_merge"] += 1
+                    epoch_ops.append(("main", vname))
                     continue
                 view2, _ = vb.view.insert_delta(sp, dp, slots, ok)
-                vb.view = view2
                 if vb.directed is False:
-                    view3, _ = vb.view.insert_delta(dp, sp, slots, ok)
-                    vb.view = view3
-                self.traversal.bump_delta_epoch(vname)
-                self.events["delta_inserts"] += 1
-                fill = int(jnp.sum(vb.view.delta_valid.astype(jnp.int32)))
+                    view2, _ = view2.insert_delta(dp, sp, slots, ok)
+                ev["delta_inserts"] += 1
+                epoch_ops.append(("delta", vname))
+                fill = int(jnp.sum(view2.delta_valid.astype(jnp.int32)))
                 if fill >= self.compact_threshold * vb.view.delta_capacity:
-                    self.events["threshold_compactions"] += 1
-                    self.compact(vname)
+                    ev["threshold_compactions"] += 1
+                    ev["compactions_merge"] += 1
+                    staged[vname] = self._stage_merge(vb, view2, table_of)
+                    epoch_ops.append(("main", vname))
+                else:
+                    staged[vname] = view2
             if vb.vertex_table == table_name:
                 # vertex inserts change the id index: compact (rebuild) now
-                self.compact_view(vname)
+                staged[vname] = self._stage_rebuild(vname, vb, table_of)
+                ev["compactions_full"] += 1
+                epoch_ops.append(("main", vname))
+
+        self._commit(
+            tables={table_name: t2}, views=staged, events=ev,
+            epoch_ops=tuple(epoch_ops),
+        )
+        self._update_stats_incremental(table_name, prev_epoch, enc_rows)
         return np.asarray(slots)
 
     def _update_stats_incremental(self, table_name, prev_epoch, enc_rows):
@@ -393,19 +468,32 @@ class GRFusion:
         self.events["stats_incremental"] += 1
 
     def delete_where(self, table_name: str, predicate: X.Expr):
-        """Tombstone deletes; views see them via validity-mask gathers."""
+        """Tombstone deletes; views see them via validity-mask gathers.
+        Staged and committed atomically like ``insert``."""
         t = self.tables[table_name]
         mask = X.evaluate(
             predicate,
             lambda c: t.col(c),
             encode=lambda c, v: self.encode_value(table_name, c, v),
         )
-        self.tables[table_name] = t.delete(mask & t.valid)
-        self.epochs.bump(table_key(table_name))
+        t2 = t.delete(mask & t.valid)
+
+        def table_of(name: str) -> Table:
+            return t2 if name == table_name else self.tables[name]
+
+        staged: Dict[str, GraphView] = {}
+        ev: collections.Counter = collections.Counter()
+        epoch_ops: List[Tuple[str, str]] = []
         for vname, vb in self.views.items():
             if vb.vertex_table == table_name:
                 # keep referential integrity stats fresh (§3.3.1)
-                self.compact_view(vname)
+                staged[vname] = self._stage_rebuild(vname, vb, table_of)
+                ev["compactions_full"] += 1
+                epoch_ops.append(("main", vname))
+        self._commit(
+            tables={table_name: t2}, views=staged, events=ev,
+            epoch_ops=tuple(epoch_ops),
+        )
 
     def update_where(self, table_name: str, predicate: X.Expr, col: str, value):
         t = self.tables[table_name]
@@ -414,14 +502,28 @@ class GRFusion:
             encode=lambda c, v: self.encode_value(table_name, c, v),
         )
         value = self.encode_value(table_name, col, value)
-        self.tables[table_name] = t.update(mask & t.valid, col, value)
-        self.epochs.bump(table_key(table_name))
+        t2 = t.update(mask & t.valid, col, value)
+
+        def table_of(name: str) -> Table:
+            return t2 if name == table_name else self.tables[name]
+
+        staged: Dict[str, GraphView] = {}
+        ev: collections.Counter = collections.Counter()
+        epoch_ops: List[Tuple[str, str]] = []
         # identifier updates must be reflected in the topology (§3.3.1)
         for vname, vb in self.views.items():
-            if table_name == vb.vertex_table and col == vb.v_id:
-                self.compact_view(vname)
-            if table_name == vb.edge_table and col in (vb.e_src, vb.e_dst):
-                self.compact_view(vname)
+            hits_id = table_name == vb.vertex_table and col == vb.v_id
+            hits_endpoint = table_name == vb.edge_table and col in (
+                vb.e_src, vb.e_dst
+            )
+            if hits_id or hits_endpoint:
+                staged[vname] = self._stage_rebuild(vname, vb, table_of)
+                ev["compactions_full"] += 1
+                epoch_ops.append(("main", vname))
+        self._commit(
+            tables={table_name: t2}, views=staged, events=ev,
+            epoch_ops=tuple(epoch_ops),
+        )
 
     def compact(self, name: str, *, full: bool = False):
         """Fold the delta buffer and tombstones into the view's main arrays.
@@ -432,34 +534,29 @@ class GRFusion:
         full rebuild (the property suite asserts it) at
         O(delta log delta + V + E) instead of O(E log E). ``full=True``
         forces the rebuild (``compact_view``). Either path bumps the
-        packing epoch exactly once.
+        packing epoch exactly once, and the new view is built off to the
+        side then swapped in one commit — a fault at any merge step
+        leaves the old view queryable.
         """
         if full:
             return self.compact_view(name)
         vb = self.views[name]
-        vb.view = merge_compact_view(
-            vb.view,
-            self.tables[vb.vertex_table],
-            self.tables[vb.edge_table],
-            v_id=vb.v_id, e_src=vb.e_src, e_dst=vb.e_dst,
-            directed=vb.directed,
+        new_view = self._stage_merge(vb, vb.view, lambda n: self.tables[n])
+        self._commit(
+            views={name: new_view}, events={"compactions_merge": 1},
+            epoch_ops=(("main", name),),
         )
-        self.events["compactions_merge"] += 1
-        self.traversal.bump_epoch(name)
 
     def compact_view(self, name: str):
         """Full rebuild compaction (vertex-set changes, id updates, row
-        reuse — every case the incremental merge's preconditions exclude)."""
+        reuse — every case the incremental merge's preconditions exclude).
+        Staged then committed like ``compact``."""
         vb = self.views[name]
-        vb.view = build_graph_view(
-            name,
-            self.tables[vb.vertex_table],
-            self.tables[vb.edge_table],
-            v_id=vb.v_id, e_src=vb.e_src, e_dst=vb.e_dst,
-            directed=vb.directed, delta_capacity=vb.delta_capacity,
+        new_view = self._stage_rebuild(name, vb, lambda n: self.tables[n])
+        self._commit(
+            views={name: new_view}, events={"compactions_full": 1},
+            epoch_ops=(("main", name),),
         )
-        self.events["compactions_full"] += 1
-        self.traversal.bump_epoch(name)
 
     # ---------------------------------------------- interpreted mask path
     # The executor evaluates all predicate masks through the plan's

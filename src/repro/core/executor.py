@@ -48,6 +48,11 @@ class QueryResult:
     count: int
     explain: List[str]
     overflow: bool = False
+    # set when a traversal in this query was answered by a failover
+    # backend (the name of the backend that answered) rather than the
+    # one the planner resolved — results are still bit-identical, the
+    # flag makes the degradation visible per query
+    degraded_backend: Optional[str] = None
 
     def rows(self) -> List[dict]:
         return [
@@ -72,6 +77,12 @@ class ExecContext:
     params: Dict[str, Any] = dfield(default_factory=dict)  # bound Param values
     explain: List[str] = dfield(default_factory=list)
     overflow: bool = False
+    degraded_backend: Optional[str] = None  # failover backend, if any
+
+    def note_degraded(self, backend: Optional[str]) -> None:
+        """Record a traversal failover (first one wins per execution)."""
+        if backend is not None and self.degraded_backend is None:
+            self.degraded_backend = backend
 
     def param(self, name):
         if name not in self.params:
@@ -498,6 +509,7 @@ class PathScanExec(ExecNode):
                 max_hops=min(spec.max_len, eng.bfs_max_hops),
                 backend=backend, graph=spec.graph,
             )
+            ctx.note_degraded(eng.traversal.consume_degraded())
             tc = jnp.clip(targets, 0, view.n_vertices - 1)
             d = jnp.take_along_axis(dist, tc[:, None], axis=1)[:, 0]
             # validity: the lane must have live anchors on BOTH ends, and the
@@ -529,6 +541,7 @@ class PathScanExec(ExecNode):
                 edge_mask_by_row=uniform_mask, vertex_mask=gvmask,
                 max_iters=64, backend=backend, graph=spec.graph,
             )
+            ctx.note_degraded(eng.traversal.consume_degraded())
             if targets is None and end_mask is not None and spec.end_anchor:
                 tpos = jnp.where(
                     jnp.any(end_mask), jnp.argmax(end_mask), -1
@@ -937,7 +950,8 @@ class ProjectExec(ExecNode):
                 arr = ctx.engine.decode_column(dec[0], dec[1], arr)
             final[k] = arr
         return QueryResult(
-            columns=final, count=n, explain=ctx.explain, overflow=ctx.overflow
+            columns=final, count=n, explain=ctx.explain, overflow=ctx.overflow,
+            degraded_backend=ctx.degraded_backend,
         )
 
 
@@ -961,6 +975,7 @@ class AggregateExec(ExecNode):
             return QueryResult(
                 columns=cols, count=1, explain=ctx.explain,
                 overflow=ctx.overflow or bool(ovf),
+                degraded_backend=ctx.degraded_backend,
             )
         combined = self.child.run(ctx)
         aggs = {}
@@ -977,7 +992,8 @@ class AggregateExec(ExecNode):
             elif op == "max":
                 aggs[name] = np.asarray(jnp.max(jnp.where(v, vals, -jnp.inf)))
         return QueryResult(
-            columns=aggs, count=1, explain=ctx.explain, overflow=ctx.overflow
+            columns=aggs, count=1, explain=ctx.explain, overflow=ctx.overflow,
+            degraded_backend=ctx.degraded_backend,
         )
 
 

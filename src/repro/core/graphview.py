@@ -49,6 +49,18 @@ import numpy as np
 from repro.core.index import IdIndex
 from repro.core.struct import pytree, field, static_field
 from repro.core.table import Table
+from repro.robust import faults
+
+# Fault-injection seams (tests/robust crash-point sweep). Both compaction
+# paths are pure functions of their table inputs, so a fault at ANY step
+# boundary aborts the whole build with the caller's old view untouched —
+# the engine's stage-then-commit mutation path turns that into atomicity.
+SITE_REBUILD = faults.register_site("compact.rebuild")
+SITE_MERGE_CLASSIFY = faults.register_site("compact.merge.classify")
+SITE_MERGE_COO = faults.register_site("compact.merge.coo_scatter")
+SITE_MERGE_CSR = faults.register_site("compact.merge.csr_merge")
+SITE_MERGE_CSC = faults.register_site("compact.merge.csc_merge")
+SITE_MERGE_FINALIZE = faults.register_site("compact.merge.finalize")
 
 
 @pytree
@@ -193,6 +205,7 @@ def build_graph_view(
     capacities, so this is jit-compatible and is also the delta-compaction
     path.
     """
+    faults.check(SITE_REBUILD)
     V = vertex_table.capacity
     Ecap = edge_table.capacity
 
@@ -294,6 +307,7 @@ def merge_compact_view(
     arrays were built, and no tombstoned edge row has been resurrected by
     an insert (``Table.used`` fresh-first allocation makes reuse rare).
     """
+    faults.check(SITE_MERGE_CLASSIFY)
     V = view.n_vertices
     Ecap = edge_table.capacity
     n_slots = view.n_slots
@@ -327,6 +341,7 @@ def merge_compact_view(
     sp, dp = sp[ok].astype(np.int32), dp[ok].astype(np.int32)
 
     # --- COO: scatter deads out and news in (both halves if undirected).
+    faults.check(SITE_MERGE_COO)
     coo_src_n, coo_dst_n, coo_eid_n = coo_src.copy(), coo_dst.copy(), coo_eid.copy()
     for half in range(1 if directed else 2):
         off = half * Ecap
@@ -382,15 +397,18 @@ def merge_compact_view(
         offsets = np.searchsorted(vtx_sorted, np.arange(V + 1, dtype=np.int64))
         return slot, eid, offsets.astype(np.int32)
 
+    faults.check(SITE_MERGE_CSR)
     out_slot, out_eid, out_offsets = _merge(
         coo_src_n, view.out_slot, view.out_eid, d_src
     )
+    faults.check(SITE_MERGE_CSC)
     in_slot, in_eid, in_offsets = _merge(
         coo_dst_n, view.in_slot, view.in_eid, d_dst
     )
     out_dst = coo_dst_n[out_slot]
     in_src = coo_src_n[in_slot]
 
+    faults.check(SITE_MERGE_FINALIZE)
     # Stats: same jnp expressions as the rebuild for bitwise equality.
     out_offsets = jnp.asarray(out_offsets)
     in_offsets = jnp.asarray(in_offsets)

@@ -94,9 +94,33 @@ from repro.core.compiled import EpochRegistry, pack_key
 from repro.core.graphview import GraphView
 from repro.kernels.frontier import shard as FS
 from repro.kernels.frontier.ops import bfs_pallas, pack_edges_by_dst
+from repro.robust import faults
 
 BACKENDS = ("xla_coo", "pallas_frontier", "reference", "sharded")
 _INF = jnp.float32(jnp.inf)
+
+# Graceful degradation (GRAPHITE's strategy-failover contract): when a
+# backend attempt raises — an injected fault, a device error, a kernel
+# bug — the query falls over along this chain instead of failing. Every
+# backend is bit-identical by construction, so a degraded query returns
+# the same answer, just slower; the ``degraded_backend`` flag on
+# QueryResult and the failover event counters make the degradation
+# visible instead of silent. ``reference`` is the floor: pure numpy,
+# no XLA, no Pallas — if it fails too, the error propagates.
+FAILOVER_CHAIN = {
+    "sharded": ("xla_coo", "reference"),
+    "pallas_frontier": ("xla_coo", "reference"),
+    "xla_coo": ("reference",),
+    "reference": (),
+}
+
+# fault-injection seams (repro.robust.faults; compiled to a no-op global
+# read when no plan is active)
+SITE_DISPATCH = {
+    b: faults.register_site(f"traversal.dispatch.{b}") for b in BACKENDS
+}
+SITE_PACK_BUILD = faults.register_site("traversal.pack_build")
+SITE_SHARD_PACK_BUILD = faults.register_site("traversal.shard_pack_build")
 
 # Default auto-policy threshold: edge-stream slots above which a
 # multi-device mesh shards the sweep instead of running single-device.
@@ -221,10 +245,22 @@ class TraversalEngine:
         epochs: Optional[EpochRegistry] = None,
         n_devices: Optional[int] = None,
         shard_min_slots: int = SHARD_MIN_SLOTS,
+        backend_retries: int = 1,
+        events: Optional[collections.Counter] = None,
     ):
         if default_backend != "auto" and default_backend not in BACKENDS:
             raise ValueError(f"unknown backend {default_backend!r}")
         self.default_backend = default_backend
+        # failover policy: each backend in the chain gets 1 + this many
+        # attempts before the query falls over to the next backend
+        self.backend_retries = max(int(backend_retries), 0)
+        # engine-wide event counter (shared with the owning GRFusion so
+        # degraded queries are visible in `engine.events`); standalone
+        # engines get their own
+        self.events = events if events is not None else collections.Counter()
+        # per-call degraded flag: set by _dispatch when a fallback backend
+        # answered, read (and cleared) by the executor via consume_degraded
+        self._last_degraded: Optional[str] = None
         # sharded-backend knobs: mesh width (None = every visible device,
         # read per query so forced host-platform device counts apply) and
         # the auto policy's stream-size threshold for picking `sharded`
@@ -330,6 +366,7 @@ class TraversalEngine:
             self._stats["pack_hits"] += 1
             self._packs.move_to_end(key)
             return hit
+        faults.check(SITE_PACK_BUILD)
         src, dst, eid = view.coo_src, view.coo_dst, view.coo_eid
         ps, pstream, ldst = pack_edges_by_dst(
             np.asarray(src), np.asarray(dst), view.n_vertices,
@@ -373,6 +410,7 @@ class TraversalEngine:
             self._stats["shard_pack_hits"] += 1
             self._shard_packs.move_to_end(key)
             return hit
+        faults.check(SITE_SHARD_PACK_BUILD)
         src, dst, eid = view.coo_src, view.coo_dst, view.coo_eid
         ssrc, sdst, seid = FS.partition_edges_by_dst_block(
             np.asarray(src), np.asarray(dst), np.asarray(eid),
@@ -450,6 +488,54 @@ class TraversalEngine:
                 return "pallas_frontier"
         return "xla_coo"
 
+    # --------------------------------------------------------- failover
+    def consume_degraded(self) -> Optional[str]:
+        """The backend a fallback answered the LAST bfs/sssp call with
+        (None when the resolved backend answered itself). Reading clears
+        the flag — the executor threads it onto ``QueryResult`` per query."""
+        d, self._last_degraded = self._last_degraded, None
+        return d
+
+    def _dispatch(self, resolved: str, run_one):
+        """Run one traversal with bounded retry + backend failover.
+
+        ``run_one(backend)`` executes the traversal on one specific
+        backend. Each backend in ``(resolved,) + FAILOVER_CHAIN[resolved]``
+        gets ``1 + backend_retries`` attempts; any exception (injected
+        fault, device error, kernel bug) counts as a failed attempt and is
+        recorded, never swallowed silently. Results are bit-identical
+        across backends by construction, so a degraded query returns the
+        same answer — ``_last_degraded`` and the event counters make the
+        degradation observable. Only a failure of the whole chain
+        (reference included) propagates.
+        """
+        self._last_degraded = None
+        chain = (resolved,) + FAILOVER_CHAIN.get(resolved, ())
+        last_err: Optional[BaseException] = None
+        for i, b in enumerate(chain):
+            for attempt in range(1 + self.backend_retries):
+                try:
+                    out = run_one(b)
+                except Exception as e:  # noqa: BLE001 - degrade, don't die
+                    last_err = e
+                    self._stats["backend_faults"] += 1
+                    self._stats[f"backend_fault_{b}"] += 1
+                    self.events["traversal_faults"] += 1
+                    if attempt < self.backend_retries:
+                        self._stats["backend_retries"] += 1
+                        self.events["traversal_retries"] += 1
+                    continue
+                self._stats[f"backend_{b}"] += 1
+                if i > 0:
+                    self._last_degraded = b
+                    self._stats["backend_failovers"] += 1
+                    self._stats[f"failover_{resolved}_to_{b}"] += 1
+                    self.events["traversal_failovers"] += 1
+                return out
+            self.events["traversal_backend_exhausted"] += 1
+        assert last_err is not None
+        raise last_err
+
     # ------------------------------------------------------------------ BFS
     def bfs(
         self,
@@ -464,13 +550,28 @@ class TraversalEngine:
         graph: Optional[str] = None,
     ) -> jnp.ndarray:
         """Hop distances int32 [S, V]; -1 unreachable. Bit-identical across
-        backends (targets only bound the sweep, identically everywhere)."""
+        backends (targets only bound the sweep, identically everywhere);
+        a failing backend degrades along ``FAILOVER_CHAIN`` rather than
+        failing the query (see ``_dispatch``)."""
         source_pos = jnp.asarray(source_pos, jnp.int32)
         b = self.resolve_backend(
             view, requested=backend, n_sources=int(source_pos.shape[0])
         )
         self._stats["queries_bfs"] += 1
-        self._stats[f"backend_{b}"] += 1
+        return self._dispatch(
+            b,
+            lambda bk: self._bfs_backend(
+                bk, view, source_pos, edge_mask_by_row, vertex_mask,
+                target_pos, max_hops=max_hops, graph=graph,
+            ),
+        )
+
+    def _bfs_backend(
+        self, b, view, source_pos, edge_mask_by_row, vertex_mask,
+        target_pos, *, max_hops, graph,
+    ) -> jnp.ndarray:
+        """One BFS on one specific backend (the failover unit)."""
+        faults.check(SITE_DISPATCH[b])
         if b == "xla_coo":
             return _bfs_xla(
                 view, source_pos, edge_mask_by_row, vertex_mask,
@@ -567,14 +668,28 @@ class TraversalEngine:
     ):
         """(dist f32 [S, V], parent_slot int32 [S, V]). Parents always come
         from the canonical blocked-COO parent pass, so equal distances give
-        equal parents regardless of backend."""
+        equal parents regardless of backend; a failing backend degrades
+        along ``FAILOVER_CHAIN`` rather than failing the query."""
         source_pos = jnp.asarray(source_pos, jnp.int32)
         weight_by_row = jnp.asarray(weight_by_row, jnp.float32)
         b = self.resolve_backend(
             view, requested=backend, n_sources=int(source_pos.shape[0])
         )
         self._stats["queries_sssp"] += 1
-        self._stats[f"backend_{b}"] += 1
+        return self._dispatch(
+            b,
+            lambda bk: self._sssp_backend(
+                bk, view, source_pos, weight_by_row, edge_mask_by_row,
+                vertex_mask, max_iters=max_iters, graph=graph,
+            ),
+        )
+
+    def _sssp_backend(
+        self, b, view, source_pos, weight_by_row, edge_mask_by_row,
+        vertex_mask, *, max_iters, graph,
+    ):
+        """One SSSP on one specific backend (the failover unit)."""
+        faults.check(SITE_DISPATCH[b])
         if b == "xla_coo":
             return _sssp_xla(
                 view, source_pos, weight_by_row, edge_mask_by_row,

@@ -39,9 +39,11 @@ from typing import Any, Dict, List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.robust import faults
+
 __all__ = [
     "SourceSpec", "IngestSchema", "IngestReport", "IngestPipeline",
-    "normalize",
+    "DeadLetter", "normalize",
 ]
 
 # engine.events keys the report tracks (see GRFusion.__init__)
@@ -52,7 +54,14 @@ _EVENT_KEYS = (
     "threshold_compactions",
     "delta_overflow_compactions",
     "stats_incremental",
+    "ingest_chunk_faults",
+    "ingest_quarantined",
 )
+
+# fault-injection seam: one check per insert attempt (chunk first, then —
+# after a chunk fails — once per row of the per-row quarantine fallback),
+# so a scheduled hit index maps deterministically onto one attempt
+SITE_CHUNK_DECODE = faults.register_site("ingest.chunk_decode")
 
 
 @dataclass(frozen=True)
@@ -93,17 +102,37 @@ class IngestSchema:
         object.__setattr__(self, "edges", tuple(self.edges))
 
 
+@dataclass(frozen=True)
+class DeadLetter:
+    """One quarantined row: which row of which source failed, why, and
+    its field values — enough context to repair and re-submit it."""
+
+    table: str
+    row: int  # absolute row index within the source payload
+    error: str
+    data: Dict[str, Any] = dfield(default_factory=dict)
+
+
 @dataclass
 class IngestReport:
-    """What a load did, assembled from ``engine.events`` diffs."""
+    """What a load did, assembled from ``engine.events`` diffs.
+
+    ``rows`` counts rows actually landed; rows that failed even the
+    per-row retry are in ``dead_letters`` instead (the load continues —
+    one malformed row no longer aborts a bulk load)."""
 
     rows: Dict[str, int] = dfield(default_factory=dict)  # table -> rows
     chunks: int = 0
     events: Dict[str, int] = dfield(default_factory=dict)
+    dead_letters: List[DeadLetter] = dfield(default_factory=list)
 
     @property
     def total_rows(self) -> int:
         return sum(self.rows.values())
+
+    @property
+    def quarantined_rows(self) -> int:
+        return len(self.dead_letters)
 
     @property
     def compactions(self) -> int:
@@ -115,7 +144,7 @@ class IngestReport:
 # --------------------------------------------------------------------------
 # payload normalization
 # --------------------------------------------------------------------------
-def _coerce_scalar(s: str):
+def _coerce_scalar(s: str):  # lint: allow-swallowed-fault
     try:
         return int(s)
     except ValueError:
@@ -183,6 +212,40 @@ class IngestPipeline:
         self.chunk_rows = chunk_rows
 
     # ------------------------------------------------------------- loading
+    def _insert_batch(self, table: str, cols: Dict[str, np.ndarray]) -> None:
+        """One guarded ``engine.insert``. The fault seam sits here so the
+        chunk path and the per-row quarantine retry share one hit counter
+        (``ingest.chunk_decode@0`` fails the chunk, ``@1`` the first row
+        of its fallback, and so on — deterministic chaos schedules)."""
+        faults.check(SITE_CHUNK_DECODE)
+        self.engine.insert(table, cols)
+
+    def _quarantine_rows(
+        self, table: str, data: Dict[str, np.ndarray], lo: int, hi: int,
+        report: IngestReport,
+    ) -> int:
+        """Per-row fallback for a failed chunk: each row inserts alone
+        (``engine.insert`` is atomic, so a failing row leaves no partial
+        state); rows that still fail land in the dead-letter list with
+        their field values and the load continues. Returns rows landed."""
+        ok = 0
+        for r in range(lo, hi):
+            row = {k: v[r : r + 1] for k, v in data.items()}
+            try:
+                self._insert_batch(table, row)
+            except Exception as e:  # noqa: BLE001 - quarantine, don't abort
+                report.dead_letters.append(
+                    DeadLetter(
+                        table=table, row=r,
+                        error=f"{type(e).__name__}: {e}",
+                        data={k: np.asarray(v[r]).item() for k, v in data.items()},
+                    )
+                )
+                self.engine.events["ingest_quarantined"] += 1
+            else:
+                ok += 1
+        return ok
+
     def _load_one(self, spec: SourceSpec, payload, report: IngestReport):
         data = spec.project(normalize(payload))
         if not data:
@@ -191,13 +254,21 @@ class IngestPipeline:
         if len(set(ns.values())) > 1:
             raise ValueError(f"ragged ingest source for {spec.table}: {ns}")
         n = next(iter(ns.values()))
+        loaded = 0
         for lo in range(0, n, self.chunk_rows):
             hi = min(lo + self.chunk_rows, n)
-            self.engine.insert(
-                spec.table, {k: v[lo:hi] for k, v in data.items()}
-            )
+            chunk = {k: v[lo:hi] for k, v in data.items()}
+            try:
+                self._insert_batch(spec.table, chunk)
+            except Exception:  # noqa: BLE001 - isolate to rows, don't abort
+                # a bad chunk degrades to per-row inserts: good rows land,
+                # bad rows dead-letter with context, the load continues
+                self.engine.events["ingest_chunk_faults"] += 1
+                loaded += self._quarantine_rows(spec.table, data, lo, hi, report)
+            else:
+                loaded += hi - lo
             report.chunks += 1
-        report.rows[spec.table] = report.rows.get(spec.table, 0) + n
+        report.rows[spec.table] = report.rows.get(spec.table, 0) + loaded
 
     def run(self, payloads: Mapping[str, Any]) -> IngestReport:
         """Load ``payloads`` (spec table name -> payload), vertices first.

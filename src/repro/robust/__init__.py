@@ -1,0 +1,19 @@
+"""Robustness layer: deterministic fault injection + graceful degradation.
+
+``repro.robust.faults`` is the seeded fault-injection harness the chaos
+suite (``tests/robust``, ``-m chaos``) drives; the graceful-degradation
+paths it proves live where the risk is — backend failover in
+``TraversalEngine``, atomic staging in ``GRFusion.insert``/``compact``,
+the hardened ``QueryLoop`` serving loop, and ingest quarantine in
+``data/ingest.py``.
+"""
+from repro.robust.faults import (  # noqa: F401
+    FaultPlan,
+    InjectedFault,
+    TransientFault,
+    fault_scope,
+    check,
+    active_plan,
+    known_sites,
+    register_site,
+)

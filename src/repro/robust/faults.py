@@ -1,0 +1,254 @@
+"""Deterministic fault injection for the engine's risk seams.
+
+VoltDB-class guarantees (the paper's premise: graphs live *inside* a
+transactional engine) mean a failed graph operator must never corrupt
+engine state or take the database down. You cannot prove that contract
+with happy-path tests — you prove it by *making* every risky step fail,
+deterministically, and asserting the engine degrades instead of
+corrupting. This module is that harness.
+
+Design constraints, in order:
+
+  1. **Zero cost disabled.** Every injection site compiles to one module
+     global read + ``is None`` test (``check``). No allocation, no dict
+     lookup, no tracing impact — sites live in host-side driver code,
+     never inside a jitted function, so they add zero plan builds and
+     zero recompiles (``tests/robust/test_fault_overhead.py`` pins this).
+  2. **Deterministic.** A :class:`FaultPlan` is either an explicit
+     schedule (``{site: [hit indices]}``) or a seeded Bernoulli stream
+     (splitmix-style hash of ``(seed, site, hit)``), so a failing chaos
+     scenario replays bit-for-bit from its seed.
+  3. **Registered sites.** Modules declare their seams at import time via
+     :func:`register_site`; the crash-point sweep enumerates
+     :func:`known_sites` so a new risk seam automatically joins the sweep
+     (and a typo'd site name in a plan fails fast in ``fault_scope``).
+
+Activation is scoped: the ``fault_scope`` context manager installs a plan
+for the dynamic extent of a ``with`` block (nesting restores the outer
+plan), and the ``REPRO_FAULTS`` environment variable installs a process-
+wide plan at import for subprocess chaos runs — syntax
+``site@0+2,other@*,flaky@1:t`` (hit indices joined by ``+``, ``*`` for
+every hit, ``:t`` marks the fault transient/retryable).
+
+Fault taxonomy: :class:`InjectedFault` is fatal-unless-degraded (backend
+failover treats any exception as a failed attempt); the
+:class:`TransientFault` subclass marks faults the serving loop may
+retry-with-backoff rather than fail the ticket.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import os
+import zlib
+from typing import Dict, Iterable, Optional, Set, Tuple, Union
+
+__all__ = [
+    "InjectedFault",
+    "TransientFault",
+    "FaultPlan",
+    "fault_scope",
+    "check",
+    "active_plan",
+    "known_sites",
+    "register_site",
+]
+
+
+class InjectedFault(RuntimeError):
+    """An injected failure (fatal unless a degradation path absorbs it)."""
+
+    def __init__(self, site: str, hit: int, transient: bool = False):
+        self.site = site
+        self.hit = hit
+        self.transient = transient
+        kind = "transient" if transient else "fatal"
+        super().__init__(f"injected {kind} fault at {site!r} (hit {hit})")
+
+
+class TransientFault(InjectedFault):
+    """An injected failure the serving loop is allowed to retry."""
+
+    def __init__(self, site: str, hit: int):
+        super().__init__(site, hit, transient=True)
+
+
+# --------------------------------------------------------------------------
+# site registry
+# --------------------------------------------------------------------------
+_SITES: Set[str] = set()
+
+
+def register_site(name: str) -> str:
+    """Declare one injection site (module-import time). Returns ``name``
+    so call sites read ``SITE_X = faults.register_site("...")``."""
+    _SITES.add(name)
+    return name
+
+
+def known_sites(prefix: str = "") -> Tuple[str, ...]:
+    """Every registered site (sorted), optionally filtered by prefix —
+    the crash-point sweep's work list."""
+    return tuple(sorted(s for s in _SITES if s.startswith(prefix)))
+
+
+# --------------------------------------------------------------------------
+# plans
+# --------------------------------------------------------------------------
+_Sched = Union[str, Iterable[int]]
+
+
+class FaultPlan:
+    """One deterministic fault schedule.
+
+    ``schedule`` maps site name -> hit indices at which the site fires
+    (0-based count of times the site has been *reached* under this plan),
+    or the string ``"*"`` to fire on every hit. ``transient`` names the
+    sites whose faults raise :class:`TransientFault` (retryable) instead
+    of the fatal :class:`InjectedFault`.
+
+    Observability: ``hits`` counts every visit per site, ``fired`` every
+    raise — chaos tests assert the fault they scheduled actually landed
+    (a sweep that silently stops reaching a site is itself a regression).
+    """
+
+    def __init__(
+        self,
+        schedule: Optional[Dict[str, _Sched]] = None,
+        *,
+        transient: Iterable[str] = (),
+        seed: Optional[int] = None,
+        p: float = 0.0,
+        seeded_sites: Optional[Iterable[str]] = None,
+    ):
+        self.schedule: Dict[str, Union[str, frozenset]] = {}
+        for site, spec in (schedule or {}).items():
+            self.schedule[site] = (
+                "*" if spec == "*" else frozenset(int(i) for i in spec)
+            )
+        self.transient = frozenset(transient)
+        self.seed = seed
+        self.p = float(p)
+        self.seeded_sites = (
+            None if seeded_sites is None else frozenset(seeded_sites)
+        )
+        self.hits: collections.Counter = collections.Counter()
+        self.fired: collections.Counter = collections.Counter()
+
+    @classmethod
+    def at(cls, site: str, *hits: int, transient: bool = False) -> "FaultPlan":
+        """One-site convenience: fire ``site`` at the given hit indices
+        (default: the first hit)."""
+        return cls(
+            {site: hits or (0,)},
+            transient=(site,) if transient else (),
+        )
+
+    @classmethod
+    def seeded(
+        cls, seed: int, p: float, *, sites: Optional[Iterable[str]] = None,
+        transient: Iterable[str] = (),
+    ) -> "FaultPlan":
+        """Seeded Bernoulli plan: each visit to each site fires with
+        probability ``p``, decided by a pure hash of (seed, site, hit) —
+        the same seed replays the same fault sequence, any process."""
+        return cls(transient=transient, seed=seed, p=p, seeded_sites=sites)
+
+    # ---------------------------------------------------------------- core
+    def _seeded_fire(self, site: str, hit: int) -> bool:
+        if self.seed is None or self.p <= 0.0:
+            return False
+        if self.seeded_sites is not None and site not in self.seeded_sites:
+            return False
+        h = zlib.crc32(f"{self.seed}|{site}|{hit}".encode())
+        return (h % 1_000_000) < self.p * 1_000_000
+
+    def visit(self, site: str) -> None:
+        """Record one arrival at ``site``; raise if this hit is scheduled."""
+        hit = self.hits[site]
+        self.hits[site] = hit + 1
+        spec = self.schedule.get(site)
+        fire = (
+            spec == "*" or (spec is not None and hit in spec)
+            or self._seeded_fire(site, hit)
+        )
+        if not fire:
+            return
+        self.fired[site] += 1
+        if site in self.transient:
+            raise TransientFault(site, hit)
+        raise InjectedFault(site, hit)
+
+    def validate(self) -> None:
+        """Fail fast on schedule entries naming no registered site — a
+        chaos test with a typo'd site name would otherwise silently pass."""
+        unknown = sorted(
+            set(self.schedule) - _SITES
+        ) + sorted((self.seeded_sites or set()) - _SITES)
+        if unknown:
+            raise ValueError(
+                f"fault plan names unregistered site(s) {unknown}; "
+                f"known sites: {known_sites()}"
+            )
+
+
+# --------------------------------------------------------------------------
+# activation
+# --------------------------------------------------------------------------
+def _parse_env(spec: str) -> Optional[FaultPlan]:
+    """``REPRO_FAULTS=site@0+2,other@*,flaky@1:t`` -> FaultPlan."""
+    spec = spec.strip()
+    if not spec:
+        return None
+    schedule: Dict[str, _Sched] = {}
+    transient = []
+    for entry in spec.split(","):
+        entry = entry.strip()
+        if not entry:
+            continue
+        if entry.endswith(":t"):
+            entry = entry[: -len(":t")]
+            is_t = True
+        else:
+            is_t = False
+        site, _, hits = entry.partition("@")
+        if not site or not hits:
+            raise ValueError(
+                f"bad REPRO_FAULTS entry {entry!r} (want site@hits, e.g. "
+                "pack@0+2 or pack@*)"
+            )
+        schedule[site] = "*" if hits == "*" else [int(h) for h in hits.split("+")]
+        if is_t:
+            transient.append(site)
+    return FaultPlan(schedule, transient=transient)
+
+
+_ACTIVE: Optional[FaultPlan] = _parse_env(os.environ.get("REPRO_FAULTS", ""))
+
+
+def active_plan() -> Optional[FaultPlan]:
+    return _ACTIVE
+
+
+def check(site: str) -> None:
+    """THE injection point. Disabled cost: one global read + None test."""
+    plan = _ACTIVE
+    if plan is None:
+        return
+    plan.visit(site)
+
+
+@contextlib.contextmanager
+def fault_scope(plan: Optional[FaultPlan], *, validate: bool = True):
+    """Install ``plan`` for the dynamic extent of the block (nesting
+    restores the outer plan; ``None`` disables injection inside the
+    block). Validates schedule sites against the registry by default."""
+    global _ACTIVE
+    if plan is not None and validate:
+        plan.validate()
+    prev = _ACTIVE
+    _ACTIVE = plan
+    try:
+        yield plan
+    finally:
+        _ACTIVE = prev

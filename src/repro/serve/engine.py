@@ -180,6 +180,7 @@ class QueryServer:
             try:
                 out.append(p.execute())
             except Exception as e:  # noqa: BLE001 - reported to the caller
+                self.engine.events["serving_plan_failures"] += 1
                 out.append(e)
         return out
 

@@ -1,0 +1,130 @@
+"""Disabled injector = zero cost on the warm path (the faults.py promise).
+
+Every seam is compiled in unconditionally — this suite runs with NO plan
+active, so ``check`` is one module-global read + ``is None`` test. The
+sites live in host-side driver code (cache-miss branches, dispatch,
+staging), never inside a jitted function, so with injection disabled a
+warm prepared plan must execute purely from caches: zero plan builds,
+zero mask builds, zero recompiles, zero pack rebuilds. The stored-ratio
+gate on BENCH_plan_overhead.json (``scripts/ci.sh bench``) enforces the
+wall-clock side of the same promise.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import GRFusion
+from repro.core.query import P, Query, param
+from repro.core.traversal_engine import SITE_DISPATCH
+from repro.robust import faults
+
+pytestmark = pytest.mark.chaos
+
+
+@pytest.fixture
+def eng():
+    e = GRFusion()
+    e.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=8)
+    e.create_table("Rel", {
+        "relId": np.arange(1, 5),
+        "uId1": np.array([1, 2, 3, 4]),
+        "uId2": np.array([3, 3, 4, 5]),
+    }, capacity=16)
+    e.create_graph_view("G", vertexes="Users", edges="Rel",
+                        v_id="uId", e_src="uId1", e_dst="uId2",
+                        directed=False)
+    return e
+
+
+def friends_query():
+    PS = P("PS")
+    return (Query().from_paths("G", "PS")
+            .where((PS.start.id == param("src")) & (PS.length == 1))
+            .select(e=PS.end.id))
+
+
+def test_no_plan_is_active_in_the_normal_process():
+    assert faults.active_plan() is None
+    # the seams exist (compiled in) ...
+    assert len(faults.known_sites()) >= 14
+    # ... and a disabled check is a pure no-op for every one of them
+    for s in faults.known_sites():
+        faults.check(s)
+
+
+def test_warm_prepared_plan_runs_purely_from_caches(eng):
+    """With sites compiled in but disabled, steady-state serving moves
+    ONLY *_hits counters — the acceptance bar the plan-overhead benchmark
+    gate measures in wall-clock."""
+    clk_now = [0.0]
+    loop = eng.serving_loop(lane_width=2, flush_deadline_us=10.0,
+                            clock=lambda: clk_now[0])
+    binds = [1, 3]
+    for _ in range(2):  # warm: plan once, masks once per bind value
+        for s in binds:
+            loop.submit(friends_query(), src=s)
+        clk_now[0] += 11.0
+        loop.pump()
+    prepared = eng.plan_cache.get_or_prepare(
+        eng.query_shape(friends_query()),
+        lambda: pytest.fail("warm shape must already be cached"),
+    )
+    rt = prepared.runtime
+    before = dict(rt.stats)
+    plan_builds = eng.plan_cache.stats["plan_builds"]
+    tickets = []
+    for _ in range(4):  # steady state
+        for s in binds:
+            tickets.append(loop.submit(friends_query(), src=s))
+        clk_now[0] += 11.0
+        loop.pump()
+    assert all(t.status == "done" for t in tickets)
+    delta = {k: v - before.get(k, 0) for k, v in rt.stats.items()
+             if v != before.get(k, 0)}
+    assert delta and all(k.endswith("hits") for k in delta), delta
+    assert eng.plan_cache.stats["plan_builds"] == plan_builds
+    assert loop.stats["failed"] == 0 and loop.stats["transient_faults"] == 0
+
+
+def test_warm_traversal_rebuilds_no_packs(eng):
+    """The pack-build seams sit on the cache-miss branch only: warm
+    sweeps with injection disabled build each pack exactly once."""
+    te = eng.traversal
+    view = eng.views["G"].view
+    valid = eng.tables["Rel"].valid
+    srcs = jnp.asarray(np.array([1, 2], np.int32))
+    for _ in range(4):
+        for b in ("pallas_frontier", "sharded", "xla_coo"):
+            te.bfs(view, srcs, edge_mask_by_row=valid, max_hops=8,
+                   backend=b, graph="G")
+    assert te.stats["pack_builds"] == 1
+    assert te.stats["shard_pack_builds"] == 1
+    # no failover, no retries, no faults on the healthy path
+    assert te.stats["backend_faults"] == 0
+    assert te.stats["backend_failovers"] == 0
+    assert eng.events["traversal_faults"] == 0
+
+
+def test_dispatch_seams_cover_every_backend_without_firing(eng):
+    """Sanity for the zero-cost claim: the dispatch seam for each backend
+    is on the query path (a scoped plan sees hits) yet a disabled run of
+    the same queries fires nothing and counts nothing."""
+    view = eng.views["G"].view
+    valid = eng.tables["Rel"].valid
+    srcs = jnp.asarray(np.array([1], np.int32))
+
+    def sweep():
+        for b, site in SITE_DISPATCH.items():
+            te = eng.traversal
+            te.bfs(view, srcs, edge_mask_by_row=valid, max_hops=4,
+                   backend=b, graph="G")
+
+    with faults.fault_scope(faults.FaultPlan({})) as plan:
+        sweep()
+    assert sum(plan.hits[s] for s in SITE_DISPATCH.values()) == len(SITE_DISPATCH)
+    assert sum(plan.fired.values()) == 0
+    sweep()  # disabled: nothing to count, nothing fired
+    assert faults.active_plan() is None

@@ -1,0 +1,164 @@
+"""FaultPlan mechanics: schedules, seeded streams, env syntax, scoping.
+
+These are the harness's own unit tests — everything else in tests/robust
+trusts that a scheduled fault fires exactly where its plan says it does,
+replays bit-for-bit from a seed, and disappears completely when the scope
+exits. Unregistered site names in scheduling tests deliberately use
+``validate=False`` so this file never pollutes the registry the
+crash-point sweep enumerates.
+"""
+import pytest
+
+# importing the engine + ingest front end registers every production seam
+import repro.core.engine  # noqa: F401
+import repro.data.ingest  # noqa: F401
+from repro.robust import faults
+from repro.robust.faults import FaultPlan, InjectedFault, TransientFault
+
+pytestmark = pytest.mark.chaos
+
+
+def test_registry_contains_every_documented_seam():
+    sites = faults.known_sites()
+    for s in (
+        "traversal.dispatch.xla_coo",
+        "traversal.dispatch.pallas_frontier",
+        "traversal.dispatch.reference",
+        "traversal.dispatch.sharded",
+        "traversal.pack_build",
+        "traversal.shard_pack_build",
+        "compact.rebuild",
+        "compact.merge.classify",
+        "compact.merge.coo_scatter",
+        "compact.merge.csr_merge",
+        "compact.merge.csc_merge",
+        "compact.merge.finalize",
+        "compiled.mask_build",
+        "ingest.chunk_decode",
+    ):
+        assert s in sites, s
+    # prefix filter is the sweep's work-list selector
+    assert all(s.startswith("compact.merge.")
+               for s in faults.known_sites("compact.merge."))
+    assert len(faults.known_sites("compact.merge.")) == 5
+
+
+def test_at_fires_on_first_hit_only_by_default():
+    plan = FaultPlan.at("fake.site")
+    with faults.fault_scope(plan, validate=False):
+        with pytest.raises(InjectedFault) as ei:
+            faults.check("fake.site")
+        assert ei.value.site == "fake.site" and ei.value.hit == 0
+        assert not ei.value.transient
+        for _ in range(5):  # later hits pass
+            faults.check("fake.site")
+    assert plan.hits["fake.site"] == 6
+    assert plan.fired["fake.site"] == 1
+
+
+def test_explicit_hit_indices_and_star():
+    plan = FaultPlan({"a": (1, 3), "b": "*"})
+    with faults.fault_scope(plan, validate=False):
+        outcomes = []
+        for _ in range(5):
+            try:
+                faults.check("a")
+                outcomes.append(False)
+            except InjectedFault:
+                outcomes.append(True)
+        assert outcomes == [False, True, False, True, False]
+        for _ in range(3):
+            with pytest.raises(InjectedFault):
+                faults.check("b")
+    assert plan.fired["a"] == 2 and plan.fired["b"] == 3
+
+
+def test_transient_sites_raise_the_retryable_subclass():
+    plan = FaultPlan.at("flaky", transient=True)
+    with faults.fault_scope(plan, validate=False):
+        with pytest.raises(TransientFault) as ei:
+            faults.check("flaky")
+    assert ei.value.transient
+    assert isinstance(ei.value, InjectedFault)  # failover still catches it
+
+
+def _seeded_fire_sequence(seed, p, site, n=300):
+    plan = FaultPlan.seeded(seed, p)
+    seq = []
+    with faults.fault_scope(plan, validate=False):
+        for _ in range(n):
+            try:
+                faults.check(site)
+                seq.append(False)
+            except InjectedFault:
+                seq.append(True)
+    return seq
+
+
+def test_seeded_plan_replays_bit_for_bit():
+    a = _seeded_fire_sequence(7, 0.25, "s")
+    b = _seeded_fire_sequence(7, 0.25, "s")
+    assert a == b and any(a) and not all(a)
+    assert _seeded_fire_sequence(8, 0.25, "s") != a  # seed matters
+    assert _seeded_fire_sequence(7, 0.25, "other") != a  # site matters
+
+
+def test_seeded_sites_restriction():
+    plan = FaultPlan.seeded(3, 1.0, sites=("only.this",))
+    with faults.fault_scope(plan, validate=False):
+        for _ in range(10):
+            faults.check("something.else")  # never fires
+        with pytest.raises(InjectedFault):
+            faults.check("only.this")
+
+
+def test_validate_rejects_unregistered_sites():
+    plan = FaultPlan.at("no.such.site")
+    with pytest.raises(ValueError, match="unregistered"):
+        plan.validate()
+    with pytest.raises(ValueError, match="no.such.site"):
+        with faults.fault_scope(plan):
+            pass
+    # a real site validates clean
+    FaultPlan.at("compiled.mask_build").validate()
+    with pytest.raises(ValueError):
+        FaultPlan.seeded(1, 0.5, sites=("no.such.site",)).validate()
+
+
+def test_fault_scope_nests_and_restores():
+    assert faults.active_plan() is None
+    outer = FaultPlan({"o": "*"})
+    inner = FaultPlan({"i": "*"})
+    with faults.fault_scope(outer, validate=False):
+        assert faults.active_plan() is outer
+        with faults.fault_scope(inner, validate=False):
+            assert faults.active_plan() is inner
+            faults.check("o")  # outer plan inactive inside the inner scope
+            with pytest.raises(InjectedFault):
+                faults.check("i")
+        assert faults.active_plan() is outer
+        with faults.fault_scope(None):  # None disables injection entirely
+            faults.check("o")
+        with pytest.raises(InjectedFault):
+            faults.check("o")
+    assert faults.active_plan() is None
+    faults.check("o")  # no plan active: check is a no-op
+
+
+def test_scope_restores_on_exception():
+    with pytest.raises(RuntimeError, match="boom"):
+        with faults.fault_scope(FaultPlan({"x": "*"}), validate=False):
+            raise RuntimeError("boom")
+    assert faults.active_plan() is None
+
+
+def test_env_syntax_round_trip():
+    plan = faults._parse_env("a@0+2, b@*, c@1:t")
+    assert plan.schedule["a"] == frozenset((0, 2))
+    assert plan.schedule["b"] == "*"
+    assert plan.schedule["c"] == frozenset((1,))
+    assert plan.transient == frozenset(("c",))
+    assert faults._parse_env("") is None
+    assert faults._parse_env("   ") is None
+    with pytest.raises(ValueError, match="bad REPRO_FAULTS entry"):
+        faults._parse_env("missing-at-sign")

@@ -1,0 +1,256 @@
+"""Hardened QueryLoop: deadlines, transient retry, circuit breaker.
+
+Same deterministic setup as tests/test_serving_loop.py (injected virtual
+clock, real execution on a shared engine); the failure modes come from
+the fault harness — ``compiled.mask_build`` marked transient stands in
+for any retryable hiccup, an unbound parameter for a poison shape that
+fails every time.
+"""
+import numpy as np
+import pytest
+
+from repro.core.engine import GRFusion
+from repro.core.query import P, Query, param
+from repro.robust import faults
+from repro.robust.faults import FaultPlan
+from repro.serve.loop import QueryLoop
+
+pytestmark = pytest.mark.chaos
+
+MASK_SITE = "compiled.mask_build"
+
+
+class Clock:
+    def __init__(self):
+        self.now = 0.0
+
+    def __call__(self):
+        return self.now
+
+    def advance(self, us):
+        self.now += us
+
+
+@pytest.fixture
+def eng():
+    e = GRFusion()
+    e.create_table("Users", {
+        "uId": np.array([1, 2, 3, 4, 5]),
+        "Job": np.array(["Lawyer", "Doctor", "Lawyer", "Eng", "Eng"]),
+    }, capacity=8)
+    e.create_table("Rel", {
+        "relId": np.arange(1, 5),
+        "uId1": np.array([1, 2, 3, 4]),
+        "uId2": np.array([3, 3, 4, 5]),
+    }, capacity=16)
+    e.create_graph_view("G", vertexes="Users", edges="Rel",
+                        v_id="uId", e_src="uId1", e_dst="uId2",
+                        directed=False)
+    return e
+
+
+def friends_query():
+    PS = P("PS")
+    return (Query().from_paths("G", "PS")
+            .where((PS.start.id == param("src")) & (PS.length == 1))
+            .select(e=PS.end.id))
+
+
+def two_hop_query():
+    PS = P("PS")
+    return (Query().from_paths("G", "PS")
+            .where((PS.start.id == param("src")) & (PS.length == 2))
+            .select(e=PS.end.id))
+
+
+def _mirrored(loop, *keys):
+    for k in keys:
+        assert loop.stats[k] == loop.engine.events[f"serving_{k}"], k
+
+
+# ------------------------------------------------------------- deadlines
+def test_expired_ticket_times_out_without_executing(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=8, flush_deadline_us=50.0, clock=clk)
+    late = loop.submit(friends_query(), deadline_us=40.0, src=3)
+    ok = loop.submit(friends_query(), src=1)
+    clk.advance(51.0)  # bucket due; `late`'s client budget already blown
+    done = loop.pump()
+    assert {t.tid for t in done} == {late.tid, ok.tid}
+    assert late.status == "timed_out" and late.result is None
+    assert ok.status == "done"
+    assert loop.pending == 0
+    assert loop.stats["timed_out"] == 1
+    assert loop.stats["executed"] == 1  # the lane was NOT spent on `late`
+    _mirrored(loop, "timed_out")
+
+
+def test_deadline_inside_budget_executes(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=8, flush_deadline_us=50.0, clock=clk)
+    t = loop.submit(friends_query(), deadline_us=500.0, src=3)
+    clk.advance(51.0)
+    loop.pump()
+    assert t.status == "done" and loop.stats["timed_out"] == 0
+
+
+# -------------------------------------------------------- transient retry
+def test_transient_fault_retries_with_backoff_then_succeeds(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=4, flush_deadline_us=10.0,
+                     max_retries=2, retry_backoff_us=100.0, clock=clk)
+    t = loop.submit(friends_query(), src=3)
+    clk.advance(11.0)
+    plan = FaultPlan.at(MASK_SITE, 0, transient=True)
+    with faults.fault_scope(plan):
+        assert loop.pump() == []  # transient: re-queued, not failed
+    assert t.status == "queued" and t.retries == 1 and loop.pending == 1
+    assert t.not_before_us == pytest.approx(clk.now + 100.0)
+    # before the backoff elapses the ticket is deferred, even when the
+    # bucket is otherwise due
+    clk.advance(50.0)
+    assert loop.pump() == []
+    clk.advance(60.0)  # past the backoff: second attempt runs clean
+    done = loop.pump()
+    assert [d.tid for d in done] == [t.tid]
+    assert t.status == "done"
+    assert sorted(int(x) for x in
+                  np.asarray(t.result.columns["e"])[: t.result.count]) == [1, 2, 4]
+    assert loop.stats["transient_faults"] == 1
+    assert loop.stats["retries"] == 1
+    _mirrored(loop, "transient_faults", "retries")
+
+
+def test_transient_retry_budget_exhausts_to_failed(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=4, flush_deadline_us=10.0,
+                     max_retries=1, retry_backoff_us=100.0, clock=clk)
+    t = loop.submit(friends_query(), src=3)
+    plan = FaultPlan({MASK_SITE: "*"}, transient=(MASK_SITE,))
+    with faults.fault_scope(plan):
+        clk.advance(11.0)
+        loop.pump()  # attempt 1: transient -> retry scheduled
+        assert t.status == "queued" and t.retries == 1
+        clk.advance(101.0)
+        loop.pump()  # attempt 2: transient again, budget spent
+    assert t.status == "failed" and loop.pending == 0
+    assert isinstance(t.error, faults.TransientFault)
+    assert loop.stats["transient_faults"] == 2
+    assert loop.stats["retries"] == 1
+    assert loop.stats["failed"] == 1
+    _mirrored(loop, "transient_faults", "retries", "failed")
+
+
+def test_backoff_grows_exponentially(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=4, flush_deadline_us=10.0,
+                     max_retries=3, retry_backoff_us=100.0, clock=clk)
+    t = loop.submit(friends_query(), src=3)
+    plan = FaultPlan({MASK_SITE: "*"}, transient=(MASK_SITE,))
+    gaps = []
+    with faults.fault_scope(plan):
+        for _ in range(3):
+            clk.advance(10_000.0)
+            loop.pump()
+            assert t.status == "queued"
+            gaps.append(t.not_before_us - clk.now)
+    assert gaps == [pytest.approx(100.0), pytest.approx(200.0),
+                    pytest.approx(400.0)]
+
+
+# -------------------------------------------------------- circuit breaker
+def test_breaker_opens_sheds_skips_probes_reopens_and_closes(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=2, flush_deadline_us=10.0,
+                     max_retries=0, breaker_threshold=2,
+                     breaker_window_us=1000.0, clock=clk)
+    # three tickets of one poison shape (src never bound -> ValueError);
+    # lane_width=2 means the first pump fails two of them, tripping the
+    # breaker with the third still queued
+    t1 = loop.submit(friends_query())
+    t2 = loop.submit(friends_query())
+    t3 = loop.submit(friends_query())
+    clk.advance(11.0)
+    loop.pump()
+    assert (t1.status, t2.status, t3.status) == ("failed", "failed", "queued")
+    assert loop.stats["breaker_opened"] == 1
+    opened_at = clk.now
+
+    # open: admission sheds, with a hint that covers the breaker window
+    shed = loop.submit(friends_query(), src=3)
+    assert shed.status == "rejected"
+    assert loop.stats["breaker_shed"] == 1
+    assert shed.retry_after_us >= (opened_at + 1000.0) - clk.now
+    # a healthy shape is untouched by the poison shape's breaker
+    good = loop.submit(two_hop_query(), src=1)
+    clk.advance(11.0)
+    loop.pump()
+    assert good.status == "done"
+    assert t3.status == "queued"  # poison bucket skipped, not burned
+    assert loop.stats["breaker_skipped"] >= 1
+
+    # past the window: exactly one half-open probe; it fails -> reopen
+    # with the window doubled
+    clk.now = opened_at + 1001.0
+    loop.pump()
+    assert t3.status == "failed"
+    assert loop.stats["breaker_reopened"] == 1
+    reopened_at = clk.now
+
+    # the doubled window really is ~2000us: still shedding at +1500
+    clk.now = reopened_at + 1500.0
+    assert loop.submit(friends_query(), src=3).status == "rejected"
+
+    # past the doubled window: a *bound* ticket of the same shape probes
+    # and succeeds -> breaker closes, admission flows again
+    clk.now = reopened_at + 2001.0
+    probe = loop.submit(friends_query(), src=3)
+    assert probe.status == "queued"
+    clk.advance(11.0)
+    loop.pump()
+    assert probe.status == "done"
+    assert loop.stats["breaker_closed"] == 1
+    after = loop.submit(friends_query(), src=1)
+    assert after.status == "queued"
+    clk.advance(11.0)
+    loop.pump()
+    assert after.status == "done"
+    _mirrored(loop, "breaker_opened", "breaker_shed", "breaker_skipped",
+              "breaker_reopened", "breaker_closed", "failed")
+
+
+def test_success_resets_the_failure_streak(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=1, flush_deadline_us=10.0,
+                     max_retries=0, breaker_threshold=3, clock=clk)
+    # fail, fail, success, fail, fail: streak never reaches 3
+    for params in ({}, {}, {"src": 3}, {}, {}):
+        loop.submit(friends_query(), **params)
+        clk.advance(11.0)
+        loop.pump()
+    assert loop.stats["failed"] == 4
+    assert loop.stats["breaker_opened"] == 0
+
+
+def test_drain_terminates_under_an_open_breaker(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=2, flush_deadline_us=10.0,
+                     max_retries=0, breaker_threshold=1,
+                     breaker_window_us=1e9, clock=clk)
+    tickets = [loop.submit(friends_query()) for _ in range(5)]
+    clk.advance(11.0)
+    out = loop.drain()  # force-mode probes; must not spin forever
+    assert loop.pending == 0
+    assert {t.tid for t in tickets} == {t.tid for t in out}
+    assert all(t.status == "failed" for t in tickets)
+
+
+def test_retry_after_reflects_queue_when_breaker_closed(eng):
+    clk = Clock()
+    loop = QueryLoop(eng, lane_width=8, flush_deadline_us=500.0,
+                     max_pending=1, clock=clk)
+    loop.submit(friends_query(), src=1)
+    over = loop.submit(friends_query(), src=2)
+    assert over.status == "rejected"
+    # queue-full hint: bucket flush due + one more deadline, no breaker term
+    assert over.retry_after_us == pytest.approx(500.0 + 500.0)

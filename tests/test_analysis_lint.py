@@ -118,6 +118,16 @@ def sharded_sssp_dist(dist, max_iters):
 '''
 
 
+SWALLOWED_FAULT = '''
+class IngestPipeline:
+    def _load_one(self, spec, payload):
+        try:
+            self.engine.insert(spec.table, payload)
+        except Exception:
+            pass
+'''
+
+
 @pytest.mark.parametrize("src, rule", [
     (HOST_SYNC_NP_ASARRAY, "host-sync"),
     (HOST_SYNC_ITEM, "host-sync"),
@@ -128,13 +138,15 @@ def sharded_sssp_dist(dist, max_iters):
     (PUMP_ALLOC, "pump-alloc"),
     (CROSS_SHARD_DEVICE_GET, "cross-shard-host-transfer"),
     (CROSS_SHARD_NP_ASARRAY, "cross-shard-host-transfer"),
+    (SWALLOWED_FAULT, "swallowed-fault"),
 ], ids=["np-asarray", "item", "float", "bool-jnp", "loop-direct",
         "loop-via-name", "pump-alloc", "shard-device-get",
-        "shard-np-asarray"])
+        "shard-np-asarray", "swallowed-fault"])
 def test_bad_snippet_flags_only_its_rule(src, rule):
     path = ("serve/loop.py" if rule == "pump-alloc"
             else "kernels/frontier/shard.py"
             if rule == "cross-shard-host-transfer"
+            else "data/ingest.py" if rule == "swallowed-fault"
             else "core/executor.py")
     findings = lint_source(src, path)
     assert findings, f"expected a {rule} finding"
@@ -252,6 +264,52 @@ def test_finding_str_is_path_line_rule():
     f = Finding(rule="host-sync", path="core/executor.py", line=12,
                 qualname="FooExec.run", message="m")
     assert str(f) == "core/executor.py:12: [host-sync] FooExec.run: m"
+
+
+def test_swallowed_fault_rule_scoping_and_recording_forms():
+    """The rule audits except handlers only in fault modules, and every
+    sanctioned way of keeping an absorbed fault observable passes: a
+    counter bump, a counting/recording helper, a dead-letter append, a
+    re-raise — and the pragma for the rare deliberate swallow."""
+    # identical handler outside the registered fault modules: clean
+    assert lint_source(SWALLOWED_FAULT, "core/stats.py") == []
+    # every recording form passes
+    for body in (
+        "self.engine.events['ingest_chunk_faults'] += 1",
+        "self.stats['failed'] += 1",
+        "self._count('failed')",
+        "self.record_failure(spec)",
+        "self.quarantine(spec)",
+        "report.dead_letters.append(spec)",
+        "raise",
+    ):
+        src = SWALLOWED_FAULT.replace("pass", body)
+        assert lint_source(src, "data/ingest.py") == [], body
+    # the pragma suppresses, on the except line or the enclosing def
+    on_line = SWALLOWED_FAULT.replace(
+        "except Exception:",
+        "except Exception:  # lint: allow-swallowed-fault",
+    )
+    assert lint_source(on_line, "data/ingest.py") == []
+    on_def = SWALLOWED_FAULT.replace(
+        "def _load_one(self, spec, payload):",
+        "def _load_one(self, spec, payload):  # lint: allow-swallowed-fault",
+    )
+    assert lint_source(on_def, "data/ingest.py") == []
+    # a log-and-drop handler does NOT count as recording
+    logged = SWALLOWED_FAULT.replace("pass", "print('insert failed')")
+    assert _rules(lint_source(logged, "data/ingest.py")) == {"swallowed-fault"}
+
+
+def test_swallowed_fault_fires_in_every_registered_fault_module():
+    """Mutation check: the same swallowing handler is flagged in each
+    module whose except blocks the rule audits (serving loop, executor,
+    traversal engine, shard kernels, ingest)."""
+    from repro.analysis.lint import FAULT_MODULES
+
+    for path in sorted(FAULT_MODULES):
+        findings = lint_source(SWALLOWED_FAULT, path)
+        assert _rules(findings) >= {"swallowed-fault"}, path
 
 
 # --------------------------------------------------------------- repo gates
